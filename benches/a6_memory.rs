@@ -1,0 +1,100 @@
+//! Appendix A.6: optimizer memory consumption.
+//!
+//! Three evidence layers:
+//!  1. analytic accounting over the paper's exact layer inventories
+//!     (Jorge = 1.5x Adam without grafting, 2x with, in the blocked
+//!     square limit);
+//!  2. measured `state_floats()` of the live native mirrors;
+//!  3. the manifest's state tensors for the HLO artifacts (what the
+//!     coordinator actually allocates).
+
+use jorge::benchrun::{artifacts_dir, engine};
+use jorge::benchx::Table;
+use jorge::models;
+use jorge::optim::memory::{ratio_vs_adam, state_bytes, OptKind};
+use jorge::optim::{build, Hyper};
+use jorge::runtime::Role;
+
+fn analytic() {
+    let mut table = Table::new(
+        "A6a (analytic): optimizer state on paper inventories (512-blocked)",
+        &["network", "sgd", "adamw", "jorge", "jorge+graft", "shampoo+graft"],
+    );
+    for net_name in ["resnet18", "resnet50", "deeplabv3", "maskrcnn"] {
+        let net = models::by_name(net_name).unwrap().blocked(512);
+        let mb = |o, g| format!("{:.0} MB", state_bytes(&net, o, g) as f64 / 1e6);
+        table.row(&[
+            net_name.into(),
+            mb(OptKind::Sgd, false),
+            mb(OptKind::AdamW, false),
+            format!("{} ({:.2}x)", mb(OptKind::Jorge, false), ratio_vs_adam(&net, OptKind::Jorge, false)),
+            format!("{} ({:.2}x)", mb(OptKind::Jorge, true), ratio_vs_adam(&net, OptKind::Jorge, true)),
+            format!("{} ({:.2}x)", mb(OptKind::Shampoo, true), ratio_vs_adam(&net, OptKind::Shampoo, true)),
+        ]);
+    }
+    table.print();
+    println!("Paper claim: Jorge = 1.5x Adam (3 states/param), 2x with grafting (4 states/param).");
+}
+
+fn measured_mirrors() {
+    let mut table = Table::new(
+        "A6b (measured): live native-mirror state floats, resnet18 inventory",
+        &["optimizer", "state floats", "vs adam"],
+    );
+    let net = models::resnet18().blocked(512);
+    let shapes: Vec<(usize, usize)> = net.layers.iter().map(|l| (l.m, l.n)).collect();
+    let adam_floats = build("adamw", &shapes, Hyper::default()).unwrap().state_floats();
+    for opt in ["sgd", "adamw", "jorge", "shampoo"] {
+        let o = build(opt, &shapes, Hyper::default()).unwrap();
+        table.row(&[
+            opt.into(),
+            o.state_floats().to_string(),
+            format!("{:.2}x", o.state_floats() as f64 / adam_floats as f64),
+        ]);
+    }
+    table.print();
+}
+
+fn manifest_states() -> anyhow::Result<()> {
+    if !std::path::Path::new(&artifacts_dir()).join("manifest.json").exists() {
+        println!("(skipping A6c: no artifacts)");
+        return Ok(());
+    }
+    let engine = engine()?;
+    let mut table = Table::new(
+        "A6c (artifacts): state floats per train artifact (what the coordinator allocates)",
+        &["model", "optimizer", "param floats", "state floats", "state/param"],
+    );
+    for model in ["mlp", "cnn", "segnet", "transformer"] {
+        for opt in ["sgd", "adamw", "jorge", "shampoo"] {
+            let art = engine.manifest.artifact(&format!("train_{model}_{opt}")).unwrap();
+            let p: usize = art
+                .inputs
+                .iter()
+                .filter(|i| i.role == Role::Param)
+                .map(|i| i.elements())
+                .sum();
+            let s: usize = art
+                .inputs
+                .iter()
+                .filter(|i| i.role == Role::State)
+                .map(|i| i.elements())
+                .sum();
+            table.row(&[
+                model.into(),
+                opt.into(),
+                p.to_string(),
+                s.to_string(),
+                format!("{:.2}", s as f64 / p as f64),
+            ]);
+        }
+    }
+    table.print();
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    analytic();
+    measured_mirrors();
+    manifest_states()
+}

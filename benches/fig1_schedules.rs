@@ -1,0 +1,56 @@
+//! Figure 1: learning-rate schedules for Jorge — validation metric vs
+//! epoch for cosine/poly (the SGD defaults) vs step decay at 1/3 & 2/3.
+//!
+//! Left plot slot: synth-CIFAR CNN (ResNet-18/CIFAR-10 in the paper).
+//! Right plot slot: synth-seg (DeepLabv3/MS-COCO in the paper).
+//! Expected shape: the step-decay series dominates after the first decay.
+
+use jorge::benchrun::{base_config, engine, fast, run};
+use jorge::benchx::Table;
+use jorge::config::ScheduleKind;
+
+fn main() -> anyhow::Result<()> {
+    let engine = engine()?;
+    let models = if fast() { vec!["segnet"] } else { vec!["cnn", "segnet"] };
+    for model in models {
+        let mut series: Vec<(String, Vec<f64>)> = Vec::new();
+        for kind in [ScheduleKind::Cosine, ScheduleKind::Poly, ScheduleKind::Step] {
+            let mut cfg = base_config(model);
+            cfg.optimizer = "jorge".into();
+            cfg.weight_decay *= 10.0;
+            cfg.precond_every = 4;
+            cfg.schedule = kind;
+            cfg.decay_at = vec![1.0 / 3.0, 2.0 / 3.0];
+            cfg.seed = 42;
+            let r = run(cfg, engine.clone())?;
+            series.push((
+                kind.name().to_string(),
+                r.epochs.iter().map(|e| e.val_metric).collect(),
+            ));
+        }
+        let mut table = Table::new(
+            &format!("Fig 1 ({model}): Jorge validation metric vs epoch by schedule"),
+            &["epoch", "cosine", "poly", "step"],
+        );
+        let n = series[0].1.len();
+        for e in 0..n {
+            table.row(&[
+                e.to_string(),
+                format!("{:.4}", series[0].1.get(e).copied().unwrap_or(f64::NAN)),
+                format!("{:.4}", series[1].1.get(e).copied().unwrap_or(f64::NAN)),
+                format!("{:.4}", series[2].1.get(e).copied().unwrap_or(f64::NAN)),
+            ]);
+        }
+        table.print();
+        let best = |i: usize| {
+            series[i].1.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        };
+        println!(
+            "best: cosine {:.4}  poly {:.4}  step {:.4}  (expected: step >= others)",
+            best(0),
+            best(1),
+            best(2)
+        );
+    }
+    Ok(())
+}

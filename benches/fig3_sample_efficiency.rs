@@ -1,0 +1,64 @@
+//! Figure 3: validation metric vs epochs for the small-batch benchmarks
+//! (SGD / AdamW / Jorge / Shampoo), mean over seeds.
+//!
+//! Expected shape: Jorge (and Shampoo) reach the target in ~25-40% fewer
+//! epochs than SGD; AdamW trails or misses the target.
+
+use jorge::benchrun::{base_config, engine, fast, n_seeds, run, target_for, tune_for};
+use jorge::benchx::Table;
+
+fn main() -> anyhow::Result<()> {
+    let engine = engine()?;
+    let models = if fast() { vec!["mlp"] } else { vec!["mlp", "cnn", "segnet"] };
+    let opts = ["sgd", "adamw", "jorge", "shampoo"];
+    let seeds: Vec<u64> = (0..n_seeds() as u64).map(|s| 300 + s).collect();
+
+    for model in models {
+        // mean trajectory per optimizer
+        let mut series: Vec<(String, Vec<f64>)> = Vec::new();
+        for opt in opts {
+            let mut acc: Vec<f64> = Vec::new();
+            for &seed in &seeds {
+                let mut cfg = base_config(model);
+                tune_for(&mut cfg, opt);
+                cfg.seed = seed;
+                let r = run(cfg, engine.clone())?;
+                for (e, rec) in r.epochs.iter().enumerate() {
+                    if acc.len() <= e {
+                        acc.push(0.0);
+                    }
+                    acc[e] += rec.val_metric / seeds.len() as f64;
+                }
+            }
+            series.push((opt.to_string(), acc));
+        }
+
+        let mut table = Table::new(
+            &format!("Fig 3 ({model}): mean val metric vs epoch ({} seeds)", seeds.len()),
+            &["epoch", "sgd", "adamw", "jorge", "shampoo"],
+        );
+        let n = series.iter().map(|s| s.1.len()).max().unwrap_or(0);
+        for e in 0..n {
+            let mut cells = vec![e.to_string()];
+            for (_, s) in &series {
+                cells.push(s.get(e).map(|v| format!("{v:.4}")).unwrap_or_default());
+            }
+            table.row(&cells);
+        }
+        table.print();
+
+        let target = target_for(model);
+        let to_target: Vec<String> = series
+            .iter()
+            .map(|(name, s)| {
+                match s.iter().position(|&v| v >= target) {
+                    Some(e) => format!("{name}: {}", e + 1),
+                    None => format!("{name}: —"),
+                }
+            })
+            .collect();
+        println!("epochs to target {target:.2}:  {}", to_target.join("   "));
+    }
+    println!("\nShape check: jorge/shampoo need fewer epochs than sgd; jorge ≈ shampoo.");
+    Ok(())
+}

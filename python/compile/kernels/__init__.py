@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels for the Jorge optimizer (build-time only)."""
+
+from .matmul import matmul, gram_left, gram_right, DEFAULT_BLOCK
+from .elementwise import frobenius_sq, poly_m
+from .jorge_update import jorge_update, jorge_beta2
+from .precondition import precondition
+
+__all__ = [
+    "matmul",
+    "gram_left",
+    "gram_right",
+    "frobenius_sq",
+    "poly_m",
+    "jorge_update",
+    "jorge_beta2",
+    "precondition",
+    "DEFAULT_BLOCK",
+]

@@ -1,0 +1,107 @@
+"""Elementwise / reduction Pallas kernels used by the Jorge update.
+
+Two small kernels accompany the GEMMs of ``jorge_update``:
+
+* ``frobenius_sq`` — tiled reduction computing ``sum(X * X)``; the square
+  root of this (plus the +1 shift) drives the *dynamic beta2* rule of
+  Appendix A.1 (``beta2 = ||X|| / (||X|| + 1)``).
+* ``poly_m`` — builds the truncated binomial-series factor
+  ``M = I - a*X + b*X^2`` of Algorithm 2 line 6 in one pass, synthesising
+  the identity from the global tile coordinates instead of materialising
+  an ``I`` matrix in HBM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pad2, _pick_block, _round_up, DEFAULT_BLOCK
+
+
+def _frob_kernel(x_ref, o_ref):
+    # Sequential grid: first block initialises the (1,1) accumulator, every
+    # block adds its partial sum. On TPU this is the standard scalar
+    # cross-block reduction pattern (accumulator stays in SMEM/VMEM).
+    @pl.when((pl.program_id(0) == 0) & (pl.program_id(1) == 0))
+    def _init():
+        o_ref[0, 0] = jnp.zeros((), o_ref.dtype)
+
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[0, 0] += jnp.sum(x * x).astype(o_ref.dtype)
+
+
+def frobenius_sq(
+    x: jnp.ndarray, *, block: int = DEFAULT_BLOCK
+) -> jnp.ndarray:
+    """``sum(x*x)`` over a 2-D array as a tiled Pallas reduction (f32 scalar)."""
+    if x.ndim != 2:
+        raise ValueError(f"frobenius_sq expects 2-D input, got {x.shape}")
+    m, n = x.shape
+    bm = _pick_block(m, block)
+    bn = _pick_block(n, block)
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    x_p = _pad2(x, mp, np_)  # zero padding does not change the sum
+
+    out = pl.pallas_call(
+        _frob_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=True,
+    )(x_p)
+    return out[0, 0]
+
+
+def _poly_m_kernel(x_ref, x2_ref, ab_ref, o_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    bm, bn = o_ref.shape
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0) + i * bm
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) + j * bn
+    eye = (rows == cols).astype(o_ref.dtype)
+    a = ab_ref[0, 0]
+    b = ab_ref[0, 1]
+    o_ref[...] = eye - a * x_ref[...] + b * x2_ref[...]
+
+
+def poly_m(
+    x: jnp.ndarray,
+    x2: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    block: int = DEFAULT_BLOCK,
+) -> jnp.ndarray:
+    """``I - a*x + b*x2`` for square ``x`` with scalars ``a``, ``b``.
+
+    This is the degree-2 truncation of the binomial series
+    ``(I + c X)^(-1/4)`` (Eq. 7/8 of the paper) with the dynamic-beta2
+    normalisation already folded into ``a`` and ``b`` (Eq. 11).
+    """
+    if x.shape != x2.shape or x.ndim != 2 or x.shape[0] != x.shape[1]:
+        raise ValueError(f"poly_m expects equal square inputs, got {x.shape}, {x2.shape}")
+    n = x.shape[0]
+    bn = _pick_block(n, block)
+    np_ = _round_up(n, bn)
+    x_p = _pad2(x, np_, np_)
+    x2_p = _pad2(x2, np_, np_)
+    ab = jnp.stack([jnp.asarray(a, x.dtype), jnp.asarray(b, x.dtype)]).reshape(1, 2)
+
+    out = pl.pallas_call(
+        _poly_m_kernel,
+        grid=(np_ // bn, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bn, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, np_), x.dtype),
+        interpret=True,
+    )(x_p, x2_p, ab)
+    if np_ != n:
+        out = out[:n, :n]
+    return out

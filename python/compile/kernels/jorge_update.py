@@ -1,0 +1,78 @@
+"""The Jorge preconditioner update — the paper's compute hot-spot.
+
+Implements Algorithm 2 lines 5-9 with the dynamic-beta2 rule of
+Appendix A.1 folded in (Eq. 11):
+
+    X      = P^4 S                    (P = previous inverse-root estimate,
+                                       S = G G^T or G^T G gram statistic)
+    nx     = ||X||_F
+    beta2  = nx / (nx + 1)            (guarantees ||(1-b2)/b2 * X|| < 1)
+    P_new  = ((nx+1)/nx)^(1/4) * P @ (I - X/(4 nx) + 5 X^2/(32 nx^2))
+
+The chain is five GEMMs (P^2, P^4, X = P^4 S, X^2, P @ M) plus one tiled
+reduction and one elementwise pass — exactly the "only matmuls and
+additions" property the paper exploits. The trailing scalar
+``((nx+1)/nx)^(1/4)`` is fused into the final GEMM epilogue.
+
+Zero-gradient guard: when ``S`` is (numerically) zero the update is the
+identity transformation on ``P`` (Shampoo's EMA with beta2 -> 1), which we
+implement with a ``jnp.where`` on the scalar norm rather than a branch so
+the lowered HLO stays branch-free.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .elementwise import frobenius_sq, poly_m
+from .matmul import DEFAULT_BLOCK, matmul
+
+# Below this Frobenius norm the statistic is treated as zero and the
+# preconditioner is left untouched.
+NORM_FLOOR = 1e-30
+
+
+def jorge_update(
+    p: jnp.ndarray,
+    s: jnp.ndarray,
+    *,
+    block: int = DEFAULT_BLOCK,
+) -> jnp.ndarray:
+    """One Jorge inverse-root preconditioner update (Eq. 11).
+
+    Args:
+      p: current inverse-fourth-root estimate ``\\hat L_{t-1}`` (n x n).
+      s: gram statistic ``G G^T`` (left) or ``G^T G`` (right), (n x n).
+      block: GEMM tile edge.
+
+    Returns:
+      ``\\hat L_t`` (n x n), same dtype as ``p``.
+    """
+    if p.ndim != 2 or p.shape[0] != p.shape[1] or p.shape != s.shape:
+        raise ValueError(f"jorge_update expects square equal shapes, got {p.shape}, {s.shape}")
+
+    kw = dict(block_m=block, block_n=block, block_k=block)
+    p2 = matmul(p, p, **kw)
+    p4 = matmul(p2, p2, **kw)
+    x = matmul(p4, s, **kw)
+
+    nx2 = frobenius_sq(x, block=block)
+    nx = jnp.sqrt(nx2)
+    safe = nx > NORM_FLOOR
+    nx_s = jnp.where(safe, nx, 1.0).astype(p.dtype)
+
+    a = 1.0 / (4.0 * nx_s)
+    b = 5.0 / (32.0 * nx_s * nx_s)
+    # beta2 = nx/(nx+1)  =>  beta2^(-1/4) = ((nx+1)/nx)^(1/4)
+    scale = jnp.power((nx_s + 1.0) / nx_s, 0.25)
+
+    x2 = matmul(x, x, **kw)
+    m = poly_m(x, x2, a, b, block=block)
+    p_new = matmul(p, m, scale=scale, **kw)
+
+    return jnp.where(safe, p_new, p)
+
+
+def jorge_beta2(nx: jnp.ndarray) -> jnp.ndarray:
+    """The dynamically adjusted beta2 for a statistic of Frobenius norm nx."""
+    return nx / (nx + 1.0)

@@ -1,0 +1,32 @@
+"""Gradient preconditioning: ``G~ = L^ @ G @ R^`` (Algorithm 2 line 11).
+
+Unlike Shampoo, the stored preconditioners *are already* the inverse fourth
+roots, so preconditioning is two plain GEMMs — no inverse anywhere on the
+step path. We associate ``(L^ G) R^`` left-to-right: for an (m x n) layer
+this costs ``m^2 n + m n^2`` MACs either way, but left-first keeps the
+intermediate at (m x n), i.e. the same footprint as the gradient.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .matmul import DEFAULT_BLOCK, matmul
+
+
+def precondition(
+    l_hat: jnp.ndarray,
+    g: jnp.ndarray,
+    r_hat: jnp.ndarray,
+    *,
+    block: int = DEFAULT_BLOCK,
+) -> jnp.ndarray:
+    """``l_hat @ g @ r_hat`` as two tiled Pallas GEMMs."""
+    m, n = g.shape
+    if l_hat.shape != (m, m) or r_hat.shape != (n, n):
+        raise ValueError(
+            f"precondition shape mismatch: L{l_hat.shape} G{g.shape} R{r_hat.shape}"
+        )
+    kw = dict(block_m=block, block_n=block, block_k=block)
+    lg = matmul(l_hat, g, **kw)
+    return matmul(lg, r_hat, **kw)

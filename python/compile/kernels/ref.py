@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for the Pallas kernels and the optimizer math.
+
+Everything here is *build-time only*: the eigendecomposition-based
+inverse-root is the gold reference the Pallas/Newton paths are validated
+against in pytest; nothing in this module is lowered into artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NORM_FLOOR = 1e-30
+
+
+# ---------------------------------------------------------------------------
+# Plain linear algebra oracles
+# ---------------------------------------------------------------------------
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(
+        jnp.promote_types(a.dtype, b.dtype)
+    )
+
+
+def frobenius_sq_ref(x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    return jnp.sum(xf * xf)
+
+
+def poly_m_ref(x: jnp.ndarray, x2: jnp.ndarray, a, b) -> jnp.ndarray:
+    n = x.shape[0]
+    return jnp.eye(n, dtype=x.dtype) - a * x + b * x2
+
+
+def inv_pth_root_eigh(a: jnp.ndarray, p: int, eps: float = 1e-12) -> jnp.ndarray:
+    """``A^{-1/p}`` for symmetric PSD ``A`` via eigendecomposition (oracle)."""
+    w, v = jnp.linalg.eigh(a)
+    w = jnp.clip(w, eps, None)
+    return (v * jnp.power(w, -1.0 / p)[None, :]) @ v.T
+
+
+# ---------------------------------------------------------------------------
+# Jorge update oracle (Eq. 11, degree-2 binomial truncation)
+# ---------------------------------------------------------------------------
+
+def jorge_update_ref(p: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """Reference Jorge preconditioner update, identical math to the kernel."""
+    p4 = p @ p @ p @ p
+    x = p4 @ s
+    nx = jnp.sqrt(frobenius_sq_ref(x))
+    safe = nx > NORM_FLOOR
+    nx_s = jnp.where(safe, nx, 1.0).astype(p.dtype)
+    n = p.shape[0]
+    m = (
+        jnp.eye(n, dtype=p.dtype)
+        - x / (4.0 * nx_s)
+        + 5.0 * (x @ x) / (32.0 * nx_s * nx_s)
+    )
+    scale = jnp.power((nx_s + 1.0) / nx_s, 0.25)
+    return jnp.where(safe, scale * (p @ m), p)
+
+
+def precondition_ref(l_hat, g, r_hat) -> jnp.ndarray:
+    return l_hat @ g @ r_hat
+
+
+# ---------------------------------------------------------------------------
+# Shampoo oracle: exact EMA statistics + eigh inverse roots
+# ---------------------------------------------------------------------------
+
+def shampoo_stats_update(stat: jnp.ndarray, gram: jnp.ndarray, beta2: float):
+    """``L_t = beta2 L_{t-1} + (1-beta2) G G^T`` (Alg. 1 lines 5-8)."""
+    return beta2 * stat + (1.0 - beta2) * gram
+
+
+def shampoo_precondition_ref(l_stat, g, r_stat, eps: float = 1e-12):
+    """``L^{-1/4} G R^{-1/4}`` with eigh roots — Shampoo's line 11 oracle."""
+    li = inv_pth_root_eigh(l_stat, 4, eps)
+    ri = inv_pth_root_eigh(r_stat, 4, eps)
+    return li @ g @ ri
+
+
+# ---------------------------------------------------------------------------
+# Exact one-step Jorge-vs-Shampoo correspondence oracle
+# ---------------------------------------------------------------------------
+
+def exact_inverse_root_update(p_hat: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """The *untruncated* counterpart of jorge_update_ref.
+
+    Computes ``(beta2 * p_hat^{-4} + (1 - beta2) s)^{-1/4}`` with the same
+    dynamic beta2 as Jorge but via an exact eigh root; the kernel's result
+    should approach this as the statistic norm grows (series terms decay
+    as ~1/nx).
+    """
+    p4 = p_hat @ p_hat @ p_hat @ p_hat
+    x = p4 @ s
+    nx = jnp.sqrt(frobenius_sq_ref(x))
+    beta2 = nx / (nx + 1.0)
+    l_exact = beta2 * jnp.linalg.inv(p4) + (1.0 - beta2) * s
+    return inv_pth_root_eigh(l_exact, 4)

@@ -1,0 +1,397 @@
+"""Layer-2 model definitions (build-time only).
+
+Four workloads mirror the paper's evaluation matrix at simulator scale
+(see DESIGN.md §3 for the substitution table):
+
+* ``mlp``         — gaussian-mixture feature classification; the
+                    "third benchmark" stand-in (Mask-RCNN slot).
+* ``cnn``         — 32x32x3 image classification; the ResNet-50/ImageNet
+                    stand-in.
+* ``segnet``      — 16x16 dense 8-class segmentation with a mean-IoU
+                    metric; the DeepLabv3/MS-COCO stand-in.
+* ``transformer`` — causal decoder LM; the end-to-end driver workload
+                    (examples/e2e_transformer.rs).
+
+Every parameter is a 2-D matrix (conv kernels collapsed to
+``(kh*kw*cin, cout)``, biases/gains to ``(n, 1)``) — the layout §3 of the
+paper prescribes for Shampoo-style two-sided preconditioning. Models
+reshape internally for their forward pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    """A workload: parameter inventory + loss/metric function."""
+
+    name: str
+    # (name, (m, n)) for every parameter, in flat order.
+    param_specs: Tuple[Tuple[str, Tuple[int, int]], ...]
+    # x/y example shapes + dtypes for the *train* batch.
+    x_shape: Tuple[int, ...]
+    x_dtype: str
+    y_shape: Tuple[int, ...]
+    y_dtype: str
+    eval_batch: int
+    # loss_and_metric(params, x, y) -> (scalar loss, scalar metric)
+    loss_and_metric: Callable[[List[Array], Array, Array], Tuple[Array, Array]]
+    init_params: Callable[[jax.Array], List[Array]]
+    # Human-readable metric name ("accuracy", "iou", "token_acc").
+    metric_name: str = "accuracy"
+
+    def batch_size(self) -> int:
+        return self.x_shape[0]
+
+    def param_count(self) -> int:
+        return sum(m * n for _, (m, n) in self.param_specs)
+
+
+def _he(key, shape):
+    fan_in = shape[0]
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def _xent(logits: Array, labels: Array) -> Array:
+    """Mean softmax cross-entropy; labels int32, last axis = classes."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logz, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def _accuracy(logits: Array, labels: Array) -> Array:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+MLP_IN, MLP_H1, MLP_H2, MLP_CLASSES = 128, 256, 128, 10
+
+
+def _mlp_specs():
+    return (
+        ("w1", (MLP_IN, MLP_H1)),
+        ("b1", (MLP_H1, 1)),
+        ("w2", (MLP_H1, MLP_H2)),
+        ("b2", (MLP_H2, 1)),
+        ("w3", (MLP_H2, MLP_CLASSES)),
+        ("b3", (MLP_CLASSES, 1)),
+    )
+
+
+def _mlp_init(key):
+    specs = _mlp_specs()
+    keys = jax.random.split(key, len(specs))
+    out = []
+    for k, (name, shape) in zip(keys, specs):
+        if name.startswith("b"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            out.append(_he(k, shape))
+    return out
+
+
+def _mlp_forward(params, x):
+    w1, b1, w2, b2, w3, b3 = params
+    h = jax.nn.relu(x @ w1 + b1[:, 0])
+    h = jax.nn.relu(h @ w2 + b2[:, 0])
+    return h @ w3 + b3[:, 0]
+
+
+def _mlp_loss(params, x, y):
+    logits = _mlp_forward(params, x)
+    return _xent(logits, y), _accuracy(logits, y)
+
+
+def make_mlp(batch: int = 64) -> ModelDef:
+    return ModelDef(
+        name="mlp",
+        param_specs=_mlp_specs(),
+        x_shape=(batch, MLP_IN),
+        x_dtype="f32",
+        y_shape=(batch,),
+        y_dtype="i32",
+        eval_batch=256,
+        loss_and_metric=_mlp_loss,
+        init_params=_mlp_init,
+        metric_name="accuracy",
+    )
+
+
+# ---------------------------------------------------------------------------
+# CNN (ResNet-50 stand-in, synth-CIFAR)
+# ---------------------------------------------------------------------------
+
+CNN_HW, CNN_CIN, CNN_CLASSES = 32, 3, 10
+# (kh, kw, cin, cout) per conv, collapsed to (kh*kw*cin, cout) for optim.
+_CNN_CONVS = (
+    ("conv1", (3, 3, 3, 8)),
+    ("conv2", (3, 3, 8, 16)),
+    ("conv3", (3, 3, 16, 32)),
+)
+
+
+def _cnn_specs():
+    specs = []
+    for name, (kh, kw, ci, co) in _CNN_CONVS:
+        specs.append((f"{name}.w", (kh * kw * ci, co)))
+        specs.append((f"{name}.b", (co, 1)))
+    specs.append(("fc1.w", (32 * 4 * 4, 64)))
+    specs.append(("fc1.b", (64, 1)))
+    specs.append(("fc2.w", (64, CNN_CLASSES)))
+    specs.append(("fc2.b", (CNN_CLASSES, 1)))
+    return tuple(specs)
+
+
+def _cnn_init(key):
+    specs = _cnn_specs()
+    keys = jax.random.split(key, len(specs))
+    out = []
+    for k, (name, shape) in zip(keys, specs):
+        if name.endswith(".b"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            out.append(_he(k, shape))
+    return out
+
+
+def _conv2d(x, w2d, kdims, bias):
+    kh, kw, ci, co = kdims
+    w = w2d.reshape(kh, kw, ci, co)
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + bias[:, 0]
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _cnn_forward(params, x):
+    i = 0
+    for _, kdims in _CNN_CONVS:
+        x = jax.nn.relu(_conv2d(x, params[i], kdims, params[i + 1]))
+        x = _maxpool2(x)
+        i += 2
+    b = x.shape[0]
+    h = x.reshape(b, -1)
+    h = jax.nn.relu(h @ params[i] + params[i + 1][:, 0])
+    return h @ params[i + 2] + params[i + 3][:, 0]
+
+
+def _cnn_loss(params, x, y):
+    logits = _cnn_forward(params, x)
+    return _xent(logits, y), _accuracy(logits, y)
+
+
+def make_cnn(batch: int = 32) -> ModelDef:
+    return ModelDef(
+        name="cnn",
+        param_specs=_cnn_specs(),
+        x_shape=(batch, CNN_HW, CNN_HW, CNN_CIN),
+        x_dtype="f32",
+        y_shape=(batch,),
+        y_dtype="i32",
+        eval_batch=128,
+        loss_and_metric=_cnn_loss,
+        init_params=_cnn_init,
+        metric_name="accuracy",
+    )
+
+
+# ---------------------------------------------------------------------------
+# SegNet (DeepLabv3 stand-in): dense 8-class prediction + mean IoU
+# ---------------------------------------------------------------------------
+
+SEG_HW, SEG_CIN, SEG_CLASSES = 16, 3, 8
+_SEG_CONVS = (
+    ("conv1", (3, 3, 3, 16)),
+    ("conv2", (3, 3, 16, 16)),
+    ("head", (1, 1, 16, SEG_CLASSES)),
+)
+
+
+def _seg_specs():
+    specs = []
+    for name, (kh, kw, ci, co) in _SEG_CONVS:
+        specs.append((f"{name}.w", (kh * kw * ci, co)))
+        specs.append((f"{name}.b", (co, 1)))
+    return tuple(specs)
+
+
+def _seg_init(key):
+    specs = _seg_specs()
+    keys = jax.random.split(key, len(specs))
+    out = []
+    for k, (name, shape) in zip(keys, specs):
+        if name.endswith(".b"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            out.append(_he(k, shape))
+    return out
+
+
+def _seg_forward(params, x):
+    i = 0
+    for idx, (_, kdims) in enumerate(_SEG_CONVS):
+        x = _conv2d(x, params[i], kdims, params[i + 1])
+        if idx < len(_SEG_CONVS) - 1:
+            x = jax.nn.relu(x)
+        i += 2
+    return x  # (B, H, W, C) logits
+
+
+def mean_iou(pred: Array, labels: Array, classes: int) -> Array:
+    """Mean IoU over classes with non-empty union (the paper's seg metric)."""
+    ious = []
+    weights = []
+    for c in range(classes):
+        pc = pred == c
+        lc = labels == c
+        inter = jnp.sum(jnp.logical_and(pc, lc).astype(jnp.float32))
+        union = jnp.sum(jnp.logical_or(pc, lc).astype(jnp.float32))
+        ious.append(inter / jnp.maximum(union, 1.0))
+        weights.append((union > 0).astype(jnp.float32))
+    ious = jnp.stack(ious)
+    weights = jnp.stack(weights)
+    return jnp.sum(ious * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+def _seg_loss(params, x, y):
+    logits = _seg_forward(params, x)
+    loss = _xent(logits, y)
+    pred = jnp.argmax(logits, axis=-1)
+    return loss, mean_iou(pred, y, SEG_CLASSES)
+
+
+def make_segnet(batch: int = 16) -> ModelDef:
+    return ModelDef(
+        name="segnet",
+        param_specs=_seg_specs(),
+        x_shape=(batch, SEG_HW, SEG_HW, SEG_CIN),
+        x_dtype="f32",
+        y_shape=(batch, SEG_HW, SEG_HW),
+        y_dtype="i32",
+        eval_batch=64,
+        loss_and_metric=_seg_loss,
+        init_params=_seg_init,
+        metric_name="iou",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Transformer LM (end-to-end driver workload)
+# ---------------------------------------------------------------------------
+
+TFM_VOCAB, TFM_D, TFM_LAYERS, TFM_HEADS, TFM_FF, TFM_SEQ = 512, 256, 4, 4, 1024, 64
+
+
+def _tfm_specs():
+    specs = [("embed", (TFM_VOCAB, TFM_D)), ("pos", (TFM_SEQ, TFM_D))]
+    for l in range(TFM_LAYERS):
+        specs += [
+            (f"l{l}.ln1_g", (TFM_D, 1)),
+            (f"l{l}.wq", (TFM_D, TFM_D)),
+            (f"l{l}.wk", (TFM_D, TFM_D)),
+            (f"l{l}.wv", (TFM_D, TFM_D)),
+            (f"l{l}.wo", (TFM_D, TFM_D)),
+            (f"l{l}.ln2_g", (TFM_D, 1)),
+            (f"l{l}.w1", (TFM_D, TFM_FF)),
+            (f"l{l}.w2", (TFM_FF, TFM_D)),
+        ]
+    specs += [("lnf_g", (TFM_D, 1)), ("head", (TFM_D, TFM_VOCAB))]
+    return tuple(specs)
+
+
+def _tfm_init(key):
+    specs = _tfm_specs()
+    keys = jax.random.split(key, len(specs))
+    out = []
+    for k, (name, shape) in zip(keys, specs):
+        if "ln" in name:
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name in ("embed", "pos"):
+            out.append(jax.random.normal(k, shape, jnp.float32) * 0.02)
+        else:
+            out.append(_he(k, shape) * 0.5)
+    return out
+
+
+def _layernorm(x, g):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g[:, 0]
+
+
+def _tfm_forward(params, tokens):
+    it = iter(params)
+    embed = next(it)
+    pos = next(it)
+    b, s = tokens.shape
+    x = embed[tokens] + pos[None, :s, :]
+    dh = TFM_D // TFM_HEADS
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    neg = jnp.finfo(jnp.float32).min
+    for _ in range(TFM_LAYERS):
+        ln1 = next(it)
+        wq, wk, wv, wo = next(it), next(it), next(it), next(it)
+        ln2 = next(it)
+        w1, w2 = next(it), next(it)
+        h = _layernorm(x, ln1)
+        q = (h @ wq).reshape(b, s, TFM_HEADS, dh).transpose(0, 2, 1, 3)
+        k = (h @ wk).reshape(b, s, TFM_HEADS, dh).transpose(0, 2, 1, 3)
+        v = (h @ wv).reshape(b, s, TFM_HEADS, dh).transpose(0, 2, 1, 3)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(dh))
+        att = jnp.where(mask[None, None] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, TFM_D)
+        x = x + o @ wo
+        h2 = _layernorm(x, ln2)
+        x = x + jax.nn.gelu(h2 @ w1) @ w2
+    lnf = next(it)
+    head = next(it)
+    x = _layernorm(x, lnf)
+    return x @ head  # (B, S, V)
+
+
+def _tfm_loss(params, x, y):
+    logits = _tfm_forward(params, x)
+    return _xent(logits, y), _accuracy(logits, y)
+
+
+def make_transformer(batch: int = 8) -> ModelDef:
+    return ModelDef(
+        name="transformer",
+        param_specs=_tfm_specs(),
+        x_shape=(batch, TFM_SEQ),
+        x_dtype="i32",
+        y_shape=(batch, TFM_SEQ),
+        y_dtype="i32",
+        eval_batch=16,
+        loss_and_metric=_tfm_loss,
+        init_params=_tfm_init,
+        metric_name="token_acc",
+    )
+
+
+MODELS = {
+    "mlp": make_mlp,
+    "cnn": make_cnn,
+    "segnet": make_segnet,
+    "transformer": make_transformer,
+}

@@ -1,0 +1,375 @@
+"""Layer-2 optimizer implementations in JAX (build-time only).
+
+Four optimizers, mirroring the paper's evaluation matrix:
+
+* ``sgd``      — heavy-ball SGD with coupled L2 weight decay (the
+                 torchvision baseline the paper tunes against).
+* ``adamw``    — AdamW with decoupled weight decay.
+* ``shampoo``  — Shampoo (Alg. 1) with EMA gram statistics and the
+                 inverse-fourth-root computed by a *coupled Newton
+                 iteration* (pure GEMMs, so it lowers to plain HLO —
+                 the ``eigh`` root lives only in ``kernels.ref`` as the
+                 build-time oracle). SGD grafting per Shi et al. 2023.
+* ``jorge``    — the paper's contribution (Alg. 2 + App. A.1/A.2):
+                 inverse-free preconditioner updates via the Pallas
+                 kernels, dynamic beta2, SGD grafting, decoupled weight
+                 decay bootstrapped at 10x SGD's.
+
+All optimizers operate on a flat list of 2-D parameter matrices
+(N-D tensors are collapsed by the model definitions, exactly as §3 of the
+paper prescribes). Parameters with ``min(m, n) == 1`` (biases, layernorm
+gains) are not preconditioned — they take the grafted momentum-SGD update
+directly; this matches common Shampoo practice for tiny/1-D tensors and is
+recorded in DESIGN.md.
+
+The learning rate and weight decay are *runtime scalars*: the Rust
+coordinator owns schedules, warmup and the update-interval policy. The
+preconditioner update interval is realised as two lowered artifacts per
+second-order optimizer (``update_precond`` True/False) selected per step
+by the coordinator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gram_left, gram_right, jorge_update, precondition
+from .kernels.matmul import matmul as pallas_matmul
+
+Array = jnp.ndarray
+Params = List[Array]
+State = List[Array]
+
+# Norm floor shared by grafting/preconditioning guards.
+_EPS = 1e-16
+
+
+@dataclasses.dataclass(frozen=True)
+class Hyper:
+    """Static hyperparameters baked into the lowered artifacts.
+
+    lr / weight-decay are runtime inputs; everything here is the paper's
+    "universal" set (§4): beta1 = momentum = 0.9, Shampoo beta2 = 0.95,
+    epsilon for preconditioner init 1e-6, 15 coupled-Newton iterations.
+    """
+
+    beta1: float = 0.9
+    sgd_momentum: float = 0.9
+    shampoo_beta2: float = 0.95
+    precond_eps: float = 1e-6
+    newton_iters: int = 15
+    adam_beta1: float = 0.9
+    adam_beta2: float = 0.999
+    adam_eps: float = 1e-8
+    # GEMM tile edge for the Pallas kernels inside the Jorge update.
+    # Perf pass (EXPERIMENTS.md §Perf): 128 -> 512 is 20x faster under
+    # interpret-mode lowering (fewer grid-loop iterations, dots large
+    # enough for the CPU backend to thread); 512^2 x 3 tiles = 3 MB still
+    # fits a TPU core's 16 MB VMEM, so the schedule remains TPU-valid.
+    block: int = 512
+    # If False, the Jorge update uses plain jnp matmuls instead of the
+    # Pallas kernels (ablation artifacts; numerics identical).
+    use_pallas: bool = True
+
+
+def _is_preconditioned(shape: Tuple[int, int]) -> bool:
+    return shape[0] > 1 and shape[1] > 1
+
+
+def _fnorm(x: Array) -> Array:
+    return jnp.sqrt(jnp.sum(x.astype(jnp.float32) ** 2))
+
+
+# ---------------------------------------------------------------------------
+# Coupled Newton inverse-pth-root (used by Shampoo; GEMMs only)
+# ---------------------------------------------------------------------------
+
+def inv_fourth_root_newton(a: Array, iters: int, ridge: float) -> Array:
+    """``(A + ridge I)^{-1/4}`` via the coupled Newton iteration.
+
+    The iteration from Gupta et al. (2018) App. / Anil et al. (2021):
+        z   = (1+p) / (2 ||A||_F),  M0 = z A,  H0 = z^{1/p} I
+        Mi  = (1-alpha) I + alpha M_k          (alpha = -1/p)
+        M'  = Mi^p M_k,   H' = H_k Mi
+    converges with M -> I and H -> A^{-1/p}. Entirely GEMMs, so Shampoo's
+    root stays on the GPU/MXU fast path — but note it is *iterative*
+    (15 chained GEMM rounds), which is exactly the cost Jorge eliminates.
+    """
+    n = a.shape[0]
+    p = 4
+    eye = jnp.eye(n, dtype=a.dtype)
+    a = a + ridge * eye
+    z = (1.0 + p) / (2.0 * jnp.maximum(_fnorm(a), _EPS))
+    alpha = -1.0 / p
+
+    def body(_, carry):
+        m, h = carry
+        mi = (1.0 - alpha) * eye + alpha * m
+        mi2 = mi @ mi
+        m_new = (mi2 @ mi2) @ m
+        h_new = h @ mi
+        return (m_new, h_new)
+
+    m0 = (z * a).astype(a.dtype)
+    h0 = (z ** (1.0 / p)) * eye
+    _, h = jax.lax.fori_loop(0, iters, body, (m0, h0))
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Optimizer definitions
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class OptimizerDef:
+    """A named optimizer with explicit flat-state layout.
+
+    ``state_spec`` returns ``(name, shape)`` for every state array, in the
+    exact order ``init_state``/``step`` produce them — the AOT manifest
+    exposes this layout to the Rust coordinator.
+    """
+
+    name: str
+    hyper: Hyper
+    init_state: Callable[[Params], State]
+    state_spec: Callable[[Sequence[Tuple[str, Tuple[int, int]]]], list]
+    step: Callable[..., Tuple[Params, State]]
+    # True if the optimizer distinguishes precond-update vs skip steps.
+    has_precond: bool = False
+
+
+# -- SGD --------------------------------------------------------------------
+
+def make_sgd(hyper: Hyper = Hyper()) -> OptimizerDef:
+    def init_state(params: Params) -> State:
+        return [jnp.zeros_like(p) for p in params]
+
+    def state_spec(param_specs):
+        return [(f"{n}.mom", s) for n, s in param_specs]
+
+    def step(params, state, grads, lr, wd, update_precond=True):
+        new_p, new_s = [], []
+        for p, mom, g in zip(params, state, grads):
+            g = g + wd * p  # coupled L2 (torchvision SGD)
+            mom = hyper.sgd_momentum * mom + g
+            new_p.append(p - lr * mom)
+            new_s.append(mom)
+        return new_p, new_s
+
+    return OptimizerDef("sgd", hyper, init_state, state_spec, step)
+
+
+# -- AdamW ------------------------------------------------------------------
+
+def make_adamw(hyper: Hyper = Hyper()) -> OptimizerDef:
+    def init_state(params: Params) -> State:
+        st: State = []
+        for p in params:
+            st.append(jnp.zeros_like(p))  # exp_avg
+            st.append(jnp.zeros_like(p))  # exp_avg_sq
+        st.append(jnp.zeros((1, 1), jnp.float32))  # step count
+        return st
+
+    def state_spec(param_specs):
+        st = []
+        for n, s in param_specs:
+            st.append((f"{n}.exp_avg", s))
+            st.append((f"{n}.exp_avg_sq", s))
+        st.append(("adam.t", (1, 1)))
+        return st
+
+    def step(params, state, grads, lr, wd, update_precond=True):
+        b1, b2, eps = hyper.adam_beta1, hyper.adam_beta2, hyper.adam_eps
+        t = state[-1] + 1.0
+        bc1 = 1.0 - b1 ** t[0, 0]
+        bc2 = 1.0 - b2 ** t[0, 0]
+        new_p, new_s = [], []
+        for i, (p, g) in enumerate(zip(params, grads)):
+            m = state[2 * i]
+            v = state[2 * i + 1]
+            m = b1 * m + (1.0 - b1) * g
+            v = b2 * v + (1.0 - b2) * g * g
+            m_hat = m / bc1
+            v_hat = v / bc2
+            upd = m_hat / (jnp.sqrt(v_hat) + eps)
+            new_p.append(p - lr * upd - lr * wd * p)  # decoupled WD
+            new_s.extend([m, v])
+        new_s.append(t)
+        return new_p, new_s
+
+    return OptimizerDef("adamw", hyper, init_state, state_spec, step)
+
+
+# -- shared grafted weight update (Alg. 3) -----------------------------------
+
+def _grafted_update(p, g, gtilde, mom, gmom, lr, wd, hyper: Hyper, decoupled: bool):
+    """Momentum + SGD grafting + weight decay; returns (p', mom', gmom').
+
+    Direction comes from the preconditioned momentum, magnitude from the
+    heavy-ball SGD momentum (App. A.2). ``decoupled`` selects Jorge-style
+    decoupled weight decay vs Shampoo/SGD-style coupled L2.
+    """
+    g_sgd = g if decoupled else g + wd * p
+    mom = hyper.beta1 * mom + (1.0 - hyper.beta1) * gtilde
+    gmom = hyper.sgd_momentum * gmom + g_sgd
+    step_dir = mom * (_fnorm(gmom) / jnp.maximum(_fnorm(mom), _EPS)).astype(p.dtype)
+    p_new = p - lr * step_dir
+    if decoupled:
+        p_new = p_new - lr * wd * p
+    return p_new, mom, gmom
+
+
+# -- Shampoo ------------------------------------------------------------------
+
+def make_shampoo(hyper: Hyper = Hyper()) -> OptimizerDef:
+    def init_state(params: Params) -> State:
+        eps = hyper.precond_eps
+        st: State = []
+        for p in params:
+            m, n = p.shape
+            if _is_preconditioned(p.shape):
+                st.append(eps * jnp.eye(m, dtype=p.dtype))  # L stat
+                st.append(eps * jnp.eye(n, dtype=p.dtype))  # R stat
+                st.append(eps ** (-0.25) * jnp.eye(m, dtype=p.dtype))  # L^{-1/4}
+                st.append(eps ** (-0.25) * jnp.eye(n, dtype=p.dtype))  # R^{-1/4}
+            st.append(jnp.zeros_like(p))  # momentum
+            st.append(jnp.zeros_like(p))  # sgd (grafting) momentum
+        return st
+
+    def state_spec(param_specs):
+        st = []
+        for nme, s in param_specs:
+            m, n = s
+            if _is_preconditioned(s):
+                st.append((f"{nme}.Lstat", (m, m)))
+                st.append((f"{nme}.Rstat", (n, n)))
+                st.append((f"{nme}.PL", (m, m)))
+                st.append((f"{nme}.PR", (n, n)))
+            st.append((f"{nme}.mom", s))
+            st.append((f"{nme}.gmom", s))
+        return st
+
+    def step(params, state, grads, lr, wd, update_precond=True):
+        b2 = hyper.shampoo_beta2
+        new_p, new_s = [], []
+        si = 0
+        for p, g in zip(params, grads):
+            if _is_preconditioned(p.shape):
+                lstat, rstat, pl_, pr_ = state[si : si + 4]
+                mom, gmom = state[si + 4 : si + 6]
+                si += 6
+                lstat = b2 * lstat + (1.0 - b2) * (g @ g.T)
+                rstat = b2 * rstat + (1.0 - b2) * (g.T @ g)
+                if update_precond:
+                    # `+ 0.0 * old` keeps the stale roots alive in the
+                    # jaxpr so jax does not DCE the corresponding entry
+                    # parameters — the artifact signature must match the
+                    # manifest for both the full and skip variants.
+                    pl_ = inv_fourth_root_newton(
+                        lstat, hyper.newton_iters, hyper.precond_eps
+                    ) + 0.0 * pl_
+                    pr_ = inv_fourth_root_newton(
+                        rstat, hyper.newton_iters, hyper.precond_eps
+                    ) + 0.0 * pr_
+                gtilde = pl_ @ g @ pr_
+                p_new, mom, gmom = _grafted_update(
+                    p, g, gtilde, mom, gmom, lr, wd, hyper, decoupled=False
+                )
+                new_s.extend([lstat, rstat, pl_, pr_, mom, gmom])
+            else:
+                mom, gmom = state[si : si + 2]
+                si += 2
+                p_new, mom, gmom = _grafted_update(
+                    p, g, g, mom, gmom, lr, wd, hyper, decoupled=False
+                )
+                new_s.extend([mom, gmom])
+            new_p.append(p_new)
+        return new_p, new_s
+
+    return OptimizerDef("shampoo", hyper, init_state, state_spec, step, has_precond=True)
+
+
+# -- Jorge --------------------------------------------------------------------
+
+def make_jorge(hyper: Hyper = Hyper()) -> OptimizerDef:
+    """The paper's optimizer: Algorithm 2 + dynamic beta2 + grafting."""
+
+    def _jorge_upd(p_hat, g, left: bool):
+        if hyper.use_pallas:
+            s = gram_left(g, block_m=hyper.block, block_n=hyper.block, block_k=hyper.block) if left else gram_right(
+                g, block_m=hyper.block, block_n=hyper.block, block_k=hyper.block
+            )
+            return jorge_update(p_hat, s, block=hyper.block)
+        # jnp ablation path (same math, XLA-native GEMMs)
+        from .kernels import ref
+
+        s = g @ g.T if left else g.T @ g
+        return ref.jorge_update_ref(p_hat, s)
+
+    def _precondition(l_hat, g, r_hat):
+        if hyper.use_pallas:
+            return precondition(l_hat, g, r_hat, block=hyper.block)
+        return l_hat @ g @ r_hat
+
+    def init_state(params: Params) -> State:
+        eps = hyper.precond_eps
+        st: State = []
+        for p in params:
+            m, n = p.shape
+            if _is_preconditioned(p.shape):
+                st.append(eps ** (-0.25) * jnp.eye(m, dtype=p.dtype))  # L^
+                st.append(eps ** (-0.25) * jnp.eye(n, dtype=p.dtype))  # R^
+            st.append(jnp.zeros_like(p))  # momentum
+            st.append(jnp.zeros_like(p))  # sgd (grafting) momentum
+        return st
+
+    def state_spec(param_specs):
+        st = []
+        for nme, s in param_specs:
+            m, n = s
+            if _is_preconditioned(s):
+                st.append((f"{nme}.Lhat", (m, m)))
+                st.append((f"{nme}.Rhat", (n, n)))
+            st.append((f"{nme}.mom", s))
+            st.append((f"{nme}.gmom", s))
+        return st
+
+    def step(params, state, grads, lr, wd, update_precond=True):
+        new_p, new_s = [], []
+        si = 0
+        for p, g in zip(params, grads):
+            if _is_preconditioned(p.shape):
+                l_hat, r_hat = state[si : si + 2]
+                mom, gmom = state[si + 2 : si + 4]
+                si += 4
+                if update_precond:
+                    l_hat = _jorge_upd(l_hat, g, left=True)
+                    r_hat = _jorge_upd(r_hat, g, left=False)
+                gtilde = _precondition(l_hat, g, r_hat)
+                p_new, mom, gmom = _grafted_update(
+                    p, g, gtilde, mom, gmom, lr, wd, hyper, decoupled=True
+                )
+                new_s.extend([l_hat, r_hat, mom, gmom])
+            else:
+                mom, gmom = state[si : si + 2]
+                si += 2
+                p_new, mom, gmom = _grafted_update(
+                    p, g, g, mom, gmom, lr, wd, hyper, decoupled=True
+                )
+                new_s.extend([mom, gmom])
+            new_p.append(p_new)
+        return new_p, new_s
+
+    return OptimizerDef("jorge", hyper, init_state, state_spec, step, has_precond=True)
+
+
+OPTIMIZERS = {
+    "sgd": make_sgd,
+    "adamw": make_adamw,
+    "shampoo": make_shampoo,
+    "jorge": make_jorge,
+}

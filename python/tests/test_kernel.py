@@ -1,0 +1,271 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+Hypothesis sweeps shapes (including non-tile-multiples), scales
+(ill-conditioned statistics) and block sizes; every kernel must match its
+``ref.py`` oracle to f32 tolerance.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    frobenius_sq,
+    gram_left,
+    gram_right,
+    jorge_update,
+    matmul,
+    poly_m,
+    precondition,
+)
+from compile.kernels import ref
+
+DIMS = st.integers(min_value=1, max_value=48)
+BLOCKS = st.sampled_from([8, 16, 32])
+SCALES = st.sampled_from([1e-3, 1.0, 1e3])
+
+
+def _rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+def _allclose(a, b, rtol=1e-4, atol=1e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, block=BLOCKS, scale=SCALES, seed=st.integers(0, 2**31))
+def test_matmul_matches_ref(m, k, n, block, scale, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, m, k, scale=scale)
+    b = _rand(rng, k, n)
+    got = matmul(a, b, block_m=block, block_n=block, block_k=block)
+    want = ref.matmul_ref(a, b)
+    assert got.shape == (m, n)
+    _allclose(got, want, rtol=1e-4, atol=1e-4 * scale)
+
+
+def test_matmul_scaled_epilogue():
+    rng = np.random.default_rng(0)
+    a = _rand(rng, 33, 17)
+    b = _rand(rng, 17, 29)
+    got = matmul(a, b, block_m=16, block_n=16, block_k=16, scale=jnp.float32(2.5))
+    _allclose(got, 2.5 * ref.matmul_ref(a, b), rtol=1e-4)
+
+
+def test_matmul_rejects_bad_shapes():
+    a = jnp.zeros((3, 4), jnp.float32)
+    b = jnp.zeros((5, 6), jnp.float32)
+    with pytest.raises(ValueError):
+        matmul(a, b)
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((3,), jnp.float32), b)
+
+
+def test_matmul_identity():
+    rng = np.random.default_rng(1)
+    a = _rand(rng, 20, 20)
+    eye = jnp.eye(20, dtype=jnp.float32)
+    _allclose(matmul(a, eye, block_m=8, block_n=8, block_k=8), a, rtol=1e-5)
+
+
+def test_matmul_bf16_inputs_accumulate_in_f32():
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.normal(size=(32, 64)), jnp.bfloat16)
+    b = jnp.asarray(rng.normal(size=(64, 32)), jnp.bfloat16)
+    got = matmul(a, b, block_m=16, block_n=16, block_k=16)
+    want = jnp.matmul(
+        a.astype(jnp.float32), b.astype(jnp.float32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), rtol=5e-2, atol=5e-2
+    )
+
+
+def test_gram_kernels():
+    rng = np.random.default_rng(3)
+    g = _rand(rng, 21, 13)
+    _allclose(gram_left(g, block_m=8, block_n=8, block_k=8), g @ g.T, rtol=1e-4)
+    _allclose(gram_right(g, block_m=8, block_n=8, block_k=8), g.T @ g, rtol=1e-4)
+
+
+def test_gram_left_symmetric_psd():
+    rng = np.random.default_rng(4)
+    g = _rand(rng, 24, 9)
+    s = np.asarray(gram_left(g, block_m=8, block_n=8, block_k=8))
+    np.testing.assert_allclose(s, s.T, rtol=1e-5, atol=1e-5)
+    w = np.linalg.eigvalsh(0.5 * (s + s.T))
+    assert w.min() >= -1e-3
+
+
+# ---------------------------------------------------------------------------
+# frobenius / poly_m
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(m=DIMS, n=DIMS, block=BLOCKS, scale=SCALES, seed=st.integers(0, 2**31))
+def test_frobenius_matches_ref(m, n, block, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, m, n, scale=scale)
+    got = frobenius_sq(x, block=block)
+    want = ref.frobenius_sq_ref(x)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-4)
+
+
+def test_frobenius_zero():
+    assert float(frobenius_sq(jnp.zeros((7, 5), jnp.float32), block=8)) == 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=DIMS, block=BLOCKS, seed=st.integers(0, 2**31))
+def test_poly_m_matches_ref(n, block, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, n, n)
+    x2 = jnp.asarray(np.asarray(x) @ np.asarray(x))
+    a, b = 0.25, 5.0 / 32.0
+    got = poly_m(x, x2, a, b, block=block)
+    want = ref.poly_m_ref(x, x2, a, b)
+    _allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_poly_m_identity_at_zero():
+    n = 17
+    z = jnp.zeros((n, n), jnp.float32)
+    got = poly_m(z, z, 0.25, 0.15, block=8)
+    _allclose(got, jnp.eye(n), rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# jorge_update
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(2, 32),
+    n=st.integers(2, 32),
+    block=BLOCKS,
+    scale=SCALES,
+    seed=st.integers(0, 2**31),
+)
+def test_jorge_update_matches_ref(m, n, block, scale, seed):
+    rng = np.random.default_rng(seed)
+    g = _rand(rng, m, n, scale=scale)
+    p = jnp.asarray((1e-6) ** -0.25 * np.eye(m), jnp.float32)
+    s = jnp.asarray(np.asarray(g) @ np.asarray(g).T)
+    got = jorge_update(p, s, block=block)
+    want = ref.jorge_update_ref(p, s)
+    # relative comparison — entries are O(eps^-1/4) ~ 31.6
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4 * float(np.abs(want).max())
+    )
+
+
+def test_jorge_update_zero_gradient_is_identity():
+    p = jnp.asarray(5.0 * np.eye(12), jnp.float32)
+    s = jnp.zeros((12, 12), jnp.float32)
+    got = jorge_update(p, s, block=8)
+    _allclose(got, p, rtol=0, atol=0)
+
+
+def test_jorge_update_preserves_symmetry():
+    rng = np.random.default_rng(7)
+    g = _rand(rng, 16, 8)
+    p = jnp.asarray((1e-6) ** -0.25 * np.eye(16), jnp.float32)
+    s = jnp.asarray(np.asarray(g) @ np.asarray(g).T)
+    out = np.asarray(jorge_update(p, s, block=8))
+    np.testing.assert_allclose(out, out.T, rtol=1e-3, atol=1e-2)
+
+
+def test_jorge_update_approaches_exact_root_after_burn_in():
+    """After several updates on a fixed statistic, P ~ (EMA limit)^{-1/4}.
+
+    With a constant gram statistic S and dynamic beta2, the fixed point of
+    the exact recursion is P = S^{-1/4}-ish; the truncated series tracks
+    the exact inverse-root update to O(1/nx) per step. We check the kernel
+    stays within a few percent of the exact-root recursion run in
+    parallel.
+    """
+    rng = np.random.default_rng(11)
+    g = _rand(rng, 12, 12)
+    s = jnp.asarray(np.asarray(g) @ np.asarray(g).T + 0.1 * np.eye(12), jnp.float32)
+    p_kernel = jnp.asarray((1e-2) ** -0.25 * np.eye(12), jnp.float32)
+    for _ in range(8):
+        p_exact = ref.exact_inverse_root_update(p_kernel, s)
+        p_kernel = jorge_update(p_kernel, s, block=8)
+        rel = float(
+            np.abs(np.asarray(p_kernel) - np.asarray(p_exact)).max()
+            / np.abs(np.asarray(p_exact)).max()
+        )
+        assert rel < 0.2, f"kernel diverged from exact root: rel={rel}"
+
+
+def test_jorge_dynamic_beta2_keeps_series_valid():
+    """beta2 = nx/(nx+1) implies ||(1-b2)/b2 * X||_F = 1 exactly at the
+    boundary; the normalised series argument X/nx has Frobenius norm 1, so
+    the spectral norm is <= 1 and the binomial expansion is valid."""
+    rng = np.random.default_rng(13)
+    g = _rand(rng, 10, 6, scale=100.0)
+    s = np.asarray(g) @ np.asarray(g).T
+    p = (1e-6) ** -0.25 * np.eye(10)
+    x = np.linalg.matrix_power(p, 4) @ s
+    nx = np.sqrt((x * x).sum())
+    beta2 = nx / (nx + 1.0)
+    arg = (1 - beta2) / beta2 * x
+    assert np.sqrt((arg * arg).sum()) <= 1.0 + 1e-5
+    # spectral norm <= frobenius norm
+    assert np.linalg.norm(arg, 2) <= 1.0 + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# precondition
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 40), n=st.integers(1, 40), block=BLOCKS, seed=st.integers(0, 2**31))
+def test_precondition_matches_ref(m, n, block, seed):
+    rng = np.random.default_rng(seed)
+    l = _rand(rng, m, m)
+    g = _rand(rng, m, n)
+    r = _rand(rng, n, n)
+    got = precondition(l, g, r, block=block)
+    want = ref.precondition_ref(l, g, r)
+    _allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_precondition_shape_mismatch():
+    l = jnp.zeros((4, 4), jnp.float32)
+    g = jnp.zeros((5, 3), jnp.float32)
+    r = jnp.zeros((3, 3), jnp.float32)
+    with pytest.raises(ValueError):
+        precondition(l, g, r)
+
+
+# ---------------------------------------------------------------------------
+# Newton root (Shampoo's in-artifact inverse root) vs eigh oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 24), seed=st.integers(0, 2**31), cond=st.sampled_from([1.0, 10.0, 1e3]))
+def test_newton_root_matches_eigh(n, seed, cond):
+    from compile.optim_jax import inv_fourth_root_newton
+
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.normal(size=(n, n)))
+    w = np.linspace(1.0, cond, n)
+    a = jnp.asarray(q @ np.diag(w) @ q.T, jnp.float32)
+    got = inv_fourth_root_newton(a, iters=30, ridge=1e-9)
+    want = ref.inv_pth_root_eigh(np.asarray(a, np.float64), 4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-2, atol=1e-3)
+
+
+def test_newton_root_identity():
+    from compile.optim_jax import inv_fourth_root_newton
+
+    eye = jnp.eye(8, dtype=jnp.float32)
+    got = inv_fourth_root_newton(eye, iters=20, ridge=0.0)
+    np.testing.assert_allclose(np.asarray(got), np.eye(8), rtol=1e-4, atol=1e-4)

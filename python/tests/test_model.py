@@ -1,0 +1,131 @@
+"""L2 model contracts: shapes, losses, metrics, trainability."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile.model import MODELS, mean_iou
+from compile.optim_jax import Hyper, make_sgd
+
+
+def _batch(model, rng, batch=None):
+    xs = list(model.x_shape)
+    ys = list(model.y_shape)
+    if batch is not None:
+        xs[0] = batch
+        ys[0] = batch
+    if model.x_dtype == "f32":
+        x = jnp.asarray(rng.normal(size=xs), jnp.float32)
+    else:
+        x = jnp.asarray(rng.integers(0, 512, size=xs), jnp.int32)
+    classes = {"mlp": 10, "cnn": 10, "segnet": 8, "transformer": 512}[model.name]
+    y = jnp.asarray(rng.integers(0, classes, size=ys), jnp.int32)
+    return x, y
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_param_specs_are_2d_and_counted(name):
+    model = MODELS[name]()
+    total = 0
+    for pname, shape in model.param_specs:
+        assert len(shape) == 2, f"{pname} not 2-D"
+        assert shape[0] >= 1 and shape[1] >= 1
+        total += shape[0] * shape[1]
+    assert total == model.param_count()
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_init_matches_specs(name):
+    model = MODELS[name]()
+    params = model.init_params(jax.random.PRNGKey(0))
+    assert len(params) == len(model.param_specs)
+    for p, (_, shape) in zip(params, model.param_specs):
+        assert tuple(p.shape) == tuple(shape)
+        assert p.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_loss_and_metric_are_finite_scalars(name):
+    model = MODELS[name]()
+    rng = np.random.default_rng(0)
+    params = model.init_params(jax.random.PRNGKey(1))
+    x, y = _batch(model, rng)
+    loss, metric = model.loss_and_metric(params, x, y)
+    assert loss.shape == () and metric.shape == ()
+    assert np.isfinite(float(loss)) and np.isfinite(float(metric))
+    assert 0.0 <= float(metric) <= 1.0
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_initial_loss_near_uniform(name):
+    """Fresh models should be near chance level: loss ≈ log(C)."""
+    model = MODELS[name]()
+    classes = {"mlp": 10, "cnn": 10, "segnet": 8, "transformer": 512}[name]
+    rng = np.random.default_rng(2)
+    params = model.init_params(jax.random.PRNGKey(2))
+    x, y = _batch(model, rng)
+    loss, _ = model.loss_and_metric(params, x, y)
+    # He-init on unnormalised synthetic inputs inflates logits a little for
+    # the conv nets; "near chance" here means within a small factor.
+    assert float(loss) < 5.0 * np.log(classes)
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_gradients_flow_to_all_params(name):
+    model = MODELS[name]()
+    rng = np.random.default_rng(3)
+    params = model.init_params(jax.random.PRNGKey(3))
+    x, y = _batch(model, rng)
+    grads = jax.grad(lambda ps: model.loss_and_metric(ps, x, y)[0])(params)
+    for g, (pname, _) in zip(grads, model.param_specs):
+        assert float(jnp.abs(g).max()) > 0.0, f"dead gradient for {pname}"
+
+
+# segnet memorises uniform-random per-pixel labels only partially (2.9k
+# params vs 4096 labels), hence the looser factor and bigger budget.
+@pytest.mark.parametrize(
+    "name,lr,steps,factor", [("mlp", 0.05, 80, 0.7), ("segnet", 0.5, 200, 0.75)]
+)
+def test_few_sgd_steps_reduce_loss(name, lr, steps, factor):
+    """Overfit a single fixed batch — the loss must drop fast."""
+    model = MODELS[name]()
+    rng = np.random.default_rng(4)
+    params = model.init_params(jax.random.PRNGKey(4))
+    x, y = _batch(model, rng)
+    opt = make_sgd(Hyper())
+    state = opt.init_state(params)
+    loss0 = float(model.loss_and_metric(params, x, y)[0])
+    step = jax.jit(
+        lambda ps, st: (
+            lambda g: opt.step(ps, st, g, lr, 0.0)
+        )(jax.grad(lambda q: model.loss_and_metric(q, x, y)[0])(ps))
+    )
+    for _ in range(steps):
+        params, state = step(params, state)
+    loss1 = float(model.loss_and_metric(params, x, y)[0])
+    assert loss1 < factor * loss0, f"{loss0} -> {loss1}"
+
+
+def test_mean_iou_perfect_and_disjoint():
+    y = jnp.asarray(np.random.default_rng(5).integers(0, 8, size=(4, 16, 16)), jnp.int32)
+    assert float(mean_iou(y, y, 8)) == 1.0
+    pred = (y + 1) % 8
+    assert float(mean_iou(pred, y, 8)) == 0.0
+
+
+def test_transformer_causality():
+    """Changing a future token must not change past logits."""
+    from compile.model import _tfm_forward
+
+    model = MODELS["transformer"]()
+    params = model.init_params(jax.random.PRNGKey(6))
+    rng = np.random.default_rng(6)
+    x1 = jnp.asarray(rng.integers(0, 512, size=(1, 64)), jnp.int32)
+    x2 = x1.at[0, 40].set((int(x1[0, 40]) + 7) % 512)
+    l1 = _tfm_forward(params, x1)
+    l2 = _tfm_forward(params, x2)
+    np.testing.assert_allclose(
+        np.asarray(l1[0, :40]), np.asarray(l2[0, :40]), rtol=1e-4, atol=1e-4
+    )
+    assert float(jnp.abs(l1[0, 40:] - l2[0, 40:]).max()) > 1e-4

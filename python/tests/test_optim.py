@@ -1,0 +1,285 @@
+"""L2 optimizer correctness: step semantics, state layouts, trajectories."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.optim_jax import (
+    Hyper,
+    OPTIMIZERS,
+    make_adamw,
+    make_jorge,
+    make_sgd,
+    make_shampoo,
+)
+from compile.kernels import ref
+
+HYPER = Hyper(block=16)
+
+
+def _params(rng, specs):
+    return [jnp.asarray(rng.normal(size=s), jnp.float32) for _, s in specs]
+
+
+SPECS = [("w", (12, 8)), ("b", (8, 1))]
+
+
+def _grads_like(rng, params, scale=0.1):
+    return [jnp.asarray(rng.normal(size=p.shape) * scale, jnp.float32) for p in params]
+
+
+# ---------------------------------------------------------------------------
+# State layout contracts (what the manifest promises Rust)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["sgd", "adamw", "shampoo", "jorge"])
+def test_state_spec_matches_init_state(name):
+    rng = np.random.default_rng(0)
+    opt = OPTIMIZERS[name](HYPER)
+    params = _params(rng, SPECS)
+    state = opt.init_state(params)
+    spec = opt.state_spec(SPECS)
+    assert len(state) == len(spec)
+    for arr, (sname, sshape) in zip(state, spec):
+        assert tuple(arr.shape) == tuple(sshape), f"{name}:{sname}"
+
+
+@pytest.mark.parametrize("name", ["sgd", "adamw", "shampoo", "jorge"])
+def test_step_preserves_layout(name):
+    rng = np.random.default_rng(1)
+    opt = OPTIMIZERS[name](HYPER)
+    params = _params(rng, SPECS)
+    state = opt.init_state(params)
+    grads = _grads_like(rng, params)
+    new_p, new_s = opt.step(params, state, grads, 0.1, 1e-4)
+    assert len(new_p) == len(params)
+    assert len(new_s) == len(state)
+    for a, b in zip(new_s, state):
+        assert a.shape == b.shape
+
+
+def test_jorge_state_counts():
+    """Preconditioned layers carry 4 states, 1-D layers carry 2 (App. A.6)."""
+    opt = make_jorge(HYPER)
+    spec = opt.state_spec(SPECS)
+    names = [n for n, _ in spec]
+    assert names == ["w.Lhat", "w.Rhat", "w.mom", "w.gmom", "b.mom", "b.gmom"]
+
+
+def test_shampoo_state_counts():
+    opt = make_shampoo(HYPER)
+    names = [n for n, _ in opt.state_spec(SPECS)]
+    assert names == [
+        "w.Lstat", "w.Rstat", "w.PL", "w.PR", "w.mom", "w.gmom",
+        "b.mom", "b.gmom",
+    ]
+
+
+# ---------------------------------------------------------------------------
+# SGD semantics (the torchvision baseline we bootstrap from)
+# ---------------------------------------------------------------------------
+
+def test_sgd_first_step_direction():
+    rng = np.random.default_rng(2)
+    opt = make_sgd(HYPER)
+    params = _params(rng, SPECS)
+    grads = _grads_like(rng, params)
+    new_p, new_s = opt.step(params, opt.init_state(params), grads, 0.1, 0.0)
+    for p, g, np_ in zip(params, grads, new_p):
+        np.testing.assert_allclose(np.asarray(np_), np.asarray(p - 0.1 * g), rtol=1e-6)
+
+
+def test_sgd_coupled_weight_decay():
+    rng = np.random.default_rng(3)
+    opt = make_sgd(HYPER)
+    params = _params(rng, SPECS)
+    zero_g = [jnp.zeros_like(p) for p in params]
+    new_p, _ = opt.step(params, opt.init_state(params), zero_g, 0.1, 1e-2)
+    for p, np_ in zip(params, new_p):
+        np.testing.assert_allclose(
+            np.asarray(np_), np.asarray(p - 0.1 * 1e-2 * p), rtol=1e-6
+        )
+
+
+def test_sgd_momentum_accumulates():
+    rng = np.random.default_rng(4)
+    opt = make_sgd(HYPER)
+    params = _params(rng, SPECS)
+    g = _grads_like(rng, params)
+    state = opt.init_state(params)
+    p1, s1 = opt.step(params, state, g, 0.1, 0.0)
+    p2, s2 = opt.step(p1, s1, g, 0.1, 0.0)
+    # second step is larger: |Δ2| = lr*(1+β)|g| > lr*|g|
+    d1 = np.abs(np.asarray(params[0] - p1[0])).mean()
+    d2 = np.abs(np.asarray(p1[0] - p2[0])).mean()
+    assert d2 > 1.5 * d1
+
+
+# ---------------------------------------------------------------------------
+# AdamW semantics
+# ---------------------------------------------------------------------------
+
+def test_adamw_first_step_is_lr_sized():
+    rng = np.random.default_rng(5)
+    opt = make_adamw(HYPER)
+    params = _params(rng, SPECS)
+    grads = _grads_like(rng, params)
+    new_p, new_s = opt.step(params, opt.init_state(params), grads, 1e-3, 0.0)
+    # bias-corrected first Adam step ≈ lr * sign(g)
+    delta = np.abs(np.asarray(params[0] - new_p[0]))
+    assert delta.max() <= 1.1e-3
+    assert delta.mean() >= 0.5e-3
+
+
+def test_adamw_decoupled_wd_shrinks_params_with_zero_grad():
+    rng = np.random.default_rng(6)
+    opt = make_adamw(HYPER)
+    params = _params(rng, SPECS)
+    zero_g = [jnp.zeros_like(p) for p in params]
+    new_p, _ = opt.step(params, opt.init_state(params), zero_g, 1e-3, 0.1)
+    np.testing.assert_allclose(
+        np.asarray(new_p[0]), np.asarray(params[0]) * (1 - 1e-3 * 0.1), rtol=1e-5
+    )
+
+
+def test_adamw_step_counter_increments():
+    rng = np.random.default_rng(7)
+    opt = make_adamw(HYPER)
+    params = _params(rng, SPECS)
+    state = opt.init_state(params)
+    g = _grads_like(rng, params)
+    _, s1 = opt.step(params, state, g, 1e-3, 0.0)
+    _, s2 = opt.step(params, s1, g, 1e-3, 0.0)
+    assert float(s1[-1][0, 0]) == 1.0
+    assert float(s2[-1][0, 0]) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# Grafting property (App. A.2): step magnitude == SGD's, direction == Jorge's
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("maker", [make_jorge, make_shampoo])
+def test_grafted_step_magnitude_matches_sgd(maker):
+    rng = np.random.default_rng(8)
+    opt = maker(HYPER)
+    params = _params(rng, SPECS)
+    grads = _grads_like(rng, params)
+    new_p, new_s = opt.step(params, opt.init_state(params), grads, 0.05, 0.0)
+    # first step: m_sgd = g, so ||Δ|| must equal lr * ||g|| per layer
+    for p, g, np_ in zip(params, grads, new_p):
+        step_norm = float(jnp.linalg.norm(np_ - p))
+        g_norm = float(jnp.linalg.norm(g))
+        np.testing.assert_allclose(step_norm, 0.05 * g_norm, rtol=1e-3)
+
+
+def test_jorge_direction_comes_from_preconditioned_momentum():
+    rng = np.random.default_rng(9)
+    opt = make_jorge(HYPER)
+    params = _params(rng, SPECS)
+    grads = _grads_like(rng, params)
+    state = opt.init_state(params)
+    new_p, new_s = opt.step(params, state, grads, 0.05, 0.0)
+    # reconstruct expected direction for the 2-D layer
+    l_hat, r_hat = state[0], state[1]
+    l_new = ref.jorge_update_ref(l_hat, grads[0] @ grads[0].T)
+    r_new = ref.jorge_update_ref(r_hat, grads[0].T @ grads[0])
+    gtilde = np.asarray(l_new @ grads[0] @ r_new)
+    step = np.asarray(params[0] - new_p[0])
+    cos = (step * gtilde).sum() / (
+        np.linalg.norm(step) * np.linalg.norm(gtilde) + 1e-12
+    )
+    assert cos > 0.999, f"direction mismatch: cos={cos}"
+
+
+# ---------------------------------------------------------------------------
+# Jorge vs Shampoo trajectory: approximation should track the exact method
+# ---------------------------------------------------------------------------
+
+def test_jorge_tracks_shampoo_preconditioned_direction():
+    """On a fixed quadratic, after burn-in, Jorge's preconditioned gradient
+    should be positively aligned with Shampoo's (same curvature info)."""
+    rng = np.random.default_rng(10)
+    m, n = 10, 6
+    g = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+
+    # run 10 constant-gradient steps of both preconditioner updates
+    l_hat = (1e-2) ** -0.25 * jnp.eye(m, dtype=jnp.float32)
+    r_hat = (1e-2) ** -0.25 * jnp.eye(n, dtype=jnp.float32)
+    lstat = 1e-2 * jnp.eye(m, dtype=jnp.float32)
+    rstat = 1e-2 * jnp.eye(n, dtype=jnp.float32)
+    for _ in range(10):
+        l_hat = ref.jorge_update_ref(l_hat, g @ g.T)
+        r_hat = ref.jorge_update_ref(r_hat, g.T @ g)
+        lstat = ref.shampoo_stats_update(lstat, g @ g.T, 0.95)
+        rstat = ref.shampoo_stats_update(rstat, g.T @ g, 0.95)
+
+    jorge_dir = np.asarray(l_hat @ g @ r_hat)
+    shampoo_dir = np.asarray(ref.shampoo_precondition_ref(lstat, g, rstat))
+    cos = (jorge_dir * shampoo_dir).sum() / (
+        np.linalg.norm(jorge_dir) * np.linalg.norm(shampoo_dir)
+    )
+    assert cos > 0.9, f"Jorge drifted from Shampoo: cos={cos}"
+
+
+# ---------------------------------------------------------------------------
+# Pallas path == jnp path at the full-step level
+# ---------------------------------------------------------------------------
+
+def test_jorge_pallas_and_jnp_paths_agree():
+    rng = np.random.default_rng(11)
+    params = _params(rng, SPECS)
+    grads = _grads_like(rng, params)
+    opt_pl = make_jorge(Hyper(block=16, use_pallas=True))
+    opt_np = make_jorge(Hyper(block=16, use_pallas=False))
+    state = opt_pl.init_state(params)
+    p1, s1 = opt_pl.step(params, state, grads, 0.05, 1e-3)
+    p2, s2 = opt_np.step(params, state, grads, 0.05, 1e-3)
+    for a, b in zip(p1 + s1, p2 + s2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# skip-step (stale preconditioner) semantics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("maker", [make_jorge, make_shampoo])
+def test_skip_step_does_not_touch_inverse_roots(maker):
+    rng = np.random.default_rng(12)
+    opt = maker(HYPER)
+    params = _params(rng, SPECS)
+    state = opt.init_state(params)
+    grads = _grads_like(rng, params)
+    _, s_skip = opt.step(params, state, grads, 0.05, 0.0, update_precond=False)
+    if opt.name == "jorge":
+        np.testing.assert_array_equal(np.asarray(s_skip[0]), np.asarray(state[0]))
+        np.testing.assert_array_equal(np.asarray(s_skip[1]), np.asarray(state[1]))
+    else:
+        # shampoo: stats still accumulate, but PL/PR stay stale
+        assert not np.allclose(np.asarray(s_skip[0]), np.asarray(state[0]))
+        np.testing.assert_array_equal(np.asarray(s_skip[2]), np.asarray(state[2]))
+        np.testing.assert_array_equal(np.asarray(s_skip[3]), np.asarray(state[3]))
+
+
+# ---------------------------------------------------------------------------
+# Convergence smoke: each optimizer minimises a quadratic
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,lr", [("sgd", 0.1), ("adamw", 0.05), ("shampoo", 0.1), ("jorge", 0.1)])
+def test_optimizers_minimise_quadratic(name, lr):
+    rng = np.random.default_rng(13)
+    target = jnp.asarray(rng.normal(size=(12, 8)), jnp.float32)
+    opt = OPTIMIZERS[name](HYPER)
+    params = [jnp.zeros((12, 8), jnp.float32), jnp.zeros((8, 1), jnp.float32)]
+    state = opt.init_state(params)
+
+    def loss(ps):
+        return 0.5 * jnp.sum((ps[0] - target) ** 2) + 0.5 * jnp.sum(ps[1] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        grads = [params[0] - target, params[1]]
+        params, state = opt.step(params, state, grads, lr, 0.0)
+    l1 = float(loss(params))
+    assert l1 < 0.1 * l0, f"{name}: {l0} -> {l1}"

@@ -1,0 +1,190 @@
+//! Micro-benchmark harness (substrate — replaces criterion offline).
+//!
+//! Warmup + timed iterations with mean/std/p50/p99, adaptive iteration
+//! counts targeting a wall-clock budget, and a tabular reporter used by
+//! every `benches/*` target to print the paper's tables.
+
+use crate::metricsio::Summary;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn per_iter_human(&self) -> String {
+        human_time(self.mean_s)
+    }
+}
+
+pub fn human_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.3} s", s)
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark `f`, choosing an iteration count so total time ~ `budget_s`.
+pub fn bench(name: &str, budget_s: f64, mut f: impl FnMut()) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / once) as usize).clamp(3, 10_000);
+
+    let mut stats = Summary::new();
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        stats.add(t.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: stats.mean(),
+        std_s: stats.std(),
+        p50_s: stats.median(),
+        p99_s: stats.percentile(99.0),
+        min_s: stats.min(),
+    }
+}
+
+/// Fixed-iteration variant for expensive end-to-end runs.
+pub fn bench_n(name: &str, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    let mut stats = Summary::new();
+    f(); // warmup
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        f();
+        stats.add(t.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: iters.max(1),
+        mean_s: stats.mean(),
+        std_s: stats.std(),
+        p50_s: stats.median(),
+        p99_s: stats.percentile(99.0),
+        min_s: stats.min(),
+    }
+}
+
+/// Simple fixed-width table printer for bench reports.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "table row width");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rows_str(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = format!("\n== {} ==\n", self.title);
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop-ish", 0.05, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.mean_s * 1.5);
+        assert!(r.p50_s <= r.p99_s);
+    }
+
+    #[test]
+    fn bench_n_runs_exact_iters() {
+        let mut count = 0usize;
+        let r = bench_n("counter", 5, || count += 1);
+        assert_eq!(r.iters, 5);
+        assert_eq!(count, 6); // warmup + 5
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert!(human_time(2.0).ends_with(" s"));
+        assert!(human_time(2e-3).ends_with(" ms"));
+        assert!(human_time(2e-6).ends_with(" us"));
+        assert!(human_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["name", "value"]);
+        t.rows_str(&["sgd", "0.09"]);
+        t.rows_str(&["jorge-longer", "0.091"]);
+        let s = t.render();
+        assert!(s.contains("Demo"));
+        assert!(s.contains("jorge-longer"));
+        let lines: Vec<&str> = s.trim().lines().collect();
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.rows_str(&["only-one"]);
+    }
+}

@@ -1,0 +1,226 @@
+//! Mini property-testing framework (substrate — no proptest offline).
+//!
+//! Seeded random case generation with greedy shrinking on failure. Used
+//! across the test suite for optimizer invariants (PSD/symmetry
+//! preservation, series validity), collective correctness over arbitrary
+//! topologies, scheduler monotonicity and parser round-trips.
+
+use crate::rngx::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_iters: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xC0FFEE, max_shrink_iters: 200 }
+    }
+}
+
+/// A generator draws a case from randomness and can propose shrunk
+/// variants of a failing case.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate simplifications, most aggressive first. Default: none.
+    fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Check `prop` over random cases; on failure, shrink and panic with the
+/// minimal counterexample.
+pub fn check<G: Gen>(name: &str, cfg: Config, gen: &G, prop: impl Fn(&G::Value) -> Result<(), String>) {
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let value = gen.generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // shrink
+            let mut best = value.clone();
+            let mut best_msg = msg;
+            let mut iters = 0;
+            'outer: loop {
+                for cand in gen.shrink(&best) {
+                    iters += 1;
+                    if iters > cfg.max_shrink_iters {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property {name:?} failed at case {case} (seed {}):\n  counterexample: {best:?}\n  error: {best_msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Common generators
+// ---------------------------------------------------------------------------
+
+/// Uniform usize in [lo, hi]; shrinks towards lo.
+pub struct UsizeGen {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for UsizeGen {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.lo + rng.below((self.hi - self.lo + 1) as u64) as usize
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Random f32 matrix dims + data; shrinks dimensions towards 1.
+pub struct MatrixGen {
+    pub max_dim: usize,
+    pub scale: f32,
+}
+
+#[derive(Clone, Debug)]
+pub struct MatrixCase {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+    pub seed: u64,
+}
+
+impl MatrixCase {
+    pub fn to_matrix(&self) -> crate::tensor::Matrix {
+        crate::tensor::Matrix::from_vec(self.rows, self.cols, self.data.clone())
+    }
+}
+
+impl Gen for MatrixGen {
+    type Value = MatrixCase;
+    fn generate(&self, rng: &mut Rng) -> MatrixCase {
+        let rows = 1 + rng.below(self.max_dim as u64) as usize;
+        let cols = 1 + rng.below(self.max_dim as u64) as usize;
+        let seed = rng.next_u64();
+        let mut r2 = Rng::new(seed);
+        let mut data = vec![0.0f32; rows * cols];
+        r2.fill_normal(&mut data, 0.0, self.scale);
+        MatrixCase { rows, cols, data, seed }
+    }
+    fn shrink(&self, v: &MatrixCase) -> Vec<MatrixCase> {
+        let mut out = Vec::new();
+        for (nr, nc) in [(1, 1), (v.rows / 2, v.cols / 2), (v.rows, v.cols / 2), (v.rows / 2, v.cols)] {
+            let (nr, nc) = (nr.max(1), nc.max(1));
+            if (nr, nc) != (v.rows, v.cols) {
+                let mut data = Vec::with_capacity(nr * nc);
+                for i in 0..nr {
+                    for j in 0..nc {
+                        data.push(v.data[i * v.cols + j]);
+                    }
+                }
+                out.push(MatrixCase { rows: nr, cols: nc, data, seed: v.seed });
+            }
+        }
+        out
+    }
+}
+
+/// Pair generator.
+pub struct PairGen<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", Config::default(), &UsizeGen { lo: 0, hi: 100 }, |&n| {
+            if n + 1 == 1 + n {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimum() {
+        let result = std::panic::catch_unwind(|| {
+            check(
+                "all-below-50",
+                Config { cases: 200, ..Default::default() },
+                &UsizeGen { lo: 0, hi: 1000 },
+                |&n| if n < 50 { Ok(()) } else { Err(format!("{n} >= 50")) },
+            );
+        });
+        let msg = format!("{:?}", result.unwrap_err().downcast_ref::<String>());
+        // shrinker should walk down to exactly 50
+        assert!(msg.contains("counterexample: 50"), "{msg}");
+    }
+
+    #[test]
+    fn matrix_gen_respects_bounds() {
+        let g = MatrixGen { max_dim: 8, scale: 1.0 };
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let m = g.generate(&mut rng);
+            assert!(m.rows >= 1 && m.rows <= 8);
+            assert!(m.cols >= 1 && m.cols <= 8);
+            assert_eq!(m.data.len(), m.rows * m.cols);
+        }
+    }
+
+    #[test]
+    fn matrix_shrink_prefers_smaller() {
+        let g = MatrixGen { max_dim: 10, scale: 1.0 };
+        let mut rng = Rng::new(2);
+        let m = g.generate(&mut rng);
+        for s in g.shrink(&m) {
+            assert!(s.rows * s.cols <= m.rows * m.cols);
+            assert_eq!(s.data.len(), s.rows * s.cols);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let g = UsizeGen { lo: 0, hi: 1_000_000 };
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for _ in 0..20 {
+            assert_eq!(g.generate(&mut a), g.generate(&mut b));
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Command-line argument parsing (substrate — no clap offline).
+//!
+//! Grammar: `jorge <subcommand> [--flag value] [--switch] [positional...]`.
+//! Flags accept `--key value` or `--key=value`. Unknown flags are errors
+//! so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// true => boolean switch, no value
+    pub is_switch: bool,
+}
+
+pub const fn flag(name: &'static str, help: &'static str) -> FlagSpec {
+    FlagSpec { name, help, is_switch: false }
+}
+
+pub const fn switch(name: &'static str, help: &'static str) -> FlagSpec {
+    FlagSpec { name, help, is_switch: true }
+}
+
+impl Args {
+    /// Parse argv (without the binary name) against a flag specification.
+    pub fn parse(argv: &[String], spec: &[FlagSpec]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let fs = spec
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name} (try --help)"))?;
+                if fs.is_switch {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    out.switches.push(name.to_string());
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{name} needs a value"))?
+                            .clone(),
+                    };
+                    out.flags.insert(name.to_string(), val);
+                }
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| format!("--{name}: expected number, got {s:?}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| format!("--{name}: expected integer, got {s:?}")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+pub fn render_help(program: &str, subcommands: &[(&str, &str)], spec: &[FlagSpec]) -> String {
+    let mut s = format!("usage: {program} <command> [flags]\n\ncommands:\n");
+    for (name, help) in subcommands {
+        s.push_str(&format!("  {name:<16} {help}\n"));
+    }
+    s.push_str("\nflags:\n");
+    for f in spec {
+        let n = format!("--{}{}", f.name, if f.is_switch { "" } else { " <v>" });
+        s.push_str(&format!("  {n:<24} {}\n", f.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<FlagSpec> {
+        vec![
+            flag("model", "model name"),
+            flag("lr", "learning rate"),
+            switch("native", "use native mirrors"),
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = Args::parse(
+            &sv(&["train", "--model", "cnn", "--native", "--lr=0.4", "pos1"]),
+            &spec(),
+        )
+        .unwrap();
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.get("model"), Some("cnn"));
+        assert_eq!(a.get_f64("lr").unwrap(), Some(0.4));
+        assert!(a.has("native"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(Args::parse(&sv(&["train", "--nope", "x"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["train", "--model"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn switch_with_value_is_error() {
+        assert!(Args::parse(&sv(&["train", "--native=yes"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(&sv(&["x", "--lr", "fast"]), &spec()).unwrap();
+        assert!(a.get_f64("lr").is_err());
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = render_help("jorge", &[("train", "run training")], &spec());
+        assert!(h.contains("--model"));
+        assert!(h.contains("train"));
+    }
+}

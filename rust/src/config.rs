@@ -1,0 +1,490 @@
+//! Run configuration: a TOML-subset parser + the typed `TrainConfig`.
+//!
+//! The offline build has no serde/toml, so we carry a small parser that
+//! covers what run configs need: `[section.sub]` tables, `key = value`
+//! with strings, ints, floats, bools and flat arrays, plus `#` comments.
+//! CLI flags (see `cli.rs`) override file values via `set_override`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat table: fully-qualified dotted keys -> values.
+#[derive(Clone, Debug, Default)]
+pub struct Toml {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Toml, String> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.insert(full, val);
+        }
+        Ok(Toml { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.as_i64())
+            .map(|i| i as usize)
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn set_override(&mut self, key: &str, raw: &str) -> Result<(), String> {
+        let val = parse_value(raw)?;
+        self.entries.insert(key.to_string(), val);
+        Ok(())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside of a string starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut out = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if !p.is_empty() {
+                out.push(parse_value(p)?);
+            }
+        }
+        return Ok(TomlValue::Arr(out));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    // bare string (model names etc.)
+    if s.chars().all(|c| c.is_alphanumeric() || matches!(c, '_' | '-' | '.')) {
+        return Ok(TomlValue::Str(s.to_string()));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '[' => depth += 1,
+            ']' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Typed training configuration
+// ---------------------------------------------------------------------------
+
+/// Learning-rate schedule kinds (§4 / Fig. 1 of the paper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleKind {
+    Constant,
+    /// Step decay at fixed epoch boundaries, 10x decay each.
+    Step,
+    Cosine,
+    /// Polynomial decay with power 0.9 (the torchvision DeepLabv3 default).
+    Poly,
+}
+
+impl ScheduleKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "constant" => Ok(Self::Constant),
+            "step" => Ok(Self::Step),
+            "cosine" => Ok(Self::Cosine),
+            "poly" => Ok(Self::Poly),
+            other => Err(format!("unknown schedule {other:?}")),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Constant => "constant",
+            Self::Step => "step",
+            Self::Cosine => "cosine",
+            Self::Poly => "poly",
+        }
+    }
+}
+
+/// Everything a training run needs. Defaults follow §4's single-shot
+/// bootstrapping rules applied to the synthetic benchmarks.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: String,
+    pub optimizer: String,
+    pub epochs: usize,
+    pub steps_per_epoch: usize,
+    pub lr: f64,
+    pub weight_decay: f64,
+    pub schedule: ScheduleKind,
+    /// Step-decay boundaries as epoch fractions (paper: 1/3 and 2/3).
+    pub decay_at: Vec<f64>,
+    pub warmup_epochs: f64,
+    /// Preconditioner update interval in steps (paper Table 6: 50/4/8).
+    pub precond_every: usize,
+    pub seed: u64,
+    /// Simulated data-parallel worker count ("GPUs").
+    pub workers: usize,
+    pub dataset_size: usize,
+    pub eval_every_epochs: usize,
+    pub target_metric: f64,
+    pub artifacts_dir: String,
+    pub out_dir: String,
+    /// Use the native Rust optimizer mirrors instead of HLO artifacts
+    /// (fast path for convergence studies; numerics cross-validated).
+    pub native: bool,
+    pub log_every: usize,
+    pub max_steps: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "mlp".into(),
+            optimizer: "jorge".into(),
+            epochs: 12,
+            steps_per_epoch: 50,
+            lr: 0.1,
+            weight_decay: 1e-4,
+            schedule: ScheduleKind::Step,
+            decay_at: vec![1.0 / 3.0, 2.0 / 3.0],
+            warmup_epochs: 0.0,
+            precond_every: 1,
+            seed: 17,
+            workers: 1,
+            dataset_size: 3200,
+            eval_every_epochs: 1,
+            target_metric: 0.0,
+            artifacts_dir: "artifacts".into(),
+            out_dir: "runs".into(),
+            native: false,
+            log_every: 10,
+            max_steps: usize::MAX,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_toml(t: &Toml) -> Result<Self, String> {
+        let d = TrainConfig::default();
+        let schedule = ScheduleKind::parse(&t.str_or("train.schedule", d.schedule.name()))?;
+        let decay_at = match t.get("train.decay_at") {
+            Some(TomlValue::Arr(a)) => a
+                .iter()
+                .map(|v| v.as_f64().ok_or_else(|| "decay_at: non-number".to_string()))
+                .collect::<Result<Vec<_>, _>>()?,
+            _ => d.decay_at.clone(),
+        };
+        let cfg = TrainConfig {
+            model: t.str_or("train.model", &d.model),
+            optimizer: t.str_or("train.optimizer", &d.optimizer),
+            epochs: t.usize_or("train.epochs", d.epochs),
+            steps_per_epoch: t.usize_or("train.steps_per_epoch", d.steps_per_epoch),
+            lr: t.f64_or("train.lr", d.lr),
+            weight_decay: t.f64_or("train.weight_decay", d.weight_decay),
+            schedule,
+            decay_at,
+            warmup_epochs: t.f64_or("train.warmup_epochs", d.warmup_epochs),
+            precond_every: t.usize_or("train.precond_every", d.precond_every),
+            seed: t.usize_or("train.seed", d.seed as usize) as u64,
+            workers: t.usize_or("train.workers", d.workers),
+            dataset_size: t.usize_or("data.size", d.dataset_size),
+            eval_every_epochs: t.usize_or("train.eval_every_epochs", d.eval_every_epochs),
+            target_metric: t.f64_or("train.target_metric", d.target_metric),
+            artifacts_dir: t.str_or("paths.artifacts", &d.artifacts_dir),
+            out_dir: t.str_or("paths.out", &d.out_dir),
+            native: t.bool_or("train.native", d.native),
+            log_every: t.usize_or("train.log_every", d.log_every),
+            max_steps: t.usize_or("train.max_steps", d.max_steps),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        const MODELS: &[&str] = &["mlp", "cnn", "segnet", "transformer"];
+        const OPTS: &[&str] = &["sgd", "adamw", "shampoo", "jorge", "shampoo_sharded"];
+        if !MODELS.contains(&self.model.as_str()) {
+            return Err(format!("unknown model {:?} (choose {MODELS:?})", self.model));
+        }
+        if !OPTS.contains(&self.optimizer.as_str()) {
+            return Err(format!("unknown optimizer {:?} (choose {OPTS:?})", self.optimizer));
+        }
+        if self.epochs == 0 || self.steps_per_epoch == 0 {
+            return Err("epochs and steps_per_epoch must be > 0".into());
+        }
+        if self.precond_every == 0 {
+            return Err("precond_every must be >= 1".into());
+        }
+        if self.workers == 0 || self.workers > 64 {
+            return Err("workers must be in 1..=64".into());
+        }
+        if !(self.lr > 0.0) {
+            return Err("lr must be positive".into());
+        }
+        for &f in &self.decay_at {
+            if !(0.0..=1.0).contains(&f) {
+                return Err("decay_at fractions must be in [0,1]".into());
+            }
+        }
+        Ok(())
+    }
+
+    /// §4's single-shot bootstrap: derive a Jorge config from an SGD one.
+    /// lr is inherited via grafting, weight decay scaled by 1/(1-beta),
+    /// schedule forced to step decay at 1/3 and 2/3 of the budget.
+    pub fn bootstrap_jorge_from_sgd(sgd: &TrainConfig, sgd_momentum: f64) -> TrainConfig {
+        let mut j = sgd.clone();
+        j.optimizer = "jorge".into();
+        j.weight_decay = sgd.weight_decay / (1.0 - sgd_momentum);
+        j.schedule = ScheduleKind::Step;
+        j.decay_at = vec![1.0 / 3.0, 2.0 / 3.0];
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# run config
+[train]
+model = "cnn"
+optimizer = jorge          # bare string accepted
+epochs = 30
+lr = 0.1
+weight_decay = 1e-4
+schedule = "step"
+decay_at = [0.33, 0.66]
+precond_every = 4
+workers = 4
+
+[data]
+size = 6400
+
+[paths]
+artifacts = "artifacts"
+"#;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let t = Toml::parse(SAMPLE).unwrap();
+        assert_eq!(t.str_or("train.model", "?"), "cnn");
+        assert_eq!(t.usize_or("train.epochs", 0), 30);
+        assert_eq!(t.f64_or("train.weight_decay", 0.0), 1e-4);
+        assert_eq!(t.usize_or("data.size", 0), 6400);
+        match t.get("train.decay_at").unwrap() {
+            TomlValue::Arr(a) => assert_eq!(a.len(), 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn typed_config_roundtrip() {
+        let t = Toml::parse(SAMPLE).unwrap();
+        let c = TrainConfig::from_toml(&t).unwrap();
+        assert_eq!(c.model, "cnn");
+        assert_eq!(c.optimizer, "jorge");
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.precond_every, 4);
+        assert_eq!(c.schedule, ScheduleKind::Step);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let t = Toml::parse("").unwrap();
+        let c = TrainConfig::from_toml(&t).unwrap();
+        assert_eq!(c.model, "mlp");
+        assert_eq!(c.decay_at, vec![1.0 / 3.0, 2.0 / 3.0]);
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut t = Toml::parse(SAMPLE).unwrap();
+        t.set_override("train.epochs", "90").unwrap();
+        let c = TrainConfig::from_toml(&t).unwrap();
+        assert_eq!(c.epochs, 90);
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        let mut t = Toml::parse(SAMPLE).unwrap();
+        t.set_override("train.model", "\"resnet900\"").unwrap();
+        assert!(TrainConfig::from_toml(&t).is_err());
+
+        let mut t2 = Toml::parse(SAMPLE).unwrap();
+        t2.set_override("train.precond_every", "0").unwrap();
+        assert!(TrainConfig::from_toml(&t2).is_err());
+
+        let mut t3 = Toml::parse(SAMPLE).unwrap();
+        t3.set_override("train.workers", "100").unwrap();
+        assert!(TrainConfig::from_toml(&t3).is_err());
+    }
+
+    #[test]
+    fn parse_errors_have_line_numbers() {
+        let err = Toml::parse("[train\nx = 1").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        let err = Toml::parse("justakey").unwrap_err();
+        assert!(err.contains("key = value"), "{err}");
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let t = Toml::parse("name = \"a # not comment\" # real comment").unwrap();
+        assert_eq!(t.str_or("name", ""), "a # not comment");
+    }
+
+    #[test]
+    fn bootstrap_rule_matches_paper() {
+        let mut sgd = TrainConfig::default();
+        sgd.optimizer = "sgd".into();
+        sgd.weight_decay = 1e-4;
+        sgd.schedule = ScheduleKind::Cosine;
+        let j = TrainConfig::bootstrap_jorge_from_sgd(&sgd, 0.9);
+        assert_eq!(j.optimizer, "jorge");
+        assert!((j.weight_decay - 1e-3).abs() < 1e-12); // 10x
+        assert_eq!(j.schedule, ScheduleKind::Step);
+        assert_eq!(j.lr, sgd.lr); // grafting carries SGD's lr
+    }
+
+    #[test]
+    fn arrays_of_arrays() {
+        let t = Toml::parse("x = [[1, 2], [3]]").unwrap();
+        match t.get("x").unwrap() {
+            TomlValue::Arr(a) => {
+                assert_eq!(a.len(), 2);
+                match &a[0] {
+                    TomlValue::Arr(inner) => assert_eq!(inner.len(), 2),
+                    _ => panic!(),
+                }
+            }
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Binary checkpoint format for params + optimizer state.
+//!
+//! Layout: magic "JORGECKPT\x01", u32 tensor count, then per tensor:
+//! u32 name_len, name bytes, u8 dtype (0=f32, 1=i32), u32 ndims,
+//! u64 dims..., raw little-endian data. Round-trips exactly.
+
+use crate::runtime::HostTensor;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 10] = b"JORGECKPT\x01";
+
+pub fn save(
+    path: impl AsRef<Path>,
+    tensors: &[(String, &HostTensor)],
+) -> std::io::Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name.as_bytes())?;
+        match t {
+            HostTensor::F32 { shape, data } => {
+                w.write_all(&[0u8])?;
+                w.write_all(&(shape.len() as u32).to_le_bytes())?;
+                for &d in shape {
+                    w.write_all(&(d as u64).to_le_bytes())?;
+                }
+                for v in data {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+            HostTensor::I32 { shape, data } => {
+                w.write_all(&[1u8])?;
+                w.write_all(&(shape.len() as u32).to_le_bytes())?;
+                for &d in shape {
+                    w.write_all(&(d as u64).to_le_bytes())?;
+                }
+                for v in data {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    w.flush()
+}
+
+fn read_u32(r: &mut impl Read) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn bad(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+pub fn load(path: impl AsRef<Path>) -> std::io::Result<Vec<(String, HostTensor)>> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 10];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(bad("not a jorge checkpoint (bad magic)"));
+    }
+    let count = read_u32(&mut r)? as usize;
+    if count > 1_000_000 {
+        return Err(bad("implausible tensor count"));
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 4096 {
+            return Err(bad("implausible name length"));
+        }
+        let mut name_bytes = vec![0u8; name_len];
+        r.read_exact(&mut name_bytes)?;
+        let name = String::from_utf8(name_bytes).map_err(|_| bad("bad tensor name"))?;
+        let mut dtype = [0u8; 1];
+        r.read_exact(&mut dtype)?;
+        let ndims = read_u32(&mut r)? as usize;
+        if ndims > 16 {
+            return Err(bad("implausible rank"));
+        }
+        let mut shape = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            shape.push(read_u64(&mut r)? as usize);
+        }
+        let n: usize = shape.iter().product::<usize>().max(1);
+        if n > 1 << 30 {
+            return Err(bad("implausible tensor size"));
+        }
+        let t = match dtype[0] {
+            0 => {
+                let mut data = vec![0f32; n];
+                let mut buf = vec![0u8; 4 * n];
+                r.read_exact(&mut buf)?;
+                for (i, c) in buf.chunks_exact(4).enumerate() {
+                    data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+                HostTensor::F32 { shape, data }
+            }
+            1 => {
+                let mut data = vec![0i32; n];
+                let mut buf = vec![0u8; 4 * n];
+                r.read_exact(&mut buf)?;
+                for (i, c) in buf.chunks_exact(4).enumerate() {
+                    data[i] = i32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+                HostTensor::I32 { shape, data }
+            }
+            other => return Err(bad(&format!("unknown dtype tag {other}"))),
+        };
+        out.push((name, t));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("jorge_ckpt_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let a = HostTensor::from_f32(vec![2, 3], vec![1.0, -2.5, 3.0, 0.0, 1e-7, 9.9]);
+        let b = HostTensor::from_i32(vec![4], vec![1, -2, 3, 4]);
+        let s = HostTensor::scalar_f32(0.125);
+        let path = tmp("rt.bin");
+        save(&path, &[("w".into(), &a), ("tok".into(), &b), ("lr".into(), &s)]).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.len(), 3);
+        assert_eq!(loaded[0].0, "w");
+        assert_eq!(loaded[0].1, a);
+        assert_eq!(loaded[1].1, b);
+        assert_eq!(loaded[2].1, s);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmp("garbage.bin");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let a = HostTensor::from_f32(vec![8, 8], vec![0.5; 64]);
+        let path = tmp("trunc.bin");
+        save(&path, &[("w".into(), &a)]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,7 @@
+//! L3 coordinator: training loop, data-parallel orchestration,
+//! checkpointing. See `trainer.rs` for the two execution modes.
+
+pub mod checkpoint;
+pub mod trainer;
+
+pub use trainer::{EpochRecord, RunResult, Trainer};

@@ -1,0 +1,510 @@
+//! The training coordinator — L3's core loop.
+//!
+//! Two execution modes, both with Python nowhere on the path:
+//!
+//! * **fused** (workers == 1): one PJRT call per step runs
+//!   fwd + bwd + optimizer, with the coordinator choosing the
+//!   `train_*` vs `train_*_skip` executable per step — this is how the
+//!   paper's *preconditioner update interval* hyperparameter is realised.
+//! * **data-parallel** (workers > 1): each simulated GPU runs the
+//!   `grad_*` executable on its shard, gradients are averaged with a real
+//!   ring all-reduce over shared memory, and the leader applies the
+//!   optimizer via the `apply_*` executable (or the native mirror with
+//!   `--native`).
+
+use crate::collectives::ring_all_reduce_mean;
+use crate::config::TrainConfig;
+use crate::data::{for_model, Dataset, Sharder};
+use crate::metricsio::{CsvWriter, Stopwatch, Summary};
+use crate::optim::{self, Hyper, Optimizer, Schedule, StepCtx};
+use crate::rngx::Rng;
+use crate::runtime::{CompiledStep, Dtype, Engine, HostTensor, Manifest, Role};
+use crate::tensor::Matrix;
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// Per-epoch summary record.
+#[derive(Clone, Debug)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub lr: f64,
+    pub train_loss: f64,
+    pub train_metric: f64,
+    pub val_metric: f64,
+    pub val_loss: f64,
+    pub iter_time_s: f64,
+    pub wall_s: f64,
+}
+
+/// Result of a full training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub model: String,
+    pub optimizer: String,
+    pub epochs: Vec<EpochRecord>,
+    pub step_losses: Vec<f32>,
+    pub epochs_to_target: Option<usize>,
+    pub time_to_target_s: Option<f64>,
+    pub total_time_s: f64,
+    pub mean_iter_s: f64,
+    pub final_val_metric: f64,
+    pub best_val_metric: f64,
+}
+
+impl RunResult {
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["epoch", "lr", "train_loss", "train_metric", "val_loss", "val_metric", "iter_s", "wall_s"],
+        )?;
+        for e in &self.epochs {
+            w.row(&[
+                e.epoch as f64,
+                e.lr,
+                e.train_loss,
+                e.train_metric,
+                e.val_loss,
+                e.val_metric,
+                e.iter_time_s,
+                e.wall_s,
+            ])?;
+        }
+        w.flush()
+    }
+}
+
+const EVAL_BATCHES: usize = 4;
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    engine: Arc<Engine>,
+    dataset: Box<dyn Dataset>,
+    schedule: Schedule,
+    // executables
+    train_full: Arc<CompiledStep>,
+    train_skip: Option<Arc<CompiledStep>>,
+    grad: Arc<CompiledStep>,
+    apply_full: Arc<CompiledStep>,
+    apply_skip: Option<Arc<CompiledStep>>,
+    eval: Arc<CompiledStep>,
+    // live state
+    pub params: Vec<HostTensor>,
+    pub opt_state: Vec<HostTensor>,
+    native_opt: Option<Box<dyn Optimizer>>,
+    n_params: usize,
+    global_step: usize,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig, engine: Arc<Engine>) -> Result<Trainer> {
+        cfg.validate().map_err(|e| anyhow!(e))?;
+        // dist-shampoo shares shampoo's math; sharding only changes the
+        // projected wall-clock (perfmodel), not the trajectory.
+        let opt = if cfg.optimizer == "shampoo_sharded" { "shampoo" } else { &cfg.optimizer };
+        let has_skip = matches!(opt, "shampoo" | "jorge");
+
+        let train_full = engine.load(&Manifest::train_name(&cfg.model, opt, true))?;
+        let train_skip = if has_skip {
+            Some(engine.load(&Manifest::train_name(&cfg.model, opt, false))?)
+        } else {
+            None
+        };
+        let grad = engine.load(&format!("grad_{}", cfg.model))?;
+        let apply_full = engine.load(&Manifest::apply_name(&cfg.model, opt, true))?;
+        let apply_skip = if has_skip {
+            Some(engine.load(&Manifest::apply_name(&cfg.model, opt, false))?)
+        } else {
+            None
+        };
+        let eval = engine.load(&format!("eval_{}", cfg.model))?;
+
+        // initialise params + optimizer state from the manifest rules
+        let mut rng = Rng::new(cfg.seed);
+        let mut params = Vec::new();
+        let mut opt_state = Vec::new();
+        for spec in &train_full.spec.inputs {
+            match spec.role {
+                Role::Param => params.push(HostTensor::from_init(spec, &mut rng).map_err(|e| anyhow!(e))?),
+                Role::State => {
+                    opt_state.push(HostTensor::from_init(spec, &mut rng).map_err(|e| anyhow!(e))?)
+                }
+                _ => {}
+            }
+        }
+        let n_params = params.len();
+
+        let native_opt = if cfg.native {
+            let shapes: Vec<(usize, usize)> = train_full
+                .spec
+                .inputs
+                .iter()
+                .filter(|s| s.role == Role::Param)
+                .map(|s| (s.shape[0], s.shape.get(1).copied().unwrap_or(1)))
+                .collect();
+            Some(optim::build(opt, &shapes, Hyper::default()).map_err(|e| anyhow!(e))?)
+        } else {
+            None
+        };
+
+        // dataset: train region + held-out eval region
+        let meta = engine
+            .manifest
+            .models
+            .get(&cfg.model)
+            .ok_or_else(|| anyhow!("model {} not in manifest", cfg.model))?;
+        let total_len = cfg.dataset_size + EVAL_BATCHES * meta.eval_batch;
+        let dataset = for_model(&cfg.model, total_len, cfg.seed ^ 0xDA7A5E7).map_err(|e| anyhow!(e))?;
+
+        let total_steps = cfg.epochs * cfg.steps_per_epoch;
+        let warmup = (cfg.warmup_epochs * cfg.steps_per_epoch as f64).round() as usize;
+        let schedule = Schedule::new(cfg.schedule, cfg.lr, total_steps, warmup, &cfg.decay_at);
+
+        Ok(Trainer {
+            cfg,
+            engine,
+            dataset,
+            schedule,
+            train_full,
+            train_skip,
+            grad,
+            apply_full,
+            apply_skip,
+            eval,
+            params,
+            opt_state,
+            native_opt,
+            n_params,
+            global_step: 0,
+        })
+    }
+
+    fn batch_tensors(&self, step: &CompiledStep, indices: &[usize]) -> (HostTensor, HostTensor) {
+        let b = self.dataset.batch(indices);
+        let x_spec = &step.spec.inputs[step.spec.input_index(Role::X).unwrap()];
+        let y_spec = &step.spec.inputs[step.spec.input_index(Role::Y).unwrap()];
+        let x = match x_spec.dtype {
+            Dtype::F32 => HostTensor::from_f32(x_spec.shape.clone(), b.x_f32),
+            Dtype::I32 => HostTensor::from_i32(x_spec.shape.clone(), b.x_i32),
+        };
+        let y = HostTensor::from_i32(y_spec.shape.clone(), b.y);
+        (x, y)
+    }
+
+    fn precond_update_now(&self) -> bool {
+        // step 0 refreshes, then every `precond_every` steps
+        self.global_step % self.cfg.precond_every == 0
+    }
+
+    /// One fused train step (single-worker path). Returns (loss, metric).
+    fn fused_step(&mut self, indices: &[usize], lr: f64) -> Result<(f64, f64)> {
+        let update = self.precond_update_now();
+        let step = if update || self.train_skip.is_none() {
+            self.train_full.clone()
+        } else {
+            self.train_skip.as_ref().unwrap().clone()
+        };
+        let (x, y) = self.batch_tensors(&step, indices);
+        let mut inputs: Vec<HostTensor> =
+            Vec::with_capacity(self.params.len() + self.opt_state.len() + 4);
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.opt_state.iter().cloned());
+        inputs.push(x);
+        inputs.push(y);
+        inputs.push(HostTensor::scalar_f32(lr as f32));
+        inputs.push(HostTensor::scalar_f32(self.cfg.weight_decay as f32));
+
+        let mut outputs = step.run(&inputs)?;
+        let metric = outputs.pop().unwrap().scalar();
+        let loss = outputs.pop().unwrap().scalar();
+        let state = outputs.split_off(self.n_params);
+        self.params = outputs;
+        self.opt_state = state;
+        Ok((loss, metric))
+    }
+
+    /// One data-parallel step: grads on every worker, ring all-reduce,
+    /// leader applies the optimizer. Returns mean (loss, metric).
+    fn data_parallel_step(&mut self, worker_indices: &[Vec<usize>], lr: f64) -> Result<(f64, f64)> {
+        let workers = worker_indices.len();
+        let grad_step = self.grad.clone();
+        let params = &self.params;
+
+        // fan out gradient computation
+        let results: Vec<Result<(Vec<HostTensor>, f64, f64)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = worker_indices
+                .iter()
+                .map(|idx| {
+                    let grad_step = grad_step.clone();
+                    let (x, y) = self.batch_tensors(&grad_step, idx);
+                    s.spawn(move || -> Result<(Vec<HostTensor>, f64, f64)> {
+                        let mut inputs: Vec<HostTensor> = params.to_vec();
+                        inputs.push(x);
+                        inputs.push(y);
+                        let mut out = grad_step.run(&inputs)?;
+                        let metric = out.pop().unwrap().scalar();
+                        let loss = out.pop().unwrap().scalar();
+                        Ok((out, loss, metric))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+        let mut grads_per_worker: Vec<Vec<HostTensor>> = Vec::with_capacity(workers);
+        let mut loss_sum = 0.0;
+        let mut metric_sum = 0.0;
+        for r in results {
+            let (g, l, m) = r?;
+            grads_per_worker.push(g);
+            loss_sum += l;
+            metric_sum += m;
+        }
+
+        // bucket-flatten each worker's grads and ring-all-reduce the mean
+        let mut buffers: Vec<Vec<f32>> = grads_per_worker
+            .iter()
+            .map(|gs| {
+                let mut flat = Vec::new();
+                for g in gs {
+                    flat.extend_from_slice(g.as_f32().unwrap());
+                }
+                flat
+            })
+            .collect();
+        ring_all_reduce_mean(&mut buffers);
+
+        // unflatten rank-0's reduced buffer back into grad tensors
+        let mut reduced: Vec<HostTensor> = Vec::with_capacity(self.n_params);
+        let mut off = 0usize;
+        for g in &grads_per_worker[0] {
+            let n = g.len();
+            reduced.push(HostTensor::from_f32(
+                g.shape().to_vec(),
+                buffers[0][off..off + n].to_vec(),
+            ));
+            off += n;
+        }
+
+        self.apply_reduced(reduced, lr)?;
+        Ok((loss_sum / workers as f64, metric_sum / workers as f64))
+    }
+
+    fn apply_reduced(&mut self, grads: Vec<HostTensor>, lr: f64) -> Result<()> {
+        let update = self.precond_update_now();
+        if let Some(native) = &mut self.native_opt {
+            // native mirror path
+            let mut mats: Vec<Matrix> = self
+                .params
+                .iter()
+                .map(|p| {
+                    let sh = p.shape();
+                    Matrix::from_vec(sh[0], sh.get(1).copied().unwrap_or(1), p.as_f32().unwrap().to_vec())
+                })
+                .collect();
+            let gmats: Vec<Matrix> = grads
+                .iter()
+                .map(|g| {
+                    let sh = g.shape();
+                    Matrix::from_vec(sh[0], sh.get(1).copied().unwrap_or(1), g.as_f32().unwrap().to_vec())
+                })
+                .collect();
+            native.step(
+                &mut mats,
+                &gmats,
+                StepCtx {
+                    lr: lr as f32,
+                    weight_decay: self.cfg.weight_decay as f32,
+                    update_precond: update,
+                },
+            );
+            for (p, m) in self.params.iter_mut().zip(mats) {
+                *p.as_f32_mut().unwrap() = m.data;
+            }
+            return Ok(());
+        }
+        let step = if update || self.apply_skip.is_none() {
+            self.apply_full.clone()
+        } else {
+            self.apply_skip.as_ref().unwrap().clone()
+        };
+        let mut inputs: Vec<HostTensor> =
+            Vec::with_capacity(2 * self.n_params + self.opt_state.len() + 2);
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(grads);
+        inputs.extend(self.opt_state.iter().cloned());
+        inputs.push(HostTensor::scalar_f32(lr as f32));
+        inputs.push(HostTensor::scalar_f32(self.cfg.weight_decay as f32));
+        let mut outputs = step.run(&inputs)?;
+        let state = outputs.split_off(self.n_params);
+        self.params = outputs;
+        self.opt_state = state;
+        Ok(())
+    }
+
+    /// Held-out evaluation: mean loss/metric over EVAL_BATCHES batches.
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
+        let meta = &self.engine.manifest.models[&self.cfg.model];
+        let eb = meta.eval_batch;
+        let mut loss = Summary::new();
+        let mut metric = Summary::new();
+        for k in 0..EVAL_BATCHES {
+            let base = self.cfg.dataset_size + k * eb;
+            let indices: Vec<usize> = (base..base + eb).collect();
+            let (x, y) = self.batch_tensors(&self.eval, &indices);
+            let mut inputs: Vec<HostTensor> = self.params.to_vec();
+            inputs.push(x);
+            inputs.push(y);
+            let out = self.eval.run(&inputs)?;
+            loss.add(out[0].scalar());
+            metric.add(out[1].scalar());
+        }
+        Ok((loss.mean(), metric.mean()))
+    }
+
+    /// Run the full training loop.
+    pub fn run(&mut self) -> Result<RunResult> {
+        let batch = self.engine.manifest.models[&self.cfg.model].batch;
+        let per_worker_batch = if self.cfg.workers > 1 {
+            // grad artifact batch == model batch; each worker consumes a
+            // full batch (weak scaling, like the paper's DDP runs)
+            batch
+        } else {
+            batch
+        };
+
+        let mut result = RunResult {
+            model: self.cfg.model.clone(),
+            optimizer: self.cfg.optimizer.clone(),
+            ..Default::default()
+        };
+        let sw = Stopwatch::new();
+        let mut iter_times = Summary::new();
+        let sharder = Sharder {
+            dataset_len: self.cfg.dataset_size,
+            workers: self.cfg.workers,
+            seed: self.cfg.seed ^ 0x5A4D,
+        };
+
+        'epochs: for epoch in 0..self.cfg.epochs {
+            let shards = sharder.epoch_shards(epoch);
+            let steps_this_epoch = (shards[0].len() / per_worker_batch)
+                .min(self.cfg.steps_per_epoch)
+                .max(1);
+            let mut ep_loss = Summary::new();
+            let mut ep_metric = Summary::new();
+            let mut lr_now = self.cfg.lr;
+
+            for si in 0..steps_this_epoch {
+                if self.global_step >= self.cfg.max_steps {
+                    break 'epochs;
+                }
+                lr_now = self.schedule.lr_at(self.global_step);
+                let t0 = std::time::Instant::now();
+                let (loss, metric) = if self.cfg.workers == 1 {
+                    let lo = si * per_worker_batch;
+                    self.fused_step(&shards[0][lo..lo + per_worker_batch], lr_now)?
+                } else {
+                    let worker_indices: Vec<Vec<usize>> = shards
+                        .iter()
+                        .map(|sh| {
+                            let lo = (si * per_worker_batch) % (sh.len() - per_worker_batch + 1);
+                            sh[lo..lo + per_worker_batch].to_vec()
+                        })
+                        .collect();
+                    self.data_parallel_step(&worker_indices, lr_now)?
+                };
+                iter_times.add(t0.elapsed().as_secs_f64());
+                self.global_step += 1;
+                ep_loss.add(loss);
+                ep_metric.add(metric);
+                result.step_losses.push(loss as f32);
+            }
+
+            let (val_loss, val_metric) = self.evaluate()?;
+            let rec = EpochRecord {
+                epoch,
+                lr: lr_now,
+                train_loss: ep_loss.mean(),
+                train_metric: ep_metric.mean(),
+                val_metric,
+                val_loss,
+                iter_time_s: iter_times.mean(),
+                wall_s: sw.total(),
+            };
+            if epoch % self.cfg.eval_every_epochs == 0 || epoch + 1 == self.cfg.epochs {
+                eprintln!(
+                    "[{} {}] epoch {epoch:>3} lr {:.4} loss {:.4} val {:.4} ({:.1}s)",
+                    self.cfg.model, self.cfg.optimizer, rec.lr, rec.train_loss, rec.val_metric, rec.wall_s
+                );
+            }
+            result.best_val_metric = result.best_val_metric.max(val_metric);
+            result.epochs.push(rec);
+            if self.cfg.target_metric > 0.0
+                && val_metric >= self.cfg.target_metric
+                && result.epochs_to_target.is_none()
+            {
+                result.epochs_to_target = Some(epoch + 1);
+                result.time_to_target_s = Some(sw.total());
+                break;
+            }
+        }
+
+        result.total_time_s = sw.total();
+        result.mean_iter_s = iter_times.mean();
+        result.final_val_metric = result.epochs.last().map(|e| e.val_metric).unwrap_or(0.0);
+        Ok(result)
+    }
+
+    /// Save params + optimizer state.
+    pub fn save_checkpoint(&self, path: &str) -> std::io::Result<()> {
+        let spec = &self.train_full.spec;
+        let mut named: Vec<(String, &HostTensor)> = Vec::new();
+        let mut pi = 0;
+        let mut si = 0;
+        for input in &spec.inputs {
+            match input.role {
+                Role::Param => {
+                    named.push((format!("param/{}", input.name), &self.params[pi]));
+                    pi += 1;
+                }
+                Role::State => {
+                    named.push((format!("state/{}", input.name), &self.opt_state[si]));
+                    si += 1;
+                }
+                _ => {}
+            }
+        }
+        super::checkpoint::save(path, &named)
+    }
+
+    /// Restore params + optimizer state from a checkpoint.
+    pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
+        let tensors = super::checkpoint::load(path)?;
+        let mut params = Vec::new();
+        let mut state = Vec::new();
+        for (name, t) in tensors {
+            if name.starts_with("param/") {
+                params.push(t);
+            } else if name.starts_with("state/") {
+                state.push(t);
+            }
+        }
+        if params.len() != self.params.len() || state.len() != self.opt_state.len() {
+            return Err(anyhow!(
+                "checkpoint mismatch: {}p/{}s vs expected {}p/{}s",
+                params.len(),
+                state.len(),
+                self.params.len(),
+                self.opt_state.len()
+            ));
+        }
+        for (a, b) in self.params.iter().zip(&params) {
+            if a.shape() != b.shape() {
+                return Err(anyhow!("checkpoint param shape mismatch"));
+            }
+        }
+        self.params = params;
+        self.opt_state = state;
+        Ok(())
+    }
+}

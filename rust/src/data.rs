@@ -1,0 +1,558 @@
+//! Synthetic datasets (substrate — DESIGN.md §3 substitution table).
+//!
+//! Each dataset is a deterministic function of (seed, sample index), so
+//! data-parallel sharding, shuffling and multi-trial reproducibility need
+//! no on-disk corpus. All four tasks are *learnable* — class structure is
+//! planted so the optimizer comparison (sample efficiency to a target
+//! metric) is meaningful:
+//!
+//! * `SynthImages`   — gaussian-mixture images/features (mlp + cnn slots)
+//! * `SynthSeg`      — per-pixel labels from a planted color->class rule
+//! * `MarkovTokens`  — order-1 Markov chain with peaked transitions (LM)
+
+use crate::rngx::Rng;
+
+/// One host-side batch, dtype-tagged to match the artifact input spec.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x_f32: Vec<f32>,
+    pub x_i32: Vec<i32>,
+    pub y: Vec<i32>,
+    pub batch_size: usize,
+}
+
+pub trait Dataset: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Floats per sample in x (0 if the input is integer tokens).
+    fn x_f32_len(&self) -> usize;
+    /// Ints per sample in x (0 if the input is float).
+    fn x_i32_len(&self) -> usize;
+    /// Labels per sample (1 for classification, H*W for segmentation,
+    /// seq_len for LM).
+    fn y_len(&self) -> usize;
+    /// Write sample `idx` into the provided slices.
+    fn sample(&self, idx: usize, x_f32: &mut [f32], x_i32: &mut [i32], y: &mut [i32]);
+
+    fn batch(&self, indices: &[usize]) -> Batch {
+        let b = indices.len();
+        let mut out = Batch {
+            x_f32: vec![0.0; b * self.x_f32_len()],
+            x_i32: vec![0; b * self.x_i32_len()],
+            y: vec![0; b * self.y_len()],
+            batch_size: b,
+        };
+        let (fx, ix, yl) = (self.x_f32_len(), self.x_i32_len(), self.y_len());
+        for (k, &idx) in indices.iter().enumerate() {
+            self.sample(
+                idx,
+                &mut out.x_f32[k * fx..(k + 1) * fx],
+                &mut out.x_i32[k * ix..(k + 1) * ix],
+                &mut out.y[k * yl..(k + 1) * yl],
+            );
+        }
+        out
+    }
+}
+
+/// Epoch iterator: shuffled indices, sharded round-robin across workers.
+pub struct Sharder {
+    pub dataset_len: usize,
+    pub workers: usize,
+    pub seed: u64,
+}
+
+impl Sharder {
+    /// Index lists per worker for `epoch`, all workers equal length
+    /// (remainder dropped, like DistributedSampler).
+    pub fn epoch_shards(&self, epoch: usize) -> Vec<Vec<usize>> {
+        let mut rng = Rng::new(self.seed ^ (epoch as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let perm = rng.permutation(self.dataset_len);
+        let per = self.dataset_len / self.workers;
+        (0..self.workers)
+            .map(|w| perm[w * per..(w + 1) * per].to_vec())
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gaussian-mixture images / features
+// ---------------------------------------------------------------------------
+
+pub struct SynthImages {
+    len: usize,
+    dims: usize,
+    classes: usize,
+    /// class means, planted with separation `sep`
+    means: Vec<f32>,
+    /// per-dimension scale factors (log-uniform). This plants the
+    /// *ill-conditioned* gradient covariance where second-order
+    /// preconditioning pays off — the regime the paper targets. The
+    /// Bayes-optimal accuracy is unchanged (the scaling is invertible).
+    dim_scales: Vec<f32>,
+    /// optional orthogonal mixing matrix (dims x dims, row-major). With
+    /// mixing, the planted anisotropy is *non-diagonal*, so per-coordinate
+    /// adaptivity (Adam) cannot undo it but full-matrix preconditioning
+    /// (Shampoo/Jorge) can — the regime where the paper's method shines.
+    mix: Option<Vec<f32>>,
+    noise: f32,
+    seed: u64,
+    name: &'static str,
+}
+
+impl SynthImages {
+    pub fn new_mlp(len: usize, seed: u64) -> Self {
+        // sep chosen so the Bayes-optimal accuracy is high but reaching it
+        // takes tens of epochs — the regime where sample-efficiency
+        // differences between optimizers are visible.
+        let mut s = Self::new(len, 128, 10, 0.32, 1.0, seed, "synth-mlp");
+        s.mix = Some(random_orthogonal(s.dims, seed ^ 0x0127A7E));
+        s
+    }
+
+    /// 32x32x3 images for the cnn (ResNet stand-in): smooth class
+    /// patterns + noise.
+    pub fn new_cnn(len: usize, seed: u64) -> Self {
+        let mut s = Self::new(len, 32 * 32 * 3, 10, 0.22, 1.0, seed, "synth-cifar");
+        // smooth the class means spatially so convs have local structure,
+        // then restore the planted separation (blur shrinks the std)
+        let dims = s.dims;
+        let sep = 0.20f32;
+        for c in 0..s.classes {
+            let mean = &mut s.means[c * dims..(c + 1) * dims];
+            smooth_hwc(mean, 32, 32, 3);
+            let std = (mean.iter().map(|v| v * v).sum::<f32>() / dims as f32).sqrt();
+            let k = sep / std.max(1e-6);
+            for v in mean.iter_mut() {
+                *v *= k;
+            }
+        }
+        // convs are translation-equivariant, so keep the planted
+        // ill-conditioning *spatially smooth*, milder than the mlp's, and
+        // normalised to geometric mean 1 (no global magnitude blow-up)
+        let mut rng = Rng::new(seed ^ 0x5CA1E);
+        for v in s.dim_scales.iter_mut() {
+            *v = 10f32.powf(rng.uniform_in(-0.6, 0.6));
+        }
+        smooth_hwc(&mut s.dim_scales, 32, 32, 3);
+        let log_mean =
+            s.dim_scales.iter().map(|v| v.ln()).sum::<f32>() / s.dim_scales.len() as f32;
+        let norm = (-log_mean).exp();
+        for v in s.dim_scales.iter_mut() {
+            *v *= norm;
+        }
+        s
+    }
+
+    fn new(
+        len: usize,
+        dims: usize,
+        classes: usize,
+        sep: f32,
+        noise: f32,
+        seed: u64,
+        name: &'static str,
+    ) -> Self {
+        let mut rng = Rng::new(seed ^ 0xDA7A);
+        let mut means = vec![0.0f32; classes * dims];
+        rng.fill_normal(&mut means, 0.0, sep);
+        // condition number ~ 10^2.4 across feature dimensions
+        let dim_scales: Vec<f32> = (0..dims)
+            .map(|_| 10f32.powf(rng.uniform_in(-1.2, 1.2)))
+            .collect();
+        SynthImages { len, dims, classes, means, dim_scales, mix: None, noise, seed, name }
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+}
+
+/// Random orthogonal matrix via modified Gram-Schmidt on a gaussian.
+fn random_orthogonal(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut q = vec![0.0f32; n * n];
+    rng.fill_normal(&mut q, 0.0, 1.0);
+    for i in 0..n {
+        for j in 0..i {
+            let dot: f32 = (0..n).map(|k| q[i * n + k] * q[j * n + k]).sum();
+            for k in 0..n {
+                q[i * n + k] -= dot * q[j * n + k];
+            }
+        }
+        let norm: f32 = (0..n).map(|k| q[i * n + k] * q[i * n + k]).sum::<f32>().sqrt();
+        let inv = 1.0 / norm.max(1e-12);
+        for k in 0..n {
+            q[i * n + k] *= inv;
+        }
+    }
+    q
+}
+
+fn smooth_hwc(data: &mut [f32], h: usize, w: usize, c: usize) {
+    // 3x3 box blur, two passes
+    for _ in 0..2 {
+        let src = data.to_vec();
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..c {
+                    let mut acc = 0.0;
+                    let mut cnt = 0.0;
+                    for dy in -1i64..=1 {
+                        for dx in -1i64..=1 {
+                            let (ny, nx) = (y as i64 + dy, x as i64 + dx);
+                            if (0..h as i64).contains(&ny) && (0..w as i64).contains(&nx) {
+                                acc += src[(ny as usize * w + nx as usize) * c + ch];
+                                cnt += 1.0;
+                            }
+                        }
+                    }
+                    data[(y * w + x) * c + ch] = acc / cnt;
+                }
+            }
+        }
+    }
+}
+
+impl Dataset for SynthImages {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+    fn len(&self) -> usize {
+        self.len
+    }
+    fn x_f32_len(&self) -> usize {
+        self.dims
+    }
+    fn x_i32_len(&self) -> usize {
+        0
+    }
+    fn y_len(&self) -> usize {
+        1
+    }
+
+    fn sample(&self, idx: usize, x_f32: &mut [f32], _x_i32: &mut [i32], y: &mut [i32]) {
+        let mut rng = Rng::new(self.seed ^ (idx as u64).wrapping_mul(0x2545F4914F6CDD1D));
+        let class = (idx % self.classes) as i32; // balanced classes
+        let mean = &self.means[class as usize * self.dims..(class as usize + 1) * self.dims];
+        for ((o, &m), &s) in x_f32.iter_mut().zip(mean).zip(&self.dim_scales) {
+            *o = s * (m + rng.normal_f32(0.0, self.noise));
+        }
+        if let Some(q) = &self.mix {
+            // x <- Q x (orthogonal mixing)
+            let d = self.dims;
+            let mut out = vec![0.0f32; d];
+            for (i, o) in out.iter_mut().enumerate() {
+                let row = &q[i * d..(i + 1) * d];
+                *o = row.iter().zip(x_f32.iter()).map(|(a, b)| a * b).sum();
+            }
+            x_f32.copy_from_slice(&out);
+        }
+        y[0] = class;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic segmentation
+// ---------------------------------------------------------------------------
+
+pub struct SynthSeg {
+    len: usize,
+    hw: usize,
+    classes: usize,
+    /// planted pixel-color -> class projection (classes x 3)
+    proj: Vec<f32>,
+    seed: u64,
+}
+
+impl SynthSeg {
+    pub fn new(len: usize, seed: u64) -> Self {
+        let classes = 8;
+        let mut rng = Rng::new(seed ^ 0x5E6);
+        let mut proj = vec![0.0f32; classes * 3];
+        rng.fill_normal(&mut proj, 0.0, 1.0);
+        SynthSeg { len, hw: 16, classes, proj, seed }
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+}
+
+impl Dataset for SynthSeg {
+    fn name(&self) -> &'static str {
+        "synth-seg"
+    }
+    fn len(&self) -> usize {
+        self.len
+    }
+    fn x_f32_len(&self) -> usize {
+        self.hw * self.hw * 3
+    }
+    fn x_i32_len(&self) -> usize {
+        0
+    }
+    fn y_len(&self) -> usize {
+        self.hw * self.hw
+    }
+
+    fn sample(&self, idx: usize, x_f32: &mut [f32], _x_i32: &mut [i32], y: &mut [i32]) {
+        let mut rng = Rng::new(self.seed ^ (idx as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        // smooth random image: low-frequency sin blobs + noise
+        let (fx, fy, ph) = (
+            rng.uniform_in(0.2, 0.8),
+            rng.uniform_in(0.2, 0.8),
+            rng.uniform_in(0.0, 6.28),
+        );
+        for py in 0..self.hw {
+            for px in 0..self.hw {
+                let base = ((px as f32 * fx + py as f32 * fy) * 0.7 + ph).sin();
+                let p = (py * self.hw + px) * 3;
+                for ch in 0..3 {
+                    x_f32[p + ch] = base * (1.0 + ch as f32 * 0.5)
+                        + rng.normal_f32(0.0, 0.25);
+                }
+                // label = argmax_c proj_c . color  (pointwise-learnable)
+                let mut best = 0usize;
+                let mut best_v = f32::NEG_INFINITY;
+                for c in 0..self.classes {
+                    let v = (0..3)
+                        .map(|ch| self.proj[c * 3 + ch] * x_f32[p + ch])
+                        .sum::<f32>();
+                    if v > best_v {
+                        best_v = v;
+                        best = c;
+                    }
+                }
+                y[py * self.hw + px] = best as i32;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Markov token stream (transformer LM)
+// ---------------------------------------------------------------------------
+
+pub struct MarkovTokens {
+    len: usize,
+    vocab: usize,
+    seq: usize,
+    /// per token: 4 likely successors
+    successors: Vec<[u32; 4]>,
+    seed: u64,
+}
+
+impl MarkovTokens {
+    pub fn new(len: usize, seed: u64) -> Self {
+        let vocab = 512;
+        let mut rng = Rng::new(seed ^ 0x70CE75);
+        let successors = (0..vocab)
+            .map(|_| {
+                [
+                    rng.below(vocab as u64) as u32,
+                    rng.below(vocab as u64) as u32,
+                    rng.below(vocab as u64) as u32,
+                    rng.below(vocab as u64) as u32,
+                ]
+            })
+            .collect();
+        MarkovTokens { len, vocab, seq: 64, successors, seed }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+}
+
+impl Dataset for MarkovTokens {
+    fn name(&self) -> &'static str {
+        "markov-lm"
+    }
+    fn len(&self) -> usize {
+        self.len
+    }
+    fn x_f32_len(&self) -> usize {
+        0
+    }
+    fn x_i32_len(&self) -> usize {
+        self.seq
+    }
+    fn y_len(&self) -> usize {
+        self.seq
+    }
+
+    fn sample(&self, idx: usize, _x_f32: &mut [f32], x_i32: &mut [i32], y: &mut [i32]) {
+        let mut rng = Rng::new(self.seed ^ (idx as u64).wrapping_mul(0xD1B54A32D192ED03));
+        let mut tok = rng.below(self.vocab as u64) as u32;
+        for t in 0..self.seq {
+            x_i32[t] = tok as i32;
+            // 90%: one of the 4 planted successors; 10%: uniform noise
+            let next = if rng.uniform() < 0.9 {
+                self.successors[tok as usize][rng.below(4) as usize]
+            } else {
+                rng.below(self.vocab as u64) as u32
+            };
+            y[t] = next as i32;
+            tok = next;
+        }
+    }
+}
+
+/// Build the dataset matching a model name (shapes match the manifest).
+pub fn for_model(model: &str, len: usize, seed: u64) -> Result<Box<dyn Dataset>, String> {
+    match model {
+        "mlp" => Ok(Box::new(SynthImages::new_mlp(len, seed))),
+        "cnn" => Ok(Box::new(SynthImages::new_cnn(len, seed))),
+        "segnet" => Ok(Box::new(SynthSeg::new(len, seed))),
+        "transformer" => Ok(Box::new(MarkovTokens::new(len, seed))),
+        other => Err(format!("no dataset for model {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_are_deterministic() {
+        let d = SynthImages::new_mlp(100, 7);
+        let b1 = d.batch(&[3, 14, 15]);
+        let b2 = d.batch(&[3, 14, 15]);
+        assert_eq!(b1.x_f32, b2.x_f32);
+        assert_eq!(b1.y, b2.y);
+    }
+
+    #[test]
+    fn classes_are_balanced_and_separable() {
+        let d = SynthImages::new_mlp(1000, 1);
+        let idx: Vec<usize> = (0..200).collect();
+        let b = d.batch(&idx);
+        // balanced
+        let mut counts = [0usize; 10];
+        for &y in &b.y {
+            counts[y as usize] += 1;
+        }
+        for c in counts {
+            assert_eq!(c, 20);
+        }
+        // nearest-class-mean classifier should beat chance easily
+        let dims = d.x_f32_len();
+        let q = d.mix.as_ref().unwrap();
+        let mut correct = 0;
+        for k in 0..200 {
+            let mixed = &b.x_f32[k * dims..(k + 1) * dims];
+            // undo the orthogonal mixing: x = Q^T mixed
+            let x: Vec<f32> = (0..dims)
+                .map(|j| (0..dims).map(|i| q[i * dims + j] * mixed[i]).sum())
+                .collect();
+            let x = &x[..];
+            let mut best = 0;
+            let mut best_d = f32::INFINITY;
+            for c in 0..10 {
+                let m = &d.means[c * dims..(c + 1) * dims];
+                // whitened nearest-mean (undo the planted dim scaling)
+                let dist: f32 = x
+                    .iter()
+                    .zip(m)
+                    .zip(&d.dim_scales)
+                    .map(|((a, b), s)| {
+                        let w = a / s - b;
+                        w * w
+                    })
+                    .sum();
+                if dist < best_d {
+                    best_d = dist;
+                    best = c;
+                }
+            }
+            if best as i32 == b.y[k] {
+                correct += 1;
+            }
+        }
+        assert!(correct > 150, "separability too low: {correct}/200");
+    }
+
+    #[test]
+    fn seg_labels_in_range_and_learnable_rule() {
+        let d = SynthSeg::new(100, 2);
+        let b = d.batch(&[0, 1, 2]);
+        assert_eq!(b.y.len(), 3 * 256);
+        for &y in &b.y {
+            assert!((0..8).contains(&y));
+        }
+        // multiple classes present
+        let distinct: std::collections::BTreeSet<i32> = b.y.iter().cloned().collect();
+        assert!(distinct.len() >= 3, "degenerate segmentation labels");
+    }
+
+    #[test]
+    fn markov_tokens_shift_property() {
+        let d = MarkovTokens::new(10, 3);
+        let b = d.batch(&[5]);
+        // y[t] == x[t+1] by construction
+        for t in 0..63 {
+            assert_eq!(b.y[t], b.x_i32[t + 1]);
+        }
+        for &t in &b.x_i32 {
+            assert!((0..512).contains(&t));
+        }
+    }
+
+    #[test]
+    fn markov_transitions_are_predictable() {
+        let d = MarkovTokens::new(1000, 4);
+        // empirical: >70% of steps use a planted successor
+        let idx: Vec<usize> = (0..50).collect();
+        let b = d.batch(&idx);
+        let mut planted = 0;
+        let mut total = 0;
+        for k in 0..50 {
+            for t in 0..64 {
+                let cur = b.x_i32[k * 64 + t] as usize;
+                let nxt = b.y[k * 64 + t] as u32;
+                total += 1;
+                if d.successors[cur].contains(&nxt) {
+                    planted += 1;
+                }
+            }
+        }
+        assert!(planted as f64 / total as f64 > 0.7);
+    }
+
+    #[test]
+    fn sharder_shards_are_disjoint_equal_and_cover() {
+        let s = Sharder { dataset_len: 100, workers: 4, seed: 1 };
+        let shards = s.epoch_shards(0);
+        assert_eq!(shards.len(), 4);
+        let mut all: Vec<usize> = shards.iter().flatten().cloned().collect();
+        assert_eq!(all.len(), 100);
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), 100);
+        for sh in &shards {
+            assert_eq!(sh.len(), 25);
+        }
+        // different epochs shuffle differently
+        let shards1 = s.epoch_shards(1);
+        assert_ne!(shards[0], shards1[0]);
+        // same epoch is reproducible
+        assert_eq!(shards1, s.epoch_shards(1));
+    }
+
+    #[test]
+    fn for_model_builds_matching_shapes() {
+        let m = for_model("mlp", 10, 0).unwrap();
+        assert_eq!(m.x_f32_len(), 128);
+        let c = for_model("cnn", 10, 0).unwrap();
+        assert_eq!(c.x_f32_len(), 32 * 32 * 3);
+        let s = for_model("segnet", 10, 0).unwrap();
+        assert_eq!((s.x_f32_len(), s.y_len()), (768, 256));
+        let t = for_model("transformer", 10, 0).unwrap();
+        assert_eq!((t.x_i32_len(), t.y_len()), (64, 64));
+        assert!(for_model("nope", 10, 0).is_err());
+    }
+}

@@ -1,0 +1,33 @@
+//! # Jorge — approximate preconditioning for GPU-efficient second-order optimization
+//!
+//! Full-stack reproduction of Singh, Sating & Bhatele (2023). Three layers:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the inverse-free
+//!   Jorge preconditioner update as tiled GEMMs (build time only).
+//! * **L2** — JAX models + optimizers (`python/compile/`): fused train
+//!   steps AOT-lowered to HLO-text artifacts.
+//! * **L3** — this crate: the training coordinator. Loads the artifacts
+//!   through PJRT (`runtime`), schedules preconditioner updates, drives
+//!   data-parallel workers with simulated collectives (`coordinator`,
+//!   `collectives`), and regenerates every table/figure of the paper's
+//!   evaluation (`benches/`, `perfmodel`).
+//!
+//! Native mirrors of all four optimizers live in [`optim`] and are
+//! cross-validated against the HLO artifacts in the integration tests.
+
+pub mod benchrun;
+pub mod benchx;
+pub mod checkers;
+pub mod cli;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod jsonio;
+pub mod metricsio;
+pub mod models;
+pub mod optim;
+pub mod perfmodel;
+pub mod rngx;
+pub mod runtime;
+pub mod tensor;

@@ -1,0 +1,317 @@
+//! `jorge` — leader entrypoint / CLI for the training coordinator.
+//!
+//! Subcommands:
+//!   train          run a training job (config file + flag overrides)
+//!   eval           evaluate a checkpoint
+//!   bench-iter     per-iteration optimizer timing on paper inventories
+//!   perf-model     print projected A100 iteration times (Table 1 scale)
+//!   memory-report  optimizer state accounting (App. A.6)
+//!   inspect        list artifacts in the manifest
+
+use anyhow::{anyhow, Result};
+use jorge::benchx::Table;
+use jorge::cli::{flag, switch, Args, FlagSpec};
+use jorge::collectives::CommCostModel;
+use jorge::config::{Toml, TrainConfig};
+use jorge::coordinator::Trainer;
+use jorge::models;
+use jorge::optim::memory::{ratio_vs_adam, state_bytes, OptKind};
+use jorge::perfmodel::{project_dist_shampoo_iteration, project_iteration, GpuModel};
+use jorge::runtime::Engine;
+use std::sync::Arc;
+
+fn flag_spec() -> Vec<FlagSpec> {
+    vec![
+        flag("config", "path to a TOML run config"),
+        flag("model", "mlp | cnn | segnet | transformer"),
+        flag("optimizer", "sgd | adamw | shampoo | jorge"),
+        flag("epochs", "training epochs"),
+        flag("steps-per-epoch", "steps per epoch"),
+        flag("lr", "base learning rate"),
+        flag("weight-decay", "weight decay"),
+        flag("schedule", "constant | step | cosine | poly"),
+        flag("precond-every", "preconditioner update interval (steps)"),
+        flag("workers", "simulated data-parallel workers"),
+        flag("seed", "random seed"),
+        flag("target-metric", "stop when validation metric reaches this"),
+        flag("dataset-size", "synthetic dataset size"),
+        flag("artifacts", "artifacts directory (default: artifacts)"),
+        flag("out", "output directory for CSV metrics"),
+        flag("checkpoint", "checkpoint path to save (train) / load (eval)"),
+        flag("max-steps", "hard cap on optimizer steps"),
+        switch("native", "apply optimizer via native mirrors (workers > 1)"),
+        switch("help", "print help"),
+    ]
+}
+
+const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("train", "run a training job"),
+    ("eval", "evaluate a checkpoint on held-out data"),
+    ("bench-iter", "measured per-iteration optimizer cost (native mirrors)"),
+    ("perf-model", "projected A100 iteration times (Table 1 scale)"),
+    ("memory-report", "optimizer state accounting (App. A.6)"),
+    ("inspect", "list artifacts in the manifest"),
+];
+
+fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<()> {
+    if let Some(v) = args.get("model") {
+        cfg.model = v.into();
+    }
+    if let Some(v) = args.get("optimizer") {
+        cfg.optimizer = v.into();
+    }
+    if let Some(v) = args.get_usize("epochs").map_err(|e| anyhow!(e))? {
+        cfg.epochs = v;
+    }
+    if let Some(v) = args.get_usize("steps-per-epoch").map_err(|e| anyhow!(e))? {
+        cfg.steps_per_epoch = v;
+    }
+    if let Some(v) = args.get_f64("lr").map_err(|e| anyhow!(e))? {
+        cfg.lr = v;
+    }
+    if let Some(v) = args.get_f64("weight-decay").map_err(|e| anyhow!(e))? {
+        cfg.weight_decay = v;
+    }
+    if let Some(v) = args.get("schedule") {
+        cfg.schedule = jorge::config::ScheduleKind::parse(v).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(v) = args.get_usize("precond-every").map_err(|e| anyhow!(e))? {
+        cfg.precond_every = v;
+    }
+    if let Some(v) = args.get_usize("workers").map_err(|e| anyhow!(e))? {
+        cfg.workers = v;
+    }
+    if let Some(v) = args.get_usize("seed").map_err(|e| anyhow!(e))? {
+        cfg.seed = v as u64;
+    }
+    if let Some(v) = args.get_f64("target-metric").map_err(|e| anyhow!(e))? {
+        cfg.target_metric = v;
+    }
+    if let Some(v) = args.get_usize("dataset-size").map_err(|e| anyhow!(e))? {
+        cfg.dataset_size = v;
+    }
+    if let Some(v) = args.get("artifacts") {
+        cfg.artifacts_dir = v.into();
+    }
+    if let Some(v) = args.get("out") {
+        cfg.out_dir = v.into();
+    }
+    if let Some(v) = args.get_usize("max-steps").map_err(|e| anyhow!(e))? {
+        cfg.max_steps = v;
+    }
+    if args.has("native") {
+        cfg.native = true;
+    }
+    cfg.validate().map_err(|e| anyhow!(e))
+}
+
+fn load_config(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            TrainConfig::from_toml(&Toml::parse(&text).map_err(|e| anyhow!(e))?)
+                .map_err(|e| anyhow!(e))?
+        }
+        None => TrainConfig::default(),
+    };
+    apply_overrides(&mut cfg, args)?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let engine = Arc::new(Engine::new(&cfg.artifacts_dir)?);
+    eprintln!(
+        "jorge train: model={} opt={} workers={} precond_every={} schedule={} (pjrt: {})",
+        cfg.model,
+        cfg.optimizer,
+        cfg.workers,
+        cfg.precond_every,
+        cfg.schedule.name(),
+        engine.platform()
+    );
+    let out_dir = cfg.out_dir.clone();
+    let tag = format!("{}_{}_s{}", cfg.model, cfg.optimizer, cfg.seed);
+    let mut trainer = Trainer::new(cfg, engine)?;
+    let result = trainer.run()?;
+    let csv = format!("{out_dir}/{tag}.csv");
+    result.write_csv(&csv)?;
+    if let Some(path) = args.get("checkpoint") {
+        trainer.save_checkpoint(path)?;
+        eprintln!("checkpoint saved to {path}");
+    }
+    println!(
+        "done: best_val={:.4} final_val={:.4} mean_iter={:.4}s total={:.1}s epochs_to_target={:?} (csv: {csv})",
+        result.best_val_metric,
+        result.final_val_metric,
+        result.mean_iter_s,
+        result.total_time_s,
+        result.epochs_to_target,
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let engine = Arc::new(Engine::new(&cfg.artifacts_dir)?);
+    let mut trainer = Trainer::new(cfg, engine)?;
+    if let Some(path) = args.get("checkpoint") {
+        trainer.load_checkpoint(path)?;
+    }
+    let (loss, metric) = trainer.evaluate()?;
+    println!("eval: loss={loss:.4} metric={metric:.4}");
+    Ok(())
+}
+
+fn cmd_bench_iter(_args: &Args) -> Result<()> {
+    use jorge::optim::{build, Hyper, StepCtx};
+    use jorge::rngx::Rng;
+    use jorge::tensor::Matrix;
+
+    let mut table = Table::new(
+        "Measured optimizer step time (native mirrors, this host)",
+        &["network", "optimizer", "precond_every", "ms/iter"],
+    );
+    for net_name in ["resnet18", "resnet50"] {
+        let net = models::by_name(net_name).unwrap().blocked(256);
+        let shapes: Vec<(usize, usize)> = net.layers.iter().map(|l| (l.m, l.n)).collect();
+        let mut rng = Rng::new(0);
+        let grads: Vec<Matrix> = shapes
+            .iter()
+            .map(|&(m, n)| Matrix::randn(m, n, 0.01, &mut rng))
+            .collect();
+        for opt_name in ["sgd", "adamw", "jorge", "shampoo"] {
+            let every = 50usize;
+            let mut params: Vec<Matrix> = shapes
+                .iter()
+                .map(|&(m, n)| Matrix::randn(m, n, 0.1, &mut rng))
+                .collect();
+            let mut opt = build(opt_name, &shapes, Hyper::default()).unwrap();
+            let mut step_i = 0usize;
+            let r = jorge::benchx::bench_n(opt_name, 3, || {
+                let ctx = StepCtx {
+                    lr: 0.1,
+                    weight_decay: 1e-4,
+                    update_precond: step_i % every == 0,
+                };
+                opt.step(&mut params, &grads, ctx);
+                step_i += 1;
+            });
+            table.row(&[
+                net_name.to_string(),
+                opt_name.to_string(),
+                every.to_string(),
+                format!("{:.2}", r.mean_s * 1e3),
+            ]);
+        }
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_perf_model(_args: &Args) -> Result<()> {
+    let gpu = GpuModel::a100();
+    let comm = CommCostModel::nvlink_a100();
+    let mut table = Table::new(
+        "Projected A100 per-iteration time (paper Table 1 setting)",
+        &["network", "gpus", "optimizer", "s/iter", "vs sgd"],
+    );
+    for (net_name, anchor, gpus) in [("resnet50", 0.085f64, 16usize), ("deeplabv3", 0.32, 4)] {
+        let net = models::by_name(net_name).unwrap().blocked(1024);
+        let sgd = project_iteration(&gpu, &comm, &net, OptKind::Sgd, 50, anchor, gpus).total();
+        for opt in [OptKind::Sgd, OptKind::AdamW, OptKind::Jorge, OptKind::Shampoo] {
+            let t = project_iteration(&gpu, &comm, &net, opt, 50, anchor, gpus).total();
+            table.row(&[
+                net_name.into(),
+                gpus.to_string(),
+                opt.name().into(),
+                format!("{t:.3}"),
+                format!("{:.2}x", t / sgd),
+            ]);
+        }
+        let dist = project_dist_shampoo_iteration(&gpu, &comm, &net, 50, anchor, gpus).total();
+        table.row(&[
+            net_name.into(),
+            gpus.to_string(),
+            "dist-shampoo".into(),
+            format!("{dist:.3}"),
+            format!("{:.2}x", dist / sgd),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_memory_report(_args: &Args) -> Result<()> {
+    let mut table = Table::new(
+        "Optimizer state memory (App. A.6)",
+        &["network", "optimizer", "state MB", "vs adam"],
+    );
+    for net_name in ["resnet18", "resnet50", "deeplabv3", "maskrcnn"] {
+        let net = models::by_name(net_name).unwrap().blocked(1024);
+        for (opt, grafting) in [
+            (OptKind::Sgd, false),
+            (OptKind::AdamW, false),
+            (OptKind::Jorge, true),
+            (OptKind::Shampoo, true),
+        ] {
+            table.row(&[
+                net_name.into(),
+                opt.name().into(),
+                format!("{:.1}", state_bytes(&net, opt, grafting) as f64 / 1e6),
+                format!("{:.2}x", ratio_vs_adam(&net, opt, grafting)),
+            ]);
+        }
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let engine = Engine::new(&dir)?;
+    let mut table = Table::new(
+        &format!("Artifacts in {dir} (pjrt: {})", engine.platform()),
+        &["name", "kind", "model", "inputs", "outputs"],
+    );
+    for (name, art) in &engine.manifest.artifacts {
+        table.row(&[
+            name.clone(),
+            art.kind.clone(),
+            art.model.clone().unwrap_or_default(),
+            art.inputs.len().to_string(),
+            art.outputs.len().to_string(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let spec = flag_spec();
+    let args = match Args::parse(&argv, &spec) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.has("help") || args.subcommand.is_empty() {
+        print!("{}", jorge::cli::render_help("jorge", SUBCOMMANDS, &spec));
+        return;
+    }
+    let result = match args.subcommand.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "bench-iter" => cmd_bench_iter(&args),
+        "perf-model" => cmd_perf_model(&args),
+        "memory-report" => cmd_memory_report(&args),
+        "inspect" => cmd_inspect(&args),
+        other => Err(anyhow!("unknown subcommand {other:?} (try --help)")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

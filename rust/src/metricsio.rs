@@ -1,0 +1,234 @@
+//! Metrics logging: CSV series + JSONL event streams + summary stats
+//! (substrate — replaces the metrics half of a criterion dependency).
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Append-only CSV writer with a fixed header.
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    columns: usize,
+    pub path: PathBuf,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> std::io::Result<CsvWriter> {
+        if let Some(parent) = path.as_ref().parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let f = File::create(&path)?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvWriter { w, columns: header.len(), path: path.as_ref().to_path_buf() })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> std::io::Result<()> {
+        assert_eq!(values.len(), self.columns, "csv row width mismatch");
+        let line: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.w, "{}", line.join(","))
+    }
+
+    pub fn row_mixed(&mut self, values: &[String]) -> std::io::Result<()> {
+        assert_eq!(values.len(), self.columns, "csv row width mismatch");
+        writeln!(self.w, "{}", values.join(","))
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+/// Wall-clock stopwatch with split support.
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Stopwatch { start: now, last: now }
+    }
+
+    /// Seconds since construction.
+    pub fn total(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Seconds since the previous split.
+    pub fn split(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        dt
+    }
+}
+
+/// Online summary statistics (Welford) + percentile snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    mean: f64,
+    m2: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+        let n = self.samples.len() as f64;
+        let d = x - self.mean;
+        self.mean += d / n;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        (self.m2 / (self.samples.len() as f64 - 1.0)).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+}
+
+/// JSONL event logger for structured run records.
+pub struct JsonlWriter {
+    w: BufWriter<File>,
+    pub path: PathBuf,
+}
+
+impl JsonlWriter {
+    pub fn create(path: impl AsRef<Path>) -> std::io::Result<JsonlWriter> {
+        if let Some(parent) = path.as_ref().parent() {
+            fs::create_dir_all(parent)?;
+        }
+        Ok(JsonlWriter {
+            w: BufWriter::new(File::create(&path)?),
+            path: path.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn write(&mut self, v: &crate::jsonio::Json) -> std::io::Result<()> {
+        writeln!(self.w, "{}", v.to_string_compact())
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonio::Json;
+    use std::collections::BTreeMap;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("jorge_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn csv_writes_rows() {
+        let path = tmp("m.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["step", "loss"]).unwrap();
+            w.row(&[1.0, 0.5]).unwrap();
+            w.row(&[2.0, 0.25]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("step,loss\n"));
+        fs::remove_file(path).ok();
+    }
+
+    #[test]
+    #[should_panic]
+    fn csv_rejects_wrong_width() {
+        let path = tmp("bad.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        let _ = w.row(&[1.0]);
+    }
+
+    #[test]
+    fn summary_stats() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 5);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert!((s.std() - (2.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let path = tmp("ev.jsonl");
+        {
+            let mut w = JsonlWriter::create(&path).unwrap();
+            let mut m = BTreeMap::new();
+            m.insert("step".to_string(), Json::Num(3.0));
+            w.write(&Json::Obj(m)).unwrap();
+            w.flush().unwrap();
+        }
+        let text = fs::read_to_string(&path).unwrap();
+        let v = Json::parse(text.trim()).unwrap();
+        assert_eq!(v.get("step").unwrap().as_f64(), Some(3.0));
+        fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let mut sw = Stopwatch::new();
+        let a = sw.split();
+        let b = sw.split();
+        assert!(a >= 0.0 && b >= 0.0);
+        assert!(sw.total() >= a + b - 1e-6);
+    }
+}

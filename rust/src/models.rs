@@ -1,0 +1,272 @@
+//! Parameter-shape inventories of the paper's networks.
+//!
+//! Table 1 / Table 4 / Fig 2 / App A.6 depend only on the *shapes* of the
+//! preconditioned parameter matrices (every N-D tensor collapsed to 2-D,
+//! §3 of the paper), not on trained weights. These inventories reproduce
+//! the torchvision architectures' layer lists so the Rust benches can run
+//! the optimizer math over the exact op mix of ResNet-50, ResNet-18,
+//! DeepLabv3-R50 and Mask-RCNN-R50, and the perf model can project to
+//! A100-scale numbers.
+
+/// One 2-D-collapsed parameter matrix.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerShape {
+    pub name: String,
+    pub m: usize,
+    pub n: usize,
+}
+
+impl LayerShape {
+    pub fn new(name: impl Into<String>, m: usize, n: usize) -> Self {
+        LayerShape { name: name.into(), m, n }
+    }
+
+    pub fn params(&self) -> usize {
+        self.m * self.n
+    }
+
+    /// Shampoo/Jorge precondition layers with both dims > 1.
+    pub fn preconditioned(&self) -> bool {
+        self.m > 1 && self.n > 1
+    }
+}
+
+/// A named network = list of collapsed parameter matrices.
+#[derive(Clone, Debug)]
+pub struct NetworkInventory {
+    pub name: String,
+    pub layers: Vec<LayerShape>,
+}
+
+impl NetworkInventory {
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    /// Split oversized preconditioner dimensions into blocks of at most
+    /// `max_dim`, the standard Shampoo blocking trick (Anil et al. 2021;
+    /// Shi et al. 2023 default 1024/8192): a layer (m, n) with m > max_dim
+    /// becomes ceil(m/max_dim) row-chunks treated as independent layers.
+    pub fn blocked(&self, max_dim: usize) -> NetworkInventory {
+        let mut layers = Vec::new();
+        for l in &self.layers {
+            if !l.preconditioned() || (l.m <= max_dim && l.n <= max_dim) {
+                layers.push(l.clone());
+                continue;
+            }
+            let mb = l.m.div_ceil(max_dim);
+            let nb = l.n.div_ceil(max_dim);
+            for i in 0..mb {
+                for j in 0..nb {
+                    let m = (l.m - i * max_dim).min(max_dim);
+                    let n = (l.n - j * max_dim).min(max_dim);
+                    layers.push(LayerShape::new(format!("{}.blk{}_{}", l.name, i, j), m, n));
+                }
+            }
+        }
+        NetworkInventory { name: format!("{}(blk{})", self.name, max_dim), layers }
+    }
+}
+
+fn conv(name: &str, kh: usize, kw: usize, cin: usize, cout: usize) -> LayerShape {
+    LayerShape::new(name, kh * kw * cin, cout)
+}
+
+fn bias(name: &str, n: usize) -> LayerShape {
+    LayerShape::new(name, n, 1)
+}
+
+/// ResNet-18 (basic blocks): torchvision layout, BN folded out (BN scale
+/// and bias are 1-D — unpreconditioned).
+pub fn resnet18() -> NetworkInventory {
+    let mut layers = vec![conv("conv1", 7, 7, 3, 64), bias("bn1", 64)];
+    // (stage, blocks, channels)
+    let stages = [(1usize, 2usize, 64usize), (2, 2, 128), (3, 2, 256), (4, 2, 512)];
+    let mut cin = 64;
+    for (s, blocks, ch) in stages {
+        for b in 0..blocks {
+            let in_ch = if b == 0 { cin } else { ch };
+            layers.push(conv(&format!("l{s}.b{b}.conv1"), 3, 3, in_ch, ch));
+            layers.push(bias(&format!("l{s}.b{b}.bn1"), ch));
+            layers.push(conv(&format!("l{s}.b{b}.conv2"), 3, 3, ch, ch));
+            layers.push(bias(&format!("l{s}.b{b}.bn2"), ch));
+            if b == 0 && in_ch != ch {
+                layers.push(conv(&format!("l{s}.b{b}.down"), 1, 1, in_ch, ch));
+            }
+        }
+        cin = ch;
+    }
+    layers.push(LayerShape::new("fc", 512, 1000));
+    layers.push(bias("fc.b", 1000));
+    NetworkInventory { name: "resnet18".into(), layers }
+}
+
+/// ResNet-50 (bottleneck blocks), the paper's main benchmark backbone.
+pub fn resnet50() -> NetworkInventory {
+    let mut layers = vec![conv("conv1", 7, 7, 3, 64), bias("bn1", 64)];
+    // (stage, blocks, mid, out)
+    let stages = [
+        (1usize, 3usize, 64usize, 256usize),
+        (2, 4, 128, 512),
+        (3, 6, 256, 1024),
+        (4, 3, 512, 2048),
+    ];
+    let mut cin = 64;
+    for (s, blocks, mid, out) in stages {
+        for b in 0..blocks {
+            let in_ch = if b == 0 { cin } else { out };
+            layers.push(conv(&format!("l{s}.b{b}.conv1"), 1, 1, in_ch, mid));
+            layers.push(bias(&format!("l{s}.b{b}.bn1"), mid));
+            layers.push(conv(&format!("l{s}.b{b}.conv2"), 3, 3, mid, mid));
+            layers.push(bias(&format!("l{s}.b{b}.bn2"), mid));
+            layers.push(conv(&format!("l{s}.b{b}.conv3"), 1, 1, mid, out));
+            layers.push(bias(&format!("l{s}.b{b}.bn3"), out));
+            if b == 0 {
+                layers.push(conv(&format!("l{s}.b{b}.down"), 1, 1, in_ch, out));
+            }
+        }
+        cin = out;
+    }
+    layers.push(LayerShape::new("fc", 2048, 1000));
+    layers.push(bias("fc.b", 1000));
+    NetworkInventory { name: "resnet50".into(), layers }
+}
+
+/// DeepLabv3 with ResNet-50 backbone: backbone + ASPP + classifier.
+pub fn deeplabv3_r50() -> NetworkInventory {
+    let mut inv = resnet50();
+    inv.name = "deeplabv3_r50".into();
+    // drop the imagenet fc head
+    inv.layers.retain(|l| !l.name.starts_with("fc"));
+    // ASPP over the 2048-channel feature map: 1x1 + three dilated 3x3 +
+    // image-pool branch, all to 256 channels
+    inv.layers.push(conv("aspp.c0", 1, 1, 2048, 256));
+    for (i, _rate) in [12usize, 24, 36].iter().enumerate() {
+        inv.layers.push(conv(&format!("aspp.c{}", i + 1), 3, 3, 2048, 256));
+    }
+    inv.layers.push(conv("aspp.pool", 1, 1, 2048, 256));
+    inv.layers.push(conv("aspp.project", 1, 1, 5 * 256, 256));
+    inv.layers.push(conv("head.conv", 3, 3, 256, 256));
+    inv.layers.push(conv("head.cls", 1, 1, 256, 21));
+    inv.layers.push(bias("head.cls.b", 21));
+    inv
+}
+
+/// Mask-RCNN with ResNet-50-FPN backbone (torchvision maskrcnn_resnet50_fpn).
+pub fn maskrcnn_r50() -> NetworkInventory {
+    let mut inv = resnet50();
+    inv.name = "maskrcnn_r50".into();
+    inv.layers.retain(|l| !l.name.starts_with("fc"));
+    // FPN: lateral 1x1 from each stage + 3x3 output convs
+    for (i, ch) in [256usize, 512, 1024, 2048].iter().enumerate() {
+        inv.layers.push(conv(&format!("fpn.lat{i}"), 1, 1, *ch, 256));
+        inv.layers.push(conv(&format!("fpn.out{i}"), 3, 3, 256, 256));
+    }
+    // RPN head
+    inv.layers.push(conv("rpn.conv", 3, 3, 256, 256));
+    inv.layers.push(conv("rpn.cls", 1, 1, 256, 3));
+    inv.layers.push(conv("rpn.bbox", 1, 1, 256, 12));
+    // box head: two FC layers over 256x7x7 ROI features
+    inv.layers.push(LayerShape::new("box.fc1", 256 * 7 * 7, 1024));
+    inv.layers.push(bias("box.fc1.b", 1024));
+    inv.layers.push(LayerShape::new("box.fc2", 1024, 1024));
+    inv.layers.push(bias("box.fc2.b", 1024));
+    inv.layers.push(LayerShape::new("box.cls", 1024, 91));
+    inv.layers.push(LayerShape::new("box.reg", 1024, 364));
+    // mask head: four 3x3 convs + deconv + predictor
+    for i in 0..4 {
+        inv.layers.push(conv(&format!("mask.c{i}"), 3, 3, 256, 256));
+    }
+    inv.layers.push(conv("mask.deconv", 2, 2, 256, 256));
+    inv.layers.push(conv("mask.pred", 1, 1, 256, 91));
+    inv
+}
+
+pub fn by_name(name: &str) -> Option<NetworkInventory> {
+    match name {
+        "resnet18" => Some(resnet18()),
+        "resnet50" => Some(resnet50()),
+        "deeplabv3" | "deeplabv3_r50" => Some(deeplabv3_r50()),
+        "maskrcnn" | "maskrcnn_r50" => Some(maskrcnn_r50()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_param_count_close_to_torchvision() {
+        // torchvision resnet50: 25.56M params; we fold BN into 1-D biases
+        // (one per BN instead of weight+bias+stats) so accept 23-27M.
+        let n = resnet50().param_count();
+        assert!((23_000_000..27_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn resnet18_param_count_close_to_torchvision() {
+        // torchvision resnet18: 11.69M
+        let n = resnet18().param_count();
+        assert!((10_500_000..12_500_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn deeplab_has_aspp_and_no_fc() {
+        let d = deeplabv3_r50();
+        assert!(d.layers.iter().any(|l| l.name.starts_with("aspp")));
+        assert!(!d.layers.iter().any(|l| l.name == "fc"));
+        // ~39M params in the torchvision deeplabv3_resnet50 backbone+head
+        let n = d.param_count();
+        assert!((35_000_000..45_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn maskrcnn_has_heads() {
+        let m = maskrcnn_r50();
+        for prefix in ["fpn", "rpn", "box", "mask"] {
+            assert!(m.layers.iter().any(|l| l.name.starts_with(prefix)), "{prefix}");
+        }
+        // torchvision maskrcnn_resnet50_fpn: ~44M
+        let n = m.param_count();
+        assert!((39_000_000..49_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn conv_collapse_rule() {
+        let c = conv("x", 3, 3, 64, 128);
+        assert_eq!((c.m, c.n), (9 * 64, 128));
+        assert!(c.preconditioned());
+        assert!(!bias("b", 64).preconditioned());
+    }
+
+    #[test]
+    fn blocking_preserves_param_count() {
+        let r = resnet50();
+        let b = r.blocked(1024);
+        assert_eq!(r.param_count(), b.param_count());
+        for l in &b.layers {
+            if l.preconditioned() {
+                assert!(l.m <= 1024 && l.n <= 1024, "{:?}", l);
+            }
+        }
+        // the 12544-row box.fc1 of maskrcnn must split
+        let mb = maskrcnn_r50().blocked(1024);
+        assert!(mb.layers.iter().filter(|l| l.name.starts_with("box.fc1.blk")).count() >= 13);
+    }
+
+    #[test]
+    fn blocking_noop_for_small_nets() {
+        // largest resnet18 dim is 9*512 = 4608, so 8192-blocking is a noop
+        let r = resnet18();
+        let b = r.blocked(8192);
+        assert_eq!(r.layers.len(), b.layers.len());
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("resnet50").is_some());
+        assert!(by_name("deeplabv3").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,112 @@
+//! AdamW with decoupled weight decay (mirrors `optim_jax.make_adamw`).
+
+use super::{Hyper, Optimizer, StepCtx};
+use crate::tensor::Matrix;
+
+pub struct AdamW {
+    hyper: Hyper,
+    exp_avg: Vec<Matrix>,
+    exp_avg_sq: Vec<Matrix>,
+    t: u64,
+}
+
+impl AdamW {
+    pub fn new(shapes: &[(usize, usize)], hyper: Hyper) -> Self {
+        AdamW {
+            hyper,
+            exp_avg: shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect(),
+            exp_avg_sq: shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect(),
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for AdamW {
+    fn name(&self) -> &'static str {
+        "adamw"
+    }
+
+    fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], ctx: StepCtx) {
+        self.t += 1;
+        let (b1, b2, eps) = (self.hyper.adam_beta1, self.hyper.adam_beta2, self.hyper.adam_eps);
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        for (((p, g), m), v) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(&mut self.exp_avg)
+            .zip(&mut self.exp_avg_sq)
+        {
+            for i in 0..p.data.len() {
+                let gi = g.data[i];
+                m.data[i] = b1 * m.data[i] + (1.0 - b1) * gi;
+                v.data[i] = b2 * v.data[i] + (1.0 - b2) * gi * gi;
+                let m_hat = m.data[i] / bc1;
+                let v_hat = v.data[i] / bc2;
+                p.data[i] -= ctx.lr * (m_hat / (v_hat.sqrt() + eps))
+                    + ctx.lr * ctx.weight_decay * p.data[i];
+            }
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        self.exp_avg.iter().map(|m| m.data.len()).sum::<usize>() * 2 + 1
+    }
+
+    fn state_mut(&mut self) -> Vec<&mut Matrix> {
+        self.exp_avg.iter_mut().chain(self.exp_avg_sq.iter_mut()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Rng;
+
+    fn ctx(lr: f32, wd: f32) -> StepCtx {
+        StepCtx { lr, weight_decay: wd, update_precond: true }
+    }
+
+    #[test]
+    fn first_step_is_signed_lr() {
+        let mut rng = Rng::new(0);
+        let mut p = vec![Matrix::randn(5, 5, 1.0, &mut rng)];
+        let p0 = p[0].clone();
+        let g = vec![Matrix::randn(5, 5, 0.3, &mut rng)];
+        let mut opt = AdamW::new(&[(5, 5)], Hyper::default());
+        opt.step(&mut p, &g, ctx(1e-3, 0.0));
+        for i in 0..25 {
+            let delta = p0.data[i] - p[0].data[i];
+            // first bias-corrected step ≈ lr * sign(g)
+            assert!((delta - 1e-3 * g[0].data[i].signum()).abs() < 2e-4, "{delta}");
+        }
+    }
+
+    #[test]
+    fn decoupled_wd_with_zero_grad() {
+        let mut p = vec![Matrix::from_vec(1, 1, vec![2.0])];
+        let g = vec![Matrix::zeros(1, 1)];
+        let mut opt = AdamW::new(&[(1, 1)], Hyper::default());
+        opt.step(&mut p, &g, ctx(1e-2, 0.5));
+        assert!((p[0].data[0] - 2.0 * (1.0 - 1e-2 * 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adapts_to_gradient_scale() {
+        // two coordinates, gradient 100x apart -> updates nearly equal
+        let mut p = vec![Matrix::zeros(1, 2)];
+        let g = vec![Matrix::from_vec(1, 2, vec![1.0, 100.0])];
+        let mut opt = AdamW::new(&[(1, 2)], Hyper::default());
+        for _ in 0..5 {
+            opt.step(&mut p, &g, ctx(1e-3, 0.0));
+        }
+        let r = p[0].data[1] / p[0].data[0];
+        assert!((r - 1.0).abs() < 0.05, "ratio {r}");
+    }
+
+    #[test]
+    fn memory_is_2x_params() {
+        let opt = AdamW::new(&[(10, 10), (10, 1)], Hyper::default());
+        assert_eq!(opt.state_floats(), 2 * 110 + 1);
+    }
+}

@@ -1,0 +1,206 @@
+//! Jorge — the paper's optimizer (Algorithm 2 + App. A.1/A.2), native
+//! mirror of `optim_jax.make_jorge` / the Pallas kernels.
+//!
+//! Per 2-D layer: inverse-fourth-root estimates `L^`, `R^` updated with
+//! the inverse-free truncated-binomial rule, preconditioning `L^ G R^`,
+//! grafted momentum update with decoupled weight decay. 1-D layers
+//! (biases/gains) take the grafted SGD update directly.
+
+use super::{grafted_update, Hyper, Optimizer, StepCtx};
+use crate::tensor::{gram_left, gram_right, jorge_update, matmul, Matrix};
+
+struct LayerState {
+    /// None for unpreconditioned (1-D) layers.
+    l_hat: Option<Matrix>,
+    r_hat: Option<Matrix>,
+    mom: Matrix,
+    gmom: Matrix,
+}
+
+pub struct Jorge {
+    hyper: Hyper,
+    layers: Vec<LayerState>,
+}
+
+impl Jorge {
+    pub fn new(shapes: &[(usize, usize)], hyper: Hyper) -> Self {
+        let scale = hyper.precond_eps.powf(-0.25);
+        let layers = shapes
+            .iter()
+            .map(|&(m, n)| {
+                let precond = m > 1 && n > 1;
+                LayerState {
+                    l_hat: precond.then(|| Matrix::eye(m, scale)),
+                    r_hat: precond.then(|| Matrix::eye(n, scale)),
+                    mom: Matrix::zeros(m, n),
+                    gmom: Matrix::zeros(m, n),
+                }
+            })
+            .collect();
+        Jorge { hyper, layers }
+    }
+
+    /// Expose a preconditioner for tests/analysis.
+    pub fn left_preconditioner(&self, layer: usize) -> Option<&Matrix> {
+        self.layers[layer].l_hat.as_ref()
+    }
+}
+
+impl Optimizer for Jorge {
+    fn name(&self) -> &'static str {
+        "jorge"
+    }
+
+    fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], ctx: StepCtx) {
+        assert_eq!(params.len(), self.layers.len());
+        for ((p, g), st) in params.iter_mut().zip(grads).zip(&mut self.layers) {
+            match (&mut st.l_hat, &mut st.r_hat) {
+                (Some(l_hat), Some(r_hat)) => {
+                    if ctx.update_precond {
+                        *l_hat = jorge_update(l_hat, &gram_left(g));
+                        *r_hat = jorge_update(r_hat, &gram_right(g));
+                    }
+                    let gtilde = matmul(&matmul(l_hat, g), r_hat);
+                    grafted_update(
+                        p, g, &gtilde, &mut st.mom, &mut st.gmom, ctx, self.hyper, true,
+                    );
+                }
+                _ => {
+                    grafted_update(p, g, g, &mut st.mom, &mut st.gmom, ctx, self.hyper, true);
+                }
+            }
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|s| {
+                s.mom.data.len()
+                    + s.gmom.data.len()
+                    + s.l_hat.as_ref().map_or(0, |m| m.data.len())
+                    + s.r_hat.as_ref().map_or(0, |m| m.data.len())
+            })
+            .sum()
+    }
+
+    fn state_mut(&mut self) -> Vec<&mut Matrix> {
+        let mut out = Vec::new();
+        for s in &mut self.layers {
+            if let Some(l) = &mut s.l_hat {
+                out.push(l);
+            }
+            if let Some(r) = &mut s.r_hat {
+                out.push(r);
+            }
+            out.push(&mut s.mom);
+            out.push(&mut s.gmom);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Rng;
+
+    fn ctx(lr: f32, wd: f32, upd: bool) -> StepCtx {
+        StepCtx { lr, weight_decay: wd, update_precond: upd }
+    }
+
+    #[test]
+    fn skip_step_leaves_preconditioners_untouched() {
+        let mut rng = Rng::new(0);
+        let mut p = vec![Matrix::randn(6, 4, 1.0, &mut rng)];
+        let g = vec![Matrix::randn(6, 4, 0.1, &mut rng)];
+        let mut opt = Jorge::new(&[(6, 4)], Hyper::default());
+        let l0 = opt.left_preconditioner(0).unwrap().clone();
+        opt.step(&mut p, &g, ctx(0.1, 0.0, false));
+        assert_eq!(opt.left_preconditioner(0).unwrap(), &l0);
+        opt.step(&mut p, &g, ctx(0.1, 0.0, true));
+        assert_ne!(opt.left_preconditioner(0).unwrap(), &l0);
+    }
+
+    #[test]
+    fn unpreconditioned_bias_layers() {
+        let mut rng = Rng::new(1);
+        let mut p = vec![Matrix::randn(4, 1, 1.0, &mut rng)];
+        let g = vec![Matrix::randn(4, 1, 0.1, &mut rng)];
+        let mut opt = Jorge::new(&[(4, 1)], Hyper::default());
+        assert!(opt.left_preconditioner(0).is_none());
+        let p0 = p[0].clone();
+        opt.step(&mut p, &g, ctx(0.1, 0.0, true));
+        // grafted SGD: first step = lr * ||g|| * g/||g|| = lr * g
+        let want = p0.sub(&g[0].scale(0.1));
+        assert!(p[0].max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn first_step_magnitude_matches_sgd_grafting() {
+        let mut rng = Rng::new(2);
+        let mut p = vec![Matrix::randn(8, 5, 1.0, &mut rng)];
+        let p0 = p[0].clone();
+        let g = vec![Matrix::randn(8, 5, 0.2, &mut rng)];
+        let mut opt = Jorge::new(&[(8, 5)], Hyper::default());
+        opt.step(&mut p, &g, ctx(0.05, 0.0, true));
+        let step_norm = p[0].sub(&p0).frobenius();
+        let want = 0.05 * g[0].frobenius();
+        assert!((step_norm - want).abs() / want < 1e-3);
+    }
+
+    #[test]
+    fn decoupled_weight_decay_applies() {
+        let mut p = vec![Matrix::from_vec(2, 2, vec![1.0; 4])];
+        let g = vec![Matrix::zeros(2, 2)];
+        let mut opt = Jorge::new(&[(2, 2)], Hyper::default());
+        opt.step(&mut p, &g, ctx(0.1, 0.5, true));
+        // zero grads => gtilde = 0, mom = 0 => only decay: p *= (1 - lr*wd)
+        for v in &p[0].data {
+            assert!((v - (1.0 - 0.1 * 0.5)).abs() < 1e-6, "{v}");
+        }
+    }
+
+    #[test]
+    fn memory_accounting_matches_a6() {
+        // (m,n) layer: L(m^2) + R(n^2) + 2mn; bias: 2n
+        let opt = Jorge::new(&[(8, 4), (4, 1)], Hyper::default());
+        assert_eq!(opt.state_floats(), 64 + 16 + 2 * 32 + 2 * 4);
+    }
+
+    #[test]
+    fn preconditioners_stay_finite_and_symmetric_over_training() {
+        let mut rng = Rng::new(3);
+        let mut p = vec![Matrix::randn(10, 6, 1.0, &mut rng)];
+        let mut opt = Jorge::new(&[(10, 6)], Hyper::default());
+        for i in 0..30 {
+            let g = vec![Matrix::randn(10, 6, 0.5, &mut rng)];
+            opt.step(&mut p, &g, ctx(0.01, 1e-3, i % 2 == 0));
+            let l = opt.left_preconditioner(0).unwrap();
+            assert!(l.all_finite(), "step {i}");
+            let asym = l.sub(&l.t()).max_abs() / l.max_abs().max(1e-12);
+            assert!(asym < 0.05, "step {i}: asym {asym}");
+        }
+    }
+
+    #[test]
+    fn converges_on_quadratic_faster_than_plain_direction() {
+        // sanity: jorge minimises ||W - T||^2 quickly
+        let mut rng = Rng::new(4);
+        let target = Matrix::randn(8, 6, 1.0, &mut rng);
+        let mut p = vec![Matrix::zeros(8, 6)];
+        let mut opt = Jorge::new(&[(8, 6)], Hyper::default());
+        let mut last = f64::INFINITY;
+        for step in 0..80 {
+            let g = vec![p[0].sub(&target)];
+            let loss = g[0].frobenius_sq();
+            if step > 0 {
+                assert!(loss.is_finite());
+            }
+            last = loss;
+            opt.step(&mut p, &g, ctx(0.1, 0.0, true));
+        }
+        let init = target.frobenius_sq();
+        assert!(last < 0.05 * init, "{init} -> {last}");
+    }
+}

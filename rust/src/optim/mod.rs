@@ -1,0 +1,184 @@
+//! Native optimizer mirrors of the four L2/JAX optimizers.
+//!
+//! These exist for three reasons:
+//! 1. **cross-validation** — integration tests drive identical inputs
+//!    through the HLO artifacts (via `runtime`) and these mirrors and
+//!    assert agreement, which pins the artifact semantics;
+//! 2. **microbenchmarks** — Table 1 runs the per-iteration optimizer op
+//!    mix over the paper's real layer inventories (`models`), where the
+//!    HLO artifacts (fixed shapes) cannot;
+//! 3. **the `--native` coordinator path** — data-parallel runs apply the
+//!    optimizer natively after the gradient all-reduce.
+//!
+//! The semantics mirror `python/compile/optim_jax.py` exactly, including
+//! the grafted weight update (App. A.2), dynamic beta2 (App. A.1),
+//! decoupled-vs-coupled weight decay and the skip-step behaviour.
+
+pub mod adamw;
+pub mod jorge;
+pub mod memory;
+pub mod schedules;
+pub mod sgd;
+pub mod shampoo;
+
+pub use adamw::AdamW;
+pub use jorge::Jorge;
+pub use schedules::Schedule;
+pub use sgd::Sgd;
+pub use shampoo::Shampoo;
+
+use crate::tensor::Matrix;
+
+/// Hyperparameters shared with the artifacts (manifest `hyper` section).
+#[derive(Clone, Copy, Debug)]
+pub struct Hyper {
+    pub beta1: f32,
+    pub sgd_momentum: f32,
+    pub shampoo_beta2: f32,
+    pub precond_eps: f32,
+    pub newton_iters: usize,
+    pub adam_beta1: f32,
+    pub adam_beta2: f32,
+    pub adam_eps: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper {
+            beta1: 0.9,
+            sgd_momentum: 0.9,
+            shampoo_beta2: 0.95,
+            precond_eps: 1e-6,
+            newton_iters: 15,
+            adam_beta1: 0.9,
+            adam_beta2: 0.999,
+            adam_eps: 1e-8,
+        }
+    }
+}
+
+/// A training-step context supplied by the coordinator.
+#[derive(Clone, Copy, Debug)]
+pub struct StepCtx {
+    pub lr: f32,
+    pub weight_decay: f32,
+    /// Whether this step refreshes the preconditioners (update-interval
+    /// policy lives in the coordinator, matching the paper §3).
+    pub update_precond: bool,
+}
+
+/// Common interface over the four optimizers.
+pub trait Optimizer: Send {
+    fn name(&self) -> &'static str;
+
+    /// Apply one step in place. `params[i]` and `grads[i]` are the 2-D
+    /// collapsed matrices in model order.
+    fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], ctx: StepCtx);
+
+    /// Total optimizer-state floats currently held (App. A.6 accounting).
+    fn state_floats(&self) -> usize;
+
+    /// Expose flat state for checkpointing / cross-validation.
+    fn state_mut(&mut self) -> Vec<&mut Matrix>;
+}
+
+/// Construct an optimizer by name for a given parameter inventory.
+pub fn build(
+    name: &str,
+    shapes: &[(usize, usize)],
+    hyper: Hyper,
+) -> Result<Box<dyn Optimizer>, String> {
+    match name {
+        "sgd" => Ok(Box::new(Sgd::new(shapes, hyper))),
+        "adamw" => Ok(Box::new(AdamW::new(shapes, hyper))),
+        "shampoo" => Ok(Box::new(Shampoo::new(shapes, hyper))),
+        "jorge" => Ok(Box::new(Jorge::new(shapes, hyper))),
+        other => Err(format!("unknown optimizer {other:?}")),
+    }
+}
+
+/// Shared grafted weight update (App. A.2, Algorithm 3):
+/// direction from the preconditioned momentum, magnitude from heavy-ball
+/// SGD momentum; weight decay either decoupled (Jorge) or coupled L2
+/// folded into the grafting gradient (Shampoo/SGD).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn grafted_update(
+    p: &mut Matrix,
+    g: &Matrix,
+    gtilde: &Matrix,
+    mom: &mut Matrix,
+    gmom: &mut Matrix,
+    ctx: StepCtx,
+    hyper: Hyper,
+    decoupled: bool,
+) {
+    // g_sgd = g (+ wd * p when coupled)
+    // mom   = b1 mom + (1-b1) gtilde
+    // gmom  = b_sgd gmom + g_sgd
+    // p    -= lr * ||gmom|| * mom / ||mom||   (- lr * wd * p when decoupled)
+    let n = p.data.len();
+    for i in 0..n {
+        let gs = if decoupled { g.data[i] } else { g.data[i] + ctx.weight_decay * p.data[i] };
+        mom.data[i] = hyper.beta1 * mom.data[i] + (1.0 - hyper.beta1) * gtilde.data[i];
+        gmom.data[i] = hyper.sgd_momentum * gmom.data[i] + gs;
+    }
+    let gnorm = gmom.frobenius() as f32;
+    let mnorm = (mom.frobenius() as f32).max(1e-16);
+    let scale = ctx.lr * gnorm / mnorm;
+    let wd_mult = if decoupled { 1.0 - ctx.lr * ctx.weight_decay } else { 1.0 };
+    for i in 0..n {
+        p.data[i] = p.data[i] * wd_mult - scale * mom.data[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_all_by_name() {
+        let shapes = [(8, 4), (4, 1)];
+        for name in ["sgd", "adamw", "shampoo", "jorge"] {
+            let o = build(name, &shapes, Hyper::default()).unwrap();
+            assert_eq!(o.name(), name);
+        }
+        assert!(build("nope", &shapes, Hyper::default()).is_err());
+    }
+
+    #[test]
+    fn grafted_first_step_magnitude_is_sgd() {
+        let mut rng = crate::rngx::Rng::new(0);
+        let mut p = Matrix::randn(6, 4, 1.0, &mut rng);
+        let p0 = p.clone();
+        let g = Matrix::randn(6, 4, 0.1, &mut rng);
+        let gtilde = Matrix::randn(6, 4, 3.0, &mut rng); // arbitrary direction
+        let mut mom = Matrix::zeros(6, 4);
+        let mut gmom = Matrix::zeros(6, 4);
+        let ctx = StepCtx { lr: 0.05, weight_decay: 0.0, update_precond: true };
+        grafted_update(&mut p, &g, &gtilde, &mut mom, &mut gmom, ctx, Hyper::default(), true);
+        let step_norm = p.sub(&p0).frobenius();
+        let want = 0.05 * g.frobenius();
+        assert!(
+            (step_norm - want).abs() / want < 1e-4,
+            "{step_norm} vs {want}"
+        );
+    }
+
+    #[test]
+    fn grafted_direction_is_gtilde_on_first_step() {
+        let mut rng = crate::rngx::Rng::new(1);
+        let mut p = Matrix::zeros(5, 3);
+        let g = Matrix::randn(5, 3, 0.1, &mut rng);
+        let gtilde = Matrix::randn(5, 3, 1.0, &mut rng);
+        let mut mom = Matrix::zeros(5, 3);
+        let mut gmom = Matrix::zeros(5, 3);
+        let ctx = StepCtx { lr: 1.0, weight_decay: 0.0, update_precond: true };
+        grafted_update(&mut p, &g, &gtilde, &mut mom, &mut gmom, ctx, Hyper::default(), true);
+        // p = -c * gtilde for some c > 0
+        let c = -p.data[0] / gtilde.data[0];
+        assert!(c > 0.0);
+        for i in 0..p.data.len() {
+            assert!((p.data[i] + c * gtilde.data[i]).abs() < 1e-5 * c.max(1.0));
+        }
+    }
+}

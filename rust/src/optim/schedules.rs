@@ -1,0 +1,162 @@
+//! Learning-rate schedules (§4 / Fig. 1 / Fig. 4 of the paper).
+//!
+//! The Rust coordinator owns the schedule: the HLO train-step artifacts
+//! take the learning rate as a runtime scalar. The paper's finding (Fig. 1)
+//! is that Jorge needs *step decay* at 1/3 and 2/3 of the budget even when
+//! the SGD baseline used cosine/poly — these schedules regenerate that
+//! comparison.
+
+use crate::config::ScheduleKind;
+
+/// A fully-resolved schedule over a fixed training budget.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub kind: ScheduleKind,
+    pub base_lr: f64,
+    pub total_steps: usize,
+    pub warmup_steps: usize,
+    /// step-decay boundaries (absolute steps) and per-boundary factor
+    pub decay_steps: Vec<usize>,
+    pub decay_factor: f64,
+    /// polynomial power (torchvision DeepLabv3 default 0.9)
+    pub poly_power: f64,
+}
+
+impl Schedule {
+    pub fn new(
+        kind: ScheduleKind,
+        base_lr: f64,
+        total_steps: usize,
+        warmup_steps: usize,
+        decay_at_fracs: &[f64],
+    ) -> Self {
+        let decay_steps = decay_at_fracs
+            .iter()
+            .map(|f| ((total_steps as f64) * f).round() as usize)
+            .collect();
+        Schedule {
+            kind,
+            base_lr,
+            total_steps: total_steps.max(1),
+            warmup_steps,
+            decay_steps,
+            decay_factor: 0.1,
+            poly_power: 0.9,
+        }
+    }
+
+    /// §4 default for Jorge: step decay at 1/3 and 2/3, 10x each.
+    pub fn jorge_default(base_lr: f64, total_steps: usize, warmup_steps: usize) -> Self {
+        Schedule::new(
+            ScheduleKind::Step,
+            base_lr,
+            total_steps,
+            warmup_steps,
+            &[1.0 / 3.0, 2.0 / 3.0],
+        )
+    }
+
+    /// Learning rate at `step` (0-based).
+    pub fn lr_at(&self, step: usize) -> f64 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            // linear warmup from base_lr/warmup to base_lr
+            return self.base_lr * (step as f64 + 1.0) / self.warmup_steps as f64;
+        }
+        let t = step.min(self.total_steps) as f64;
+        let span = (self.total_steps.saturating_sub(self.warmup_steps)).max(1) as f64;
+        let progress = ((t - self.warmup_steps as f64) / span).clamp(0.0, 1.0);
+        match self.kind {
+            ScheduleKind::Constant => self.base_lr,
+            ScheduleKind::Step => {
+                let crossed = self.decay_steps.iter().filter(|&&d| step >= d).count();
+                self.base_lr * self.decay_factor.powi(crossed as i32)
+            }
+            ScheduleKind::Cosine => {
+                self.base_lr * 0.5 * (1.0 + (std::f64::consts::PI * progress).cos())
+            }
+            ScheduleKind::Poly => self.base_lr * (1.0 - progress).max(0.0).powf(self.poly_power),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::new(ScheduleKind::Constant, 0.4, 100, 0, &[]);
+        assert_eq!(s.lr_at(0), 0.4);
+        assert_eq!(s.lr_at(99), 0.4);
+    }
+
+    #[test]
+    fn step_decay_boundaries() {
+        let s = Schedule::new(ScheduleKind::Step, 1.0, 90, 0, &[1.0 / 3.0, 2.0 / 3.0]);
+        assert_eq!(s.lr_at(0), 1.0);
+        assert_eq!(s.lr_at(29), 1.0);
+        assert!((s.lr_at(30) - 0.1).abs() < 1e-12);
+        assert!((s.lr_at(59) - 0.1).abs() < 1e-12);
+        assert!((s.lr_at(60) - 0.01).abs() < 1e-12);
+        assert!((s.lr_at(89) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_endpoints_and_monotone() {
+        let s = Schedule::new(ScheduleKind::Cosine, 1.0, 100, 0, &[]);
+        assert!((s.lr_at(0) - 1.0).abs() < 1e-3);
+        assert!(s.lr_at(100) < 1e-3);
+        for i in 1..100 {
+            assert!(s.lr_at(i) <= s.lr_at(i - 1) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn poly_power_09() {
+        let s = Schedule::new(ScheduleKind::Poly, 1.0, 100, 0, &[]);
+        assert!((s.lr_at(0) - 1.0).abs() < 1e-9);
+        let half = s.lr_at(50);
+        assert!((half - 0.5f64.powf(0.9)).abs() < 1e-2, "{half}");
+        assert!(s.lr_at(100) < 1e-6);
+    }
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = Schedule::new(ScheduleKind::Step, 1.0, 100, 10, &[0.5]);
+        assert!((s.lr_at(0) - 0.1).abs() < 1e-12);
+        assert!((s.lr_at(4) - 0.5).abs() < 1e-12);
+        assert!((s.lr_at(9) - 1.0).abs() < 1e-12);
+        assert!((s.lr_at(10) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn warmup_then_decay() {
+        let s = Schedule::new(ScheduleKind::Step, 1.0, 100, 10, &[0.5]);
+        assert!((s.lr_at(49) - 1.0).abs() < 1e-12);
+        assert!((s.lr_at(50) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jorge_default_matches_paper() {
+        let s = Schedule::jorge_default(0.4, 90, 0);
+        assert_eq!(s.kind, ScheduleKind::Step);
+        assert_eq!(s.decay_steps, vec![30, 60]);
+        assert_eq!(s.decay_factor, 0.1);
+    }
+
+    #[test]
+    fn all_schedules_nonnegative_and_bounded() {
+        for kind in [
+            ScheduleKind::Constant,
+            ScheduleKind::Step,
+            ScheduleKind::Cosine,
+            ScheduleKind::Poly,
+        ] {
+            let s = Schedule::new(kind, 0.4, 77, 5, &[0.33, 0.66]);
+            for step in 0..=80 {
+                let lr = s.lr_at(step);
+                assert!(lr >= 0.0 && lr <= 0.4 + 1e-12, "{kind:?}@{step}: {lr}");
+            }
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! Heavy-ball SGD with coupled L2 weight decay — the torchvision baseline
+//! (mirrors `optim_jax.make_sgd`).
+
+use super::{Hyper, Optimizer, StepCtx};
+use crate::tensor::Matrix;
+
+pub struct Sgd {
+    hyper: Hyper,
+    momentum: Vec<Matrix>,
+}
+
+impl Sgd {
+    pub fn new(shapes: &[(usize, usize)], hyper: Hyper) -> Self {
+        Sgd {
+            hyper,
+            momentum: shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect(),
+        }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], ctx: StepCtx) {
+        assert_eq!(params.len(), self.momentum.len());
+        assert_eq!(params.len(), grads.len());
+        for ((p, g), mom) in params.iter_mut().zip(grads).zip(&mut self.momentum) {
+            for i in 0..p.data.len() {
+                let gi = g.data[i] + ctx.weight_decay * p.data[i]; // coupled L2
+                mom.data[i] = self.hyper.sgd_momentum * mom.data[i] + gi;
+                p.data[i] -= ctx.lr * mom.data[i];
+            }
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        self.momentum.iter().map(|m| m.data.len()).sum()
+    }
+
+    fn state_mut(&mut self) -> Vec<&mut Matrix> {
+        self.momentum.iter_mut().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Rng;
+
+    fn ctx(lr: f32, wd: f32) -> StepCtx {
+        StepCtx { lr, weight_decay: wd, update_precond: true }
+    }
+
+    #[test]
+    fn first_step_is_lr_times_grad() {
+        let mut rng = Rng::new(0);
+        let mut p = vec![Matrix::randn(4, 3, 1.0, &mut rng)];
+        let p0 = p[0].clone();
+        let g = vec![Matrix::randn(4, 3, 1.0, &mut rng)];
+        let mut opt = Sgd::new(&[(4, 3)], Hyper::default());
+        opt.step(&mut p, &g, ctx(0.1, 0.0));
+        let want = p0.sub(&g[0].scale(0.1));
+        assert!(p[0].max_abs_diff(&want) < 1e-6);
+    }
+
+    #[test]
+    fn momentum_grows_step_size() {
+        let mut p = vec![Matrix::zeros(2, 2)];
+        let g = vec![Matrix::from_vec(2, 2, vec![1.0; 4])];
+        let mut opt = Sgd::new(&[(2, 2)], Hyper::default());
+        opt.step(&mut p, &g, ctx(0.1, 0.0));
+        let after1 = p[0].data[0]; // -0.1
+        opt.step(&mut p, &g, ctx(0.1, 0.0));
+        let d2 = p[0].data[0] - after1; // -(0.1 * 1.9)
+        assert!((after1 + 0.1).abs() < 1e-6);
+        assert!((d2 + 0.19).abs() < 1e-6);
+    }
+
+    #[test]
+    fn coupled_wd_decays_towards_zero() {
+        let mut p = vec![Matrix::from_vec(1, 1, vec![1.0])];
+        let g = vec![Matrix::zeros(1, 1)];
+        let mut opt = Sgd::new(&[(1, 1)], Hyper::default());
+        for _ in 0..10 {
+            opt.step(&mut p, &g, ctx(0.1, 0.1));
+        }
+        assert!(p[0].data[0] < 1.0 && p[0].data[0] > 0.0);
+    }
+
+    #[test]
+    fn state_floats_equals_param_count() {
+        let opt = Sgd::new(&[(8, 4), (4, 1)], Hyper::default());
+        assert_eq!(opt.state_floats(), 8 * 4 + 4);
+    }
+}

@@ -1,0 +1,220 @@
+//! Shampoo (Gupta et al. 2018) — the exact second-order baseline the
+//! paper approximates. Mirror of `optim_jax.make_shampoo`.
+//!
+//! Gram statistics accumulate by EMA every step; inverse fourth roots are
+//! recomputed only on `update_precond` steps, via either the coupled
+//! Newton iteration (default — matches the HLO artifact) or the exact
+//! Jacobi eigensolver (`RootMethod::Eigh`, the cuSOLVER-style baseline
+//! costed in Table 1).
+
+use super::{grafted_update, Hyper, Optimizer, StepCtx};
+use crate::tensor::{
+    gram_left, gram_right, inv_fourth_root_eigh, inv_fourth_root_newton, matmul, Matrix,
+};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RootMethod {
+    Newton,
+    Eigh,
+}
+
+struct LayerState {
+    lstat: Option<Matrix>,
+    rstat: Option<Matrix>,
+    pl: Option<Matrix>,
+    pr: Option<Matrix>,
+    mom: Matrix,
+    gmom: Matrix,
+}
+
+pub struct Shampoo {
+    hyper: Hyper,
+    pub root_method: RootMethod,
+    layers: Vec<LayerState>,
+}
+
+impl Shampoo {
+    pub fn new(shapes: &[(usize, usize)], hyper: Hyper) -> Self {
+        Self::with_root(shapes, hyper, RootMethod::Newton)
+    }
+
+    pub fn with_root(shapes: &[(usize, usize)], hyper: Hyper, root_method: RootMethod) -> Self {
+        let eps = hyper.precond_eps;
+        let pscale = eps.powf(-0.25);
+        let layers = shapes
+            .iter()
+            .map(|&(m, n)| {
+                let precond = m > 1 && n > 1;
+                LayerState {
+                    lstat: precond.then(|| Matrix::eye(m, eps)),
+                    rstat: precond.then(|| Matrix::eye(n, eps)),
+                    pl: precond.then(|| Matrix::eye(m, pscale)),
+                    pr: precond.then(|| Matrix::eye(n, pscale)),
+                    mom: Matrix::zeros(m, n),
+                    gmom: Matrix::zeros(m, n),
+                }
+            })
+            .collect();
+        Shampoo { hyper, root_method, layers }
+    }
+
+    fn root(&self, a: &Matrix) -> Matrix {
+        match self.root_method {
+            RootMethod::Newton => {
+                inv_fourth_root_newton(a, self.hyper.newton_iters, self.hyper.precond_eps)
+            }
+            RootMethod::Eigh => inv_fourth_root_eigh(a, self.hyper.precond_eps),
+        }
+    }
+}
+
+impl Optimizer for Shampoo {
+    fn name(&self) -> &'static str {
+        "shampoo"
+    }
+
+    fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], ctx: StepCtx) {
+        assert_eq!(params.len(), self.layers.len());
+        let b2 = self.hyper.shampoo_beta2;
+        for li in 0..params.len() {
+            let (p, g) = (&mut params[li], &grads[li]);
+            let precond = self.layers[li].lstat.is_some();
+            if precond {
+                // EMA stats every step (Alg. 1 lines 5-8)
+                {
+                    let st = &mut self.layers[li];
+                    let lstat = st.lstat.as_mut().unwrap();
+                    let gl = gram_left(g);
+                    for i in 0..lstat.data.len() {
+                        lstat.data[i] = b2 * lstat.data[i] + (1.0 - b2) * gl.data[i];
+                    }
+                    let rstat = st.rstat.as_mut().unwrap();
+                    let gr = gram_right(g);
+                    for i in 0..rstat.data.len() {
+                        rstat.data[i] = b2 * rstat.data[i] + (1.0 - b2) * gr.data[i];
+                    }
+                }
+                if ctx.update_precond {
+                    let new_pl = self.root(self.layers[li].lstat.as_ref().unwrap());
+                    let new_pr = self.root(self.layers[li].rstat.as_ref().unwrap());
+                    self.layers[li].pl = Some(new_pl);
+                    self.layers[li].pr = Some(new_pr);
+                }
+                let st = &mut self.layers[li];
+                let gtilde = matmul(&matmul(st.pl.as_ref().unwrap(), g), st.pr.as_ref().unwrap());
+                grafted_update(
+                    p, g, &gtilde, &mut st.mom, &mut st.gmom, ctx, self.hyper, false,
+                );
+            } else {
+                let st = &mut self.layers[li];
+                grafted_update(p, g, g, &mut st.mom, &mut st.gmom, ctx, self.hyper, false);
+            }
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|s| {
+                s.mom.data.len()
+                    + s.gmom.data.len()
+                    + [&s.lstat, &s.rstat, &s.pl, &s.pr]
+                        .iter()
+                        .map(|o| o.as_ref().map_or(0, |m| m.data.len()))
+                        .sum::<usize>()
+            })
+            .sum()
+    }
+
+    fn state_mut(&mut self) -> Vec<&mut Matrix> {
+        let mut out = Vec::new();
+        for s in &mut self.layers {
+            for o in [&mut s.lstat, &mut s.rstat, &mut s.pl, &mut s.pr] {
+                if let Some(m) = o {
+                    out.push(m);
+                }
+            }
+            out.push(&mut s.mom);
+            out.push(&mut s.gmom);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Rng;
+
+    fn ctx(lr: f32, wd: f32, upd: bool) -> StepCtx {
+        StepCtx { lr, weight_decay: wd, update_precond: upd }
+    }
+
+    #[test]
+    fn stats_accumulate_even_on_skip_steps() {
+        let mut rng = Rng::new(0);
+        let mut p = vec![Matrix::randn(6, 4, 1.0, &mut rng)];
+        let g = vec![Matrix::randn(6, 4, 0.5, &mut rng)];
+        let mut opt = Shampoo::new(&[(6, 4)], Hyper::default());
+        let s0 = opt.layers[0].lstat.clone().unwrap();
+        let pl0 = opt.layers[0].pl.clone().unwrap();
+        opt.step(&mut p, &g, ctx(0.1, 0.0, false));
+        assert!(opt.layers[0].lstat.as_ref().unwrap().max_abs_diff(&s0) > 0.0);
+        assert_eq!(opt.layers[0].pl.as_ref().unwrap(), &pl0); // stale
+        opt.step(&mut p, &g, ctx(0.1, 0.0, true));
+        assert!(opt.layers[0].pl.as_ref().unwrap().max_abs_diff(&pl0) > 0.0);
+    }
+
+    #[test]
+    fn newton_and_eigh_roots_agree_in_trajectory() {
+        let mut rng = Rng::new(1);
+        let shapes = [(8usize, 5usize)];
+        let mut p_a = vec![Matrix::randn(8, 5, 1.0, &mut rng)];
+        let mut p_b = p_a.clone();
+        let mut newton = Shampoo::with_root(&shapes, Hyper::default(), RootMethod::Newton);
+        let mut eigh = Shampoo::with_root(&shapes, Hyper::default(), RootMethod::Eigh);
+        let mut r2 = Rng::new(2);
+        for _ in 0..5 {
+            let g = vec![Matrix::randn(8, 5, 0.3, &mut r2)];
+            newton.step(&mut p_a, &g, ctx(0.05, 0.0, true));
+            eigh.step(&mut p_b, &g, ctx(0.05, 0.0, true));
+        }
+        let rel = p_a[0].max_abs_diff(&p_b[0]) / p_a[0].max_abs();
+        assert!(rel < 0.05, "newton vs eigh trajectories differ: {rel}");
+    }
+
+    #[test]
+    fn first_step_magnitude_is_sgd_grafted() {
+        let mut rng = Rng::new(3);
+        let mut p = vec![Matrix::randn(8, 5, 1.0, &mut rng)];
+        let p0 = p[0].clone();
+        let g = vec![Matrix::randn(8, 5, 0.2, &mut rng)];
+        let mut opt = Shampoo::new(&[(8, 5)], Hyper::default());
+        opt.step(&mut p, &g, ctx(0.05, 0.0, true));
+        let step_norm = p[0].sub(&p0).frobenius();
+        let want = 0.05 * g[0].frobenius();
+        assert!((step_norm - want).abs() / want < 1e-3);
+    }
+
+    #[test]
+    fn memory_is_larger_than_jorge() {
+        let shapes = [(16usize, 8usize), (8, 1)];
+        let shampoo = Shampoo::new(&shapes, Hyper::default());
+        let jorge = super::super::Jorge::new(&shapes, Hyper::default());
+        assert!(shampoo.state_floats() > jorge.state_floats());
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut rng = Rng::new(5);
+        let target = Matrix::randn(8, 6, 1.0, &mut rng);
+        let mut p = vec![Matrix::zeros(8, 6)];
+        let mut opt = Shampoo::new(&[(8, 6)], Hyper::default());
+        for _ in 0..80 {
+            let g = vec![p[0].sub(&target)];
+            opt.step(&mut p, &g, ctx(0.1, 0.0, true));
+        }
+        let err = p[0].sub(&target).frobenius_sq();
+        assert!(err < 0.05 * target.frobenius_sq());
+    }
+}

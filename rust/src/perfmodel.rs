@@ -1,0 +1,266 @@
+//! Analytic A100 performance model (substrate).
+//!
+//! The paper's wall-clock numbers (Table 1, Table 4, Fig. 2-right) were
+//! measured on A100 GPUs we do not have. This model projects the *op mix*
+//! of each optimizer — known exactly from the layer inventories in
+//! [`crate::models`] — onto A100 roofline parameters, reproducing the
+//! relative ordering and approximate ratios of the paper's tables. The
+//! benches print both our *measured* CPU numbers (shape evidence) and
+//! these *projected* numbers (scale evidence), clearly labeled.
+//!
+//! Calibration anchors (public numbers):
+//! * A100 TF32 tensor-core peak 156 TFLOP/s; large GEMMs reach ~50%.
+//! * HBM2e bandwidth 1.55 TB/s (40 GB SXM).
+//! * cuSOLVER `ssyevd` on n=1024 ≈ 20 ms (used by Shampoo-style roots);
+//!   modeled as n^3 / 5e10 + 100 us launch overhead.
+//! * Paper Table 1 fwd+bwd baselines: ResNet-50 bs64/GPU = 0.09 s/iter,
+//!   DeepLabv3 bs16/GPU = 0.33 s/iter (SGD row — optimizer cost there is
+//!   negligible, so these anchor the network compute).
+
+use crate::collectives::CommCostModel;
+use crate::models::NetworkInventory;
+use crate::optim::memory::OptKind;
+
+#[derive(Clone, Copy, Debug)]
+pub struct GpuModel {
+    /// sustained GEMM throughput (FLOP/s)
+    pub gemm_flops: f64,
+    /// HBM bandwidth (B/s)
+    pub hbm_bw: f64,
+    /// per-kernel launch overhead (s)
+    pub launch: f64,
+    /// syevd cost: n^3 / syevd_rate + syevd_overhead
+    pub syevd_rate: f64,
+    pub syevd_overhead: f64,
+}
+
+impl GpuModel {
+    pub fn a100() -> Self {
+        GpuModel {
+            gemm_flops: 78e12, // 156 TF/s TF32 @ ~50% efficiency
+            hbm_bw: 1.55e12,
+            launch: 5e-6,
+            syevd_rate: 5e10,
+            syevd_overhead: 1e-4,
+        }
+    }
+
+    /// GEMM time with a memory-bound floor (roofline).
+    pub fn gemm_time(&self, m: usize, k: usize, n: usize) -> f64 {
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let bytes = 4.0 * (m * k + k * n + m * n) as f64;
+        self.launch + (flops / self.gemm_flops).max(bytes / self.hbm_bw)
+    }
+
+    /// Elementwise pass over `n` floats (read+write).
+    pub fn elementwise_time(&self, n: usize) -> f64 {
+        self.launch + 8.0 * n as f64 / self.hbm_bw
+    }
+
+    /// Eigendecomposition (`syevd`) of an n x n matrix.
+    pub fn syevd_time(&self, n: usize) -> f64 {
+        self.syevd_overhead + (n as f64).powi(3) / self.syevd_rate
+    }
+}
+
+/// Per-iteration optimizer cost for a network, amortising the
+/// preconditioner refresh over `precond_every` steps.
+pub fn optimizer_step_time(
+    gpu: &GpuModel,
+    net: &NetworkInventory,
+    opt: OptKind,
+    precond_every: usize,
+    newton_iters: usize,
+) -> f64 {
+    let pcount = net.param_count();
+    let every = precond_every.max(1) as f64;
+    match opt {
+        // SGD: one fused elementwise pass over params+momentum.
+        OptKind::Sgd => gpu.elementwise_time(2 * pcount),
+        // AdamW: two state tensors + params.
+        OptKind::AdamW => gpu.elementwise_time(3 * pcount),
+        OptKind::Jorge => {
+            let mut t = gpu.elementwise_time(3 * pcount); // mom/gmom/params
+            for l in &net.layers {
+                if !l.preconditioned() {
+                    continue;
+                }
+                let (m, n) = (l.m, l.n);
+                // preconditioning every step: (LG)R
+                t += gpu.gemm_time(m, m, n) + gpu.gemm_time(m, n, n);
+                // update (amortised): grams + P2,P4,X,X2,PM per side + norm
+                let upd_l = gpu.gemm_time(m, n, m) + 5.0 * gpu.gemm_time(m, m, m)
+                    + gpu.elementwise_time(m * m);
+                let upd_r = gpu.gemm_time(n, m, n) + 5.0 * gpu.gemm_time(n, n, n)
+                    + gpu.elementwise_time(n * n);
+                t += (upd_l + upd_r) / every;
+            }
+            t
+        }
+        OptKind::Shampoo => {
+            let mut t = gpu.elementwise_time(3 * pcount);
+            for l in &net.layers {
+                if !l.preconditioned() {
+                    continue;
+                }
+                let (m, n) = (l.m, l.n);
+                // stats EMA every step: grams + axpy
+                t += gpu.gemm_time(m, n, m)
+                    + gpu.gemm_time(n, m, n)
+                    + gpu.elementwise_time(m * m + n * n);
+                // preconditioning every step
+                t += gpu.gemm_time(m, m, n) + gpu.gemm_time(m, n, n);
+                // roots (amortised): syevd per side — the paper's Shampoo
+                // baseline computes eigendecompositions; a Newton variant
+                // would be `newton_iters * 4 GEMMs` instead.
+                let _ = newton_iters;
+                t += (gpu.syevd_time(m) + gpu.syevd_time(n)) / every;
+            }
+            t
+        }
+    }
+}
+
+/// Full-iteration projection: network fwd/bwd anchor + optimizer +
+/// gradient all-reduce across `gpus`.
+#[derive(Clone, Copy, Debug)]
+pub struct IterProjection {
+    pub fwd_bwd_s: f64,
+    pub optimizer_s: f64,
+    pub comm_s: f64,
+}
+
+impl IterProjection {
+    pub fn total(&self) -> f64 {
+        self.fwd_bwd_s + self.optimizer_s + self.comm_s
+    }
+}
+
+pub fn project_iteration(
+    gpu: &GpuModel,
+    comm: &CommCostModel,
+    net: &NetworkInventory,
+    opt: OptKind,
+    precond_every: usize,
+    fwd_bwd_anchor_s: f64,
+    gpus: usize,
+) -> IterProjection {
+    let grad_bytes = 4 * net.param_count();
+    IterProjection {
+        fwd_bwd_s: fwd_bwd_anchor_s,
+        optimizer_s: optimizer_step_time(gpu, net, opt, precond_every, 15),
+        comm_s: comm.ring_all_reduce_time(grad_bytes, gpus),
+    }
+}
+
+/// Distributed-Shampoo projection (Shi et al. 2023): preconditioner
+/// computations sharded across `gpus`, roots all-gathered afterwards.
+pub fn project_dist_shampoo_iteration(
+    gpu: &GpuModel,
+    comm: &CommCostModel,
+    net: &NetworkInventory,
+    precond_every: usize,
+    fwd_bwd_anchor_s: f64,
+    gpus: usize,
+) -> IterProjection {
+    let every = precond_every.max(1) as f64;
+    let pcount = net.param_count();
+    let mut opt_t = gpu.elementwise_time(3 * pcount);
+    let mut root_t = 0.0;
+    let mut root_bytes = 0usize;
+    for l in &net.layers {
+        if !l.preconditioned() {
+            continue;
+        }
+        let (m, n) = (l.m, l.n);
+        opt_t += gpu.gemm_time(m, n, m)
+            + gpu.gemm_time(n, m, n)
+            + gpu.elementwise_time(m * m + n * n);
+        opt_t += gpu.gemm_time(m, m, n) + gpu.gemm_time(m, n, n);
+        root_t += gpu.syevd_time(m) + gpu.syevd_time(n);
+        root_bytes += 4 * (m * m + n * n);
+    }
+    // roots parallelise across gpus; results all-gathered
+    opt_t += root_t / gpus as f64 / every;
+    let comm_s = comm.ring_all_reduce_time(4 * pcount, gpus)
+        + comm.all_gather_time(root_bytes, gpus) / every;
+    IterProjection { fwd_bwd_s: fwd_bwd_anchor_s, optimizer_s: opt_t, comm_s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{deeplabv3_r50, resnet50};
+
+    fn table1_setup() -> (GpuModel, CommCostModel) {
+        (GpuModel::a100(), CommCostModel::nvlink_a100())
+    }
+
+    #[test]
+    fn gemm_time_monotone_and_roofline() {
+        let g = GpuModel::a100();
+        assert!(g.gemm_time(1024, 1024, 1024) > g.gemm_time(256, 256, 256));
+        // tiny GEMM is launch/memory bound, not 0
+        assert!(g.gemm_time(8, 8, 8) >= g.launch);
+    }
+
+    #[test]
+    fn syevd_anchor() {
+        let g = GpuModel::a100();
+        let t = g.syevd_time(1024);
+        assert!((0.01..0.05).contains(&t), "syevd(1024) = {t}");
+    }
+
+    #[test]
+    fn table1_resnet50_ordering_and_ratios() {
+        // Paper Table 1 (bs 1024 / 16 GPUs): SGD 0.09, Jorge 0.09, Shampoo 0.12
+        let (g, c) = table1_setup();
+        let net = resnet50().blocked(1024);
+        let sgd = project_iteration(&g, &c, &net, OptKind::Sgd, 50, 0.085, 16).total();
+        let jorge = project_iteration(&g, &c, &net, OptKind::Jorge, 50, 0.085, 16).total();
+        let shampoo = project_iteration(&g, &c, &net, OptKind::Shampoo, 50, 0.085, 16).total();
+        assert!(jorge < shampoo, "jorge {jorge} !< shampoo {shampoo}");
+        // Jorge within ~10% of SGD
+        assert!(jorge / sgd < 1.12, "jorge/sgd = {}", jorge / sgd);
+        // Shampoo 15-60% slower than SGD (paper: 33%)
+        let ratio = shampoo / sgd;
+        assert!((1.1..1.8).contains(&ratio), "shampoo/sgd = {ratio}");
+    }
+
+    #[test]
+    fn table1_deeplab_ordering() {
+        // Paper: SGD 0.33, Jorge 0.37, Shampoo 0.47 (bs 64 / 4 GPUs, every 50)
+        let (g, c) = table1_setup();
+        let net = deeplabv3_r50().blocked(1024);
+        let sgd = project_iteration(&g, &c, &net, OptKind::Sgd, 50, 0.32, 4).total();
+        let jorge = project_iteration(&g, &c, &net, OptKind::Jorge, 50, 0.32, 4).total();
+        let shampoo = project_iteration(&g, &c, &net, OptKind::Shampoo, 50, 0.32, 4).total();
+        assert!(sgd < jorge && jorge < shampoo);
+        assert!(jorge / sgd < 1.25, "jorge/sgd = {}", jorge / sgd);
+        assert!(shampoo / sgd > 1.15, "shampoo/sgd = {}", shampoo / sgd);
+    }
+
+    #[test]
+    fn dist_shampoo_beats_serial_shampoo_but_not_jorge_by_much() {
+        // Fig. 2-right structure: serial shampoo slowest per iter; dist
+        // shampoo close to jorge; jorge still <= dist shampoo.
+        let (g, c) = table1_setup();
+        let net = resnet50().blocked(1024);
+        let serial = project_iteration(&g, &c, &net, OptKind::Shampoo, 50, 0.085, 16).total();
+        let dist = project_dist_shampoo_iteration(&g, &c, &net, 50, 0.085, 16).total();
+        let jorge = project_iteration(&g, &c, &net, OptKind::Jorge, 50, 0.085, 16).total();
+        assert!(dist < serial);
+        assert!(jorge <= dist * 1.02, "jorge {jorge} vs dist {dist}");
+    }
+
+    #[test]
+    fn frequent_updates_hurt_shampoo_more_than_jorge() {
+        let (g, c) = table1_setup();
+        let net = resnet50().blocked(1024);
+        let j1 = project_iteration(&g, &c, &net, OptKind::Jorge, 1, 0.085, 16).total();
+        let s1 = project_iteration(&g, &c, &net, OptKind::Shampoo, 1, 0.085, 16).total();
+        let j50 = project_iteration(&g, &c, &net, OptKind::Jorge, 50, 0.085, 16).total();
+        let s50 = project_iteration(&g, &c, &net, OptKind::Shampoo, 50, 0.085, 16).total();
+        assert!((s1 - s50) > (j1 - j50));
+    }
+}

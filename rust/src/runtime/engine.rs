@@ -1,0 +1,224 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once, execute
+//! many times. Adapted from /opt/xla-example/load_hlo — HLO *text* is the
+//! interchange format (see aot.py).
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::values::HostTensor;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// A compiled artifact with its manifest spec.
+pub struct CompiledStep {
+    pub spec: ArtifactSpec,
+    exe: PjRtLoadedExecutable,
+}
+
+impl CompiledStep {
+    /// Execute with host tensors; returns one host tensor per output.
+    ///
+    /// The executables are lowered with `return_tuple=True`, so PJRT
+    /// hands back a single tuple buffer which we decompose host-side.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if t.shape() != spec.shape.as_slice() {
+                return Err(anyhow!(
+                    "{}: input {} shape {:?} != spec {:?}",
+                    self.spec.name,
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                ));
+            }
+        }
+        let literals: Vec<Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} outputs, got {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                parts.len()
+            ));
+        }
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+/// PJRT client + compiled-executable cache.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: PjRtClient,
+    cache: Mutex<BTreeMap<String, std::sync::Arc<CompiledStep>>>,
+}
+
+// PJRT CPU client and executables are internally synchronized.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+unsafe impl Send for CompiledStep {}
+unsafe impl Sync for CompiledStep {}
+
+impl Engine {
+    pub fn new(artifacts_dir: &str) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
+        let client = PjRtClient::cpu()?;
+        Ok(Engine { manifest, client, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<CompiledStep>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(name) {
+            return Ok(hit.clone());
+        }
+        let spec = self.manifest.artifact(name).map_err(|e| anyhow!(e))?.clone();
+        let path = self.manifest.artifact_path(&spec);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let step = std::sync::Arc::new(CompiledStep { spec, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), step.clone());
+        Ok(step)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Rng;
+
+    fn artifacts_dir() -> String {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+    }
+
+    fn engine() -> Option<Engine> {
+        if !std::path::Path::new(&artifacts_dir()).join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Engine::new(&artifacts_dir()).unwrap())
+    }
+
+    #[test]
+    fn kernel_matmul_artifact_matches_native_gemm() {
+        let Some(eng) = engine() else { return };
+        let step = eng.load("kernel_matmul").unwrap();
+        let mut rng = Rng::new(0);
+        let a = crate::tensor::Matrix::randn(48, 32, 1.0, &mut rng);
+        let b = crate::tensor::Matrix::randn(32, 56, 1.0, &mut rng);
+        let out = step
+            .run(&[
+                HostTensor::from_f32(vec![48, 32], a.data.clone()),
+                HostTensor::from_f32(vec![32, 56], b.data.clone()),
+            ])
+            .unwrap();
+        let want = crate::tensor::matmul(&a, &b);
+        let got = out[0].as_f32().unwrap();
+        let max_err = got
+            .iter()
+            .zip(&want.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "pallas-artifact vs native gemm: {max_err}");
+    }
+
+    #[test]
+    fn kernel_jorge_update_artifact_matches_native_mirror() {
+        let Some(eng) = engine() else { return };
+        let step = eng.load("kernel_jorge_update").unwrap();
+        let mut rng = Rng::new(1);
+        let g = crate::tensor::Matrix::randn(64, 40, 0.3, &mut rng);
+        let s = crate::tensor::gram_left(&g);
+        let p = crate::tensor::Matrix::eye(64, (1e-6f32).powf(-0.25));
+        let out = step
+            .run(&[
+                HostTensor::from_f32(vec![64, 64], p.data.clone()),
+                HostTensor::from_f32(vec![64, 64], s.data.clone()),
+            ])
+            .unwrap();
+        let want = crate::tensor::jorge_update(&p, &s);
+        let got = out[0].as_f32().unwrap();
+        let scale = want.max_abs();
+        let max_err = got
+            .iter()
+            .zip(&want.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            max_err / scale < 1e-3,
+            "HLO jorge_update vs rust mirror: rel {}",
+            max_err / scale
+        );
+    }
+
+    #[test]
+    fn kernel_newton_root_artifact_matches_native() {
+        let Some(eng) = engine() else { return };
+        let step = eng.load("kernel_newton_root").unwrap();
+        let mut rng = Rng::new(2);
+        let g = crate::tensor::Matrix::randn(32, 32, 0.5, &mut rng);
+        let mut a = crate::tensor::gram_left(&g);
+        a.scale_inplace(1.0 / 32.0);
+        for i in 0..32 {
+            a.data[i * 32 + i] += 0.1;
+        }
+        let out = step
+            .run(&[HostTensor::from_f32(vec![32, 32], a.data.clone())])
+            .unwrap();
+        let want = crate::tensor::inv_fourth_root_newton(&a, 15, 1e-6);
+        let got = out[0].as_f32().unwrap();
+        let max_err = got
+            .iter()
+            .zip(&want.data)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err / want.max_abs() < 5e-3, "rel {}", max_err / want.max_abs());
+    }
+
+    #[test]
+    fn run_rejects_wrong_arity_and_shape() {
+        let Some(eng) = engine() else { return };
+        let step = eng.load("kernel_matmul").unwrap();
+        assert!(step.run(&[]).is_err());
+        let bad = vec![
+            HostTensor::from_f32(vec![4, 4], vec![0.0; 16]),
+            HostTensor::from_f32(vec![32, 56], vec![0.0; 32 * 56]),
+        ];
+        assert!(step.run(&bad).is_err());
+    }
+
+    #[test]
+    fn executable_cache_reuses() {
+        let Some(eng) = engine() else { return };
+        let a = eng.load("kernel_matmul").unwrap();
+        let b = eng.load("kernel_matmul").unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+    }
+}

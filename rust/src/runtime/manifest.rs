@@ -1,0 +1,329 @@
+//! Typed view of `artifacts/manifest.json` (written by `aot.py`).
+
+use crate::jsonio::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => Err(format!("unknown dtype {other:?}")),
+        }
+    }
+}
+
+/// Initialisation rule for a param/state tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Init {
+    Zeros,
+    Ones,
+    Eye { scale: f32 },
+    He { fan_in: usize, scale: f32 },
+    Normal { std: f32 },
+}
+
+impl Init {
+    fn parse(j: &Json) -> Result<Init, String> {
+        let kind = j.get("kind").and_then(|k| k.as_str()).ok_or("init: no kind")?;
+        match kind {
+            "zeros" => Ok(Init::Zeros),
+            "ones" => Ok(Init::Ones),
+            "eye" => Ok(Init::Eye {
+                scale: j.get("scale").and_then(|v| v.as_f64()).ok_or("eye: no scale")? as f32,
+            }),
+            "he" => Ok(Init::He {
+                fan_in: j.get("fan_in").and_then(|v| v.as_usize()).ok_or("he: no fan_in")?,
+                scale: j.get("scale").and_then(|v| v.as_f64()).unwrap_or(1.0) as f32,
+            }),
+            "normal" => Ok(Init::Normal {
+                std: j.get("std").and_then(|v| v.as_f64()).ok_or("normal: no std")? as f32,
+            }),
+            other => Err(format!("unknown init kind {other:?}")),
+        }
+    }
+}
+
+/// The role an input/output plays in the step signature.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Param,
+    State,
+    Grad,
+    X,
+    Y,
+    Lr,
+    Wd,
+    Loss,
+    Metric,
+    In,
+    Out,
+}
+
+impl Role {
+    fn parse(s: &str) -> Result<Self, String> {
+        Ok(match s {
+            "param" => Role::Param,
+            "state" => Role::State,
+            "grad" => Role::Grad,
+            "x" => Role::X,
+            "y" => Role::Y,
+            "lr" => Role::Lr,
+            "wd" => Role::Wd,
+            "loss" => Role::Loss,
+            "metric" => Role::Metric,
+            "in" => Role::In,
+            "out" => Role::Out,
+            other => return Err(format!("unknown role {other:?}")),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    pub role: Role,
+    pub init: Option<Init>,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub model: Option<String>,
+    pub optimizer: Option<String>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn input_index(&self, role: Role) -> Option<usize> {
+        self.inputs.iter().position(|i| i.role == role)
+    }
+    pub fn count_inputs(&self, role: Role) -> usize {
+        self.inputs.iter().filter(|i| i.role == role).count()
+    }
+    pub fn count_outputs(&self, role: Role) -> usize {
+        self.outputs.iter().filter(|o| o.role == role).count()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub metric: String,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub x_shape: Vec<usize>,
+    pub y_shape: Vec<usize>,
+    pub param_count: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub hyper: BTreeMap<String, f64>,
+}
+
+fn parse_io(j: &Json) -> Result<IoSpec, String> {
+    let name = j.get("name").and_then(|v| v.as_str()).ok_or("io: no name")?.to_string();
+    let shape = j
+        .get("shape")
+        .and_then(|v| v.as_arr())
+        .ok_or("io: no shape")?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| "io: bad dim".to_string()))
+        .collect::<Result<Vec<_>, _>>()?;
+    let dtype = Dtype::parse(j.get("dtype").and_then(|v| v.as_str()).unwrap_or("f32"))?;
+    let role = Role::parse(j.get("role").and_then(|v| v.as_str()).ok_or("io: no role")?)?;
+    let init = match j.get("init") {
+        Some(i) => Some(Init::parse(i)?),
+        None => None,
+    };
+    Ok(IoSpec { name, shape, dtype, role, init })
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {path:?}: {e}. Run `make artifacts` first."))?;
+        let j = Json::parse(&text)?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, art) in j.get("artifacts").and_then(|a| a.as_obj()).ok_or("no artifacts")? {
+            let inputs = art
+                .get("inputs")
+                .and_then(|v| v.as_arr())
+                .ok_or("artifact: no inputs")?
+                .iter()
+                .map(parse_io)
+                .collect::<Result<Vec<_>, _>>()
+                .map_err(|e| format!("{name}: {e}"))?;
+            let outputs = art
+                .get("outputs")
+                .and_then(|v| v.as_arr())
+                .ok_or("artifact: no outputs")?
+                .iter()
+                .map(parse_io)
+                .collect::<Result<Vec<_>, _>>()
+                .map_err(|e| format!("{name}: {e}"))?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: art.get("file").and_then(|v| v.as_str()).ok_or("no file")?.to_string(),
+                    kind: art.get("kind").and_then(|v| v.as_str()).unwrap_or("?").to_string(),
+                    model: art.get("model").and_then(|v| v.as_str()).map(String::from),
+                    optimizer: art.get("optimizer").and_then(|v| v.as_str()).map(String::from),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        let mut models = BTreeMap::new();
+        if let Some(ms) = j.get("models").and_then(|m| m.as_obj()) {
+            for (name, m) in ms {
+                models.insert(
+                    name.clone(),
+                    ModelMeta {
+                        name: name.clone(),
+                        metric: m.get("metric").and_then(|v| v.as_str()).unwrap_or("?").into(),
+                        batch: m.get("batch").and_then(|v| v.as_usize()).unwrap_or(0),
+                        eval_batch: m.get("eval_batch").and_then(|v| v.as_usize()).unwrap_or(0),
+                        x_shape: m
+                            .get("x_shape")
+                            .and_then(|v| v.as_arr())
+                            .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+                            .unwrap_or_default(),
+                        y_shape: m
+                            .get("y_shape")
+                            .and_then(|v| v.as_arr())
+                            .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+                            .unwrap_or_default(),
+                        param_count: m.get("param_count").and_then(|v| v.as_usize()).unwrap_or(0),
+                    },
+                );
+            }
+        }
+
+        let mut hyper = BTreeMap::new();
+        if let Some(h) = j.get("hyper").and_then(|h| h.as_obj()) {
+            for (k, v) in h {
+                if let Some(f) = v.as_f64() {
+                    hyper.insert(k.clone(), f);
+                }
+            }
+        }
+
+        Ok(Manifest { dir, artifacts, models, hyper })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec, String> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| format!("artifact {name:?} not in manifest (have: {:?})",
+                self.artifacts.keys().take(8).collect::<Vec<_>>()))
+    }
+
+    pub fn artifact_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Train artifact name for (model, optimizer, update_precond).
+    pub fn train_name(model: &str, opt: &str, update_precond: bool) -> String {
+        if update_precond || !matches!(opt, "shampoo" | "jorge") {
+            format!("train_{model}_{opt}")
+        } else {
+            format!("train_{model}_{opt}_skip")
+        }
+    }
+
+    pub fn apply_name(model: &str, opt: &str, update_precond: bool) -> String {
+        if update_precond || !matches!(opt, "shampoo" | "jorge") {
+            format!("apply_{model}_{opt}")
+        } else {
+            format!("apply_{model}_{opt}_skip")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert!(m.artifacts.contains_key("train_mlp_jorge"));
+        assert!(m.models.contains_key("mlp"));
+        let art = m.artifact("train_mlp_jorge").unwrap();
+        // trailing inputs are x, y, lr, wd
+        let roles: Vec<Role> = art.inputs.iter().map(|i| i.role).collect();
+        assert_eq!(&roles[roles.len() - 4..], &[Role::X, Role::Y, Role::Lr, Role::Wd]);
+        assert_eq!(art.count_outputs(Role::Loss), 1);
+        // every param/state input has an init rule
+        for i in &art.inputs {
+            if matches!(i.role, Role::Param | Role::State) {
+                assert!(i.init.is_some(), "{}", i.name);
+            }
+        }
+        assert!(m.artifact_path(art).exists());
+    }
+
+    #[test]
+    fn train_and_apply_names() {
+        assert_eq!(Manifest::train_name("mlp", "sgd", false), "train_mlp_sgd");
+        assert_eq!(Manifest::train_name("mlp", "jorge", true), "train_mlp_jorge");
+        assert_eq!(Manifest::train_name("mlp", "jorge", false), "train_mlp_jorge_skip");
+        assert_eq!(Manifest::apply_name("cnn", "shampoo", false), "apply_cnn_shampoo_skip");
+    }
+
+    #[test]
+    fn missing_dir_is_error_with_hint() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn hyper_values_present() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert_eq!(m.hyper.get("beta1").copied(), Some(0.9));
+        assert!(m.hyper.contains_key("precond_eps"));
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: manifest-driven artifact loading and execution.
+//!
+//! `Engine` wraps the `xla` crate's PJRT CPU client; `CompiledStep` pairs
+//! a compiled executable with its manifest I/O spec so the coordinator is
+//! generic over models and optimizers. Host tensors (`HostTensor`) carry
+//! dtype-tagged data between the coordinator and the device.
+
+pub mod engine;
+pub mod manifest;
+pub mod values;
+
+pub use engine::{CompiledStep, Engine};
+pub use manifest::{ArtifactSpec, Dtype, Init, IoSpec, Manifest, Role};
+pub use values::HostTensor;

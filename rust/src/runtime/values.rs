@@ -1,0 +1,222 @@
+//! Host-side tensors and conversion to/from XLA literals.
+
+use super::manifest::{Dtype, Init, IoSpec};
+use crate::rngx::Rng;
+use xla::Literal;
+
+/// A dtype-tagged host tensor matching one artifact input/output slot.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn zeros(spec: &IoSpec) -> HostTensor {
+        let n = spec.elements();
+        match spec.dtype {
+            Dtype::F32 => HostTensor::F32 { shape: spec.shape.clone(), data: vec![0.0; n] },
+            Dtype::I32 => HostTensor::I32 { shape: spec.shape.clone(), data: vec![0; n] },
+        }
+    }
+
+    /// Build the initial value of a param/state tensor from its manifest
+    /// init rule (mirrors `aot.param_init_meta`/`state_init_meta`).
+    pub fn from_init(spec: &IoSpec, rng: &mut Rng) -> Result<HostTensor, String> {
+        let init = spec
+            .init
+            .as_ref()
+            .ok_or_else(|| format!("{}: no init rule", spec.name))?;
+        let n = spec.elements();
+        let data = match init {
+            Init::Zeros => vec![0.0f32; n],
+            Init::Ones => vec![1.0f32; n],
+            Init::Eye { scale } => {
+                if spec.shape.len() != 2 || spec.shape[0] != spec.shape[1] {
+                    return Err(format!("{}: eye needs square shape", spec.name));
+                }
+                let dim = spec.shape[0];
+                let mut d = vec![0.0f32; n];
+                for i in 0..dim {
+                    d[i * dim + i] = *scale;
+                }
+                d
+            }
+            Init::He { fan_in, scale } => {
+                let std = (2.0 / *fan_in as f32).sqrt() * scale;
+                let mut d = vec![0.0f32; n];
+                rng.fill_normal(&mut d, 0.0, std);
+                d
+            }
+            Init::Normal { std } => {
+                let mut d = vec![0.0f32; n];
+                rng.fill_normal(&mut d, 0.0, *std);
+                d
+            }
+        };
+        Ok(HostTensor::F32 { shape: spec.shape.clone(), data })
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_f32(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn from_i32(shape: Vec<usize>, data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } => shape,
+            HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Option<&mut Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    /// First element as f64 (for scalar loss/metric outputs).
+    pub fn scalar(&self) -> f64 {
+        match self {
+            HostTensor::F32 { data, .. } => data[0] as f64,
+            HostTensor::I32 { data, .. } => data[0] as f64,
+        }
+    }
+
+    pub fn to_literal(&self) -> anyhow::Result<Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        match self {
+            HostTensor::F32 { data, .. } => {
+                if dims.is_empty() {
+                    Ok(Literal::scalar(data[0]))
+                } else {
+                    Ok(Literal::vec1(data).reshape(&dims)?)
+                }
+            }
+            HostTensor::I32 { data, .. } => {
+                if dims.is_empty() {
+                    Ok(Literal::scalar(data[0]))
+                } else {
+                    Ok(Literal::vec1(data).reshape(&dims)?)
+                }
+            }
+        }
+    }
+
+    pub fn from_literal(lit: &Literal, spec: &IoSpec) -> anyhow::Result<HostTensor> {
+        Ok(match spec.dtype {
+            Dtype::F32 => HostTensor::F32 { shape: spec.shape.clone(), data: lit.to_vec::<f32>()? },
+            Dtype::I32 => HostTensor::I32 { shape: spec.shape.clone(), data: lit.to_vec::<i32>()? },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Role;
+
+    fn spec(name: &str, shape: Vec<usize>, dtype: Dtype, init: Option<Init>) -> IoSpec {
+        IoSpec { name: name.into(), shape, dtype, role: Role::Param, init }
+    }
+
+    #[test]
+    fn init_zeros_ones_eye() {
+        let mut rng = Rng::new(0);
+        let z = HostTensor::from_init(&spec("z", vec![2, 3], Dtype::F32, Some(Init::Zeros)), &mut rng).unwrap();
+        assert_eq!(z.as_f32().unwrap(), &[0.0; 6]);
+        let o = HostTensor::from_init(&spec("o", vec![4, 1], Dtype::F32, Some(Init::Ones)), &mut rng).unwrap();
+        assert_eq!(o.as_f32().unwrap(), &[1.0; 4]);
+        let e = HostTensor::from_init(
+            &spec("e", vec![3, 3], Dtype::F32, Some(Init::Eye { scale: 2.5 })),
+            &mut rng,
+        )
+        .unwrap();
+        assert_eq!(e.as_f32().unwrap(), &[2.5, 0., 0., 0., 2.5, 0., 0., 0., 2.5]);
+    }
+
+    #[test]
+    fn init_he_statistics() {
+        let mut rng = Rng::new(1);
+        let h = HostTensor::from_init(
+            &spec("h", vec![100, 200], Dtype::F32, Some(Init::He { fan_in: 100, scale: 1.0 })),
+            &mut rng,
+        )
+        .unwrap();
+        let d = h.as_f32().unwrap();
+        let mean: f32 = d.iter().sum::<f32>() / d.len() as f32;
+        let var: f32 = d.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d.len() as f32;
+        assert!(mean.abs() < 0.01);
+        assert!((var - 0.02).abs() < 0.005, "var {var}"); // 2/fan_in = 0.02
+    }
+
+    #[test]
+    fn eye_requires_square() {
+        let mut rng = Rng::new(2);
+        assert!(HostTensor::from_init(
+            &spec("e", vec![2, 3], Dtype::F32, Some(Init::Eye { scale: 1.0 })),
+            &mut rng
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::from_f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(
+            &lit,
+            &spec("t", vec![2, 2], Dtype::F32, None),
+        )
+        .unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_and_scalar() {
+        let t = HostTensor::from_i32(vec![3], vec![7, 8, 9]);
+        let lit = t.to_literal().unwrap();
+        let back =
+            HostTensor::from_literal(&lit, &spec("t", vec![3], Dtype::I32, None)).unwrap();
+        assert_eq!(t, back);
+
+        let s = HostTensor::scalar_f32(0.25);
+        let lit = s.to_literal().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![0.25]);
+    }
+}

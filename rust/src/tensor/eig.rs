@@ -1,0 +1,175 @@
+//! Cyclic Jacobi eigensolver for symmetric matrices (substrate).
+//!
+//! This is the "expensive, iterative, irregular" computation the paper's
+//! whole point is to avoid on accelerators: we need it (a) as the exact
+//! oracle for inverse-root validation, and (b) to *cost* the
+//! eigendecomposition path in the Table-1 microbenches, where it plays the
+//! role of cuSOLVER `syevd` in the paper's Shampoo baseline.
+
+use super::matrix::Matrix;
+
+/// Eigendecomposition A = V diag(w) V^T for symmetric A.
+/// Returns (eigenvalues ascending, V with eigenvectors in columns).
+pub fn eigh(a: &Matrix, max_sweeps: usize, tol: f64) -> (Vec<f32>, Matrix) {
+    assert!(a.is_square(), "eigh needs a square matrix");
+    let n = a.rows;
+    let mut m: Vec<f64> = a.data.iter().map(|&v| v as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    for _sweep in 0..max_sweeps {
+        // off-diagonal magnitude
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[i * n + j] * m[i * n + j];
+            }
+        }
+        if off.sqrt() <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p and q
+                for k in 0..n {
+                    let mkp = m[k * n + p];
+                    let mkq = m[k * n + q];
+                    m[k * n + p] = c * mkp - s * mkq;
+                    m[k * n + q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[p * n + k];
+                    let mqk = m[q * n + k];
+                    m[p * n + k] = c * mpk - s * mqk;
+                    m[q * n + k] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // extract + sort ascending
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[i * n + i], i)).collect();
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let w: Vec<f32> = pairs.iter().map(|&(val, _)| val as f32).collect();
+    let mut vec_sorted = Matrix::zeros(n, n);
+    for (new_col, &(_, old_col)) in pairs.iter().enumerate() {
+        for r in 0..n {
+            vec_sorted.data[r * n + new_col] = v[r * n + old_col] as f32;
+        }
+    }
+    (w, vec_sorted)
+}
+
+/// Convenience with defaults good to ~1e-6 for n <= 1024.
+pub fn eigh_default(a: &Matrix) -> (Vec<f32>, Matrix) {
+    eigh(a, 30, 1e-10 * (a.rows as f64))
+}
+
+/// Apply `f` to the spectrum: V diag(f(w)) V^T.
+pub fn spectral_map(a: &Matrix, f: impl Fn(f32) -> f32) -> Matrix {
+    let (w, v) = eigh_default(a);
+    let n = a.rows;
+    // V * diag(f(w))
+    let mut vf = v.clone();
+    for c in 0..n {
+        let s = f(w[c]);
+        for r in 0..n {
+            vf.data[r * n + c] *= s;
+        }
+    }
+    super::gemm::matmul(&vf, &v.t())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Rng;
+    use crate::tensor::gemm::{gram_left, matmul};
+
+    fn random_spd(n: usize, seed: u64, lo: f32, hi: f32) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let g = Matrix::randn(n, n, 1.0, &mut rng);
+        let mut s = gram_left(&g);
+        // shift spectrum into [lo, hi]-ish
+        let sc = (hi - lo) / (4.0 * n as f32);
+        s.scale_inplace(sc);
+        for i in 0..n {
+            s.data[i * n + i] += lo;
+        }
+        s
+    }
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let mut a = Matrix::zeros(3, 3);
+        a.data[0] = 3.0;
+        a.data[4] = 1.0;
+        a.data[8] = 2.0;
+        let (w, _) = eigh_default(&a);
+        assert!((w[0] - 1.0).abs() < 1e-6);
+        assert!((w[1] - 2.0).abs() < 1e-6);
+        assert!((w[2] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reconstruction() {
+        let a = random_spd(16, 0, 0.1, 5.0);
+        let rec = spectral_map(&a, |x| x);
+        assert!(
+            rec.max_abs_diff(&a) < 1e-3,
+            "reconstruction err {}",
+            rec.max_abs_diff(&a)
+        );
+    }
+
+    #[test]
+    fn eigenvectors_are_orthonormal() {
+        let a = random_spd(12, 1, 0.5, 3.0);
+        let (_, v) = eigh_default(&a);
+        let vtv = matmul(&v.t(), &v);
+        assert!(vtv.max_abs_diff(&Matrix::eye(12, 1.0)) < 1e-4);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1, 3
+        let a = Matrix::from_vec(2, 2, vec![2., 1., 1., 2.]);
+        let (w, _) = eigh_default(&a);
+        assert!((w[0] - 1.0).abs() < 1e-6);
+        assert!((w[1] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spectral_map_inverse() {
+        let a = random_spd(10, 2, 1.0, 4.0);
+        let inv = spectral_map(&a, |x| 1.0 / x);
+        let prod = matmul(&a, &inv);
+        assert!(prod.max_abs_diff(&Matrix::eye(10, 1.0)) < 1e-3);
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let a = random_spd(14, 3, 0.1, 2.0);
+        let (w, _) = eigh_default(&a);
+        let tr: f64 = w.iter().map(|&x| x as f64).sum();
+        assert!((tr - a.trace()).abs() < 1e-3 * a.trace().abs().max(1.0));
+    }
+}

@@ -1,0 +1,242 @@
+//! Blocked, multi-threaded GEMM — the Rust mirror of the Pallas kernel.
+//!
+//! The optimizer mirrors in `optim/` and the Table-1 micro-benchmarks run
+//! on this. Layout mirrors the L1 kernel: tile the output, stream panels
+//! of A and B through cache (the CPU analogue of HBM->VMEM staging), and
+//! accumulate in f32 registers. Threading splits the output row-blocks
+//! across a scoped thread pool.
+
+use super::matrix::Matrix;
+
+/// Tile edges. 64x64 output tiles with a 64-deep k panel keep the working
+/// set (3 * 64*64*4 B = 48 KiB) inside L1/L2 — measured best on this host
+/// (see EXPERIMENTS.md §Perf).
+const MC: usize = 64;
+const NC: usize = 64;
+const KC: usize = 64;
+
+/// Single-threaded blocked kernel: `c[i0.., j0..] += a_panel @ b_panel`.
+#[inline]
+fn gemm_block(
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    i0: usize,
+    j0: usize,
+    k0: usize,
+    mi: usize,
+    nj: usize,
+    kk: usize,
+) {
+    for i in i0..i0 + mi {
+        let arow = &a[i * lda + k0..i * lda + k0 + kk];
+        for k in 0..kk {
+            let aik = arow[k];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[(k0 + k) * ldb + j0..(k0 + k) * ldb + j0 + nj];
+            let crow = &mut c[i * ldc + j0..i * ldc + j0 + nj];
+            // inner loop: c[i, j0..] += aik * b[k, j0..]; auto-vectorises
+            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += aik * bv;
+            }
+        }
+    }
+}
+
+/// `A @ B` single-threaded.
+pub fn matmul_st(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "gemm: {:?} @ {:?}", a.shape(), b.shape());
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    for i0 in (0..m).step_by(MC) {
+        let mi = MC.min(m - i0);
+        for k0 in (0..k).step_by(KC) {
+            let kk = KC.min(k - k0);
+            for j0 in (0..n).step_by(NC) {
+                let nj = NC.min(n - j0);
+                gemm_block(&a.data, k, &b.data, n, &mut c.data, n, i0, j0, k0, mi, nj, kk);
+            }
+        }
+    }
+    c
+}
+
+/// `A @ B`, multi-threaded over output row blocks when the problem is big
+/// enough to amortise thread spawn (std::thread::scope — no pool dep).
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    let threads = available_threads();
+    if threads <= 1 || flops < 4e6 || m < 2 * MC {
+        return matmul_st(a, b);
+    }
+    assert_eq!(a.cols, b.rows, "gemm: {:?} @ {:?}", a.shape(), b.shape());
+    let mut c = Matrix::zeros(m, n);
+    let row_blocks: Vec<usize> = (0..m).step_by(MC).collect();
+    let nchunks = threads.min(row_blocks.len());
+    let chunk = row_blocks.len().div_ceil(nchunks);
+
+    // Split C into disjoint row bands, one per worker.
+    let band_rows = chunk * MC;
+    let bands: Vec<&mut [f32]> = c.data.chunks_mut(band_rows * n).collect();
+    std::thread::scope(|s| {
+        for (bi, band) in bands.into_iter().enumerate() {
+            let a = &a.data;
+            let b = &b.data;
+            s.spawn(move || {
+                let i_start = bi * band_rows;
+                let mi_total = band.len() / n;
+                for i0 in (0..mi_total).step_by(MC) {
+                    let mi = MC.min(mi_total - i0);
+                    for k0 in (0..k).step_by(KC) {
+                        let kk = KC.min(k - k0);
+                        for j0 in (0..n).step_by(NC) {
+                            let nj = NC.min(n - j0);
+                            // band is row-shifted view of C
+                            gemm_block(
+                                &a[(i_start) * k..],
+                                k,
+                                b,
+                                n,
+                                band,
+                                n,
+                                i0,
+                                j0,
+                                k0,
+                                mi,
+                                nj,
+                                kk,
+                            );
+                        }
+                    }
+                }
+            });
+        }
+    });
+    c
+}
+
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// `A @ A` convenience.
+pub fn square(a: &Matrix) -> Matrix {
+    matmul(a, a)
+}
+
+/// `G @ G^T` (left gram) without materialising the transpose.
+pub fn gram_left(g: &Matrix) -> Matrix {
+    let (m, k) = g.shape();
+    let mut c = Matrix::zeros(m, m);
+    for i in 0..m {
+        let gi = &g.data[i * k..(i + 1) * k];
+        for j in i..m {
+            let gj = &g.data[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (x, y) in gi.iter().zip(gj.iter()) {
+                acc += x * y;
+            }
+            c.data[i * m + j] = acc;
+            c.data[j * m + i] = acc;
+        }
+    }
+    c
+}
+
+/// `G^T @ G` (right gram).
+pub fn gram_right(g: &Matrix) -> Matrix {
+    gram_left(&g.t())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Rng;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let mut c = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for kk in 0..k {
+                    acc += a.at(i, kk) as f64 * b.at(kk, j) as f64;
+                }
+                c.data[i * n + j] = acc as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive_small() {
+        let mut rng = Rng::new(0);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 9, 23), (64, 64, 64), (65, 63, 67)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let got = matmul_st(&a, &b);
+            let want = naive(&a, &b);
+            assert!(
+                got.max_abs_diff(&want) < 1e-3,
+                "({m},{k},{n}): {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn threaded_matches_single_threaded() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(300, 200, 1.0, &mut rng);
+        let b = Matrix::randn(200, 250, 1.0, &mut rng);
+        let st = matmul_st(&a, &b);
+        let mt = matmul(&a, &b);
+        assert!(st.max_abs_diff(&mt) < 1e-4);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(40, 40, 1.0, &mut rng);
+        let eye = Matrix::eye(40, 1.0);
+        assert!(matmul(&a, &eye).max_abs_diff(&a) < 1e-6);
+        assert!(matmul(&eye, &a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn gram_matches_matmul() {
+        let mut rng = Rng::new(3);
+        let g = Matrix::randn(31, 17, 1.0, &mut rng);
+        let want_l = matmul_st(&g, &g.t());
+        let want_r = matmul_st(&g.t(), &g);
+        assert!(gram_left(&g).max_abs_diff(&want_l) < 1e-4);
+        assert!(gram_right(&g).max_abs_diff(&want_r) < 1e-4);
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let mut rng = Rng::new(4);
+        let g = Matrix::randn(20, 9, 1.0, &mut rng);
+        let s = gram_left(&g);
+        for i in 0..20 {
+            assert!(s.at(i, i) >= 0.0);
+            for j in 0..20 {
+                assert_eq!(s.at(i, j), s.at(j, i));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(4, 2);
+        matmul_st(&a, &b);
+    }
+}

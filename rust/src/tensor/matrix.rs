@@ -1,0 +1,250 @@
+//! Dense row-major f32 matrix — the linear-algebra substrate.
+//!
+//! Small by design: exactly the operations the optimizer mirrors and the
+//! benchmark harness need (GEMM in `gemm.rs`, eigensolver in `eig.rs`,
+//! inverse roots in `roots.rs`).
+
+use crate::rngx::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length != rows*cols");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// `scale * I`.
+    pub fn eye(n: usize, scale: f32) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = scale;
+        }
+        m
+    }
+
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, 0.0, std);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    pub fn t(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn scale(&self, s: f32) -> Matrix {
+        let mut out = self.clone();
+        for v in out.data.iter_mut() {
+            *v *= s;
+        }
+        out
+    }
+
+    pub fn scale_inplace(&mut self, s: f32) {
+        for v in self.data.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        out
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+        out
+    }
+
+    /// `self += s * other` (axpy).
+    pub fn add_scaled_inplace(&mut self, s: f32, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    /// Hadamard product.
+    pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a *= b;
+        }
+        out
+    }
+
+    pub fn frobenius_sq(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.frobenius_sq().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// max |self - other|
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (&a, &b)| m.max((a - b).abs()))
+    }
+
+    /// Symmetrise: (A + A^T)/2 — used to clean up drift in preconditioners.
+    pub fn symmetrize(&self) -> Matrix {
+        assert!(self.is_square());
+        let n = self.rows;
+        let mut out = self.clone();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = 0.5 * (self.at(i, j) + self.at(j, i));
+                out.data[i * n + j] = v;
+                out.data[j * n + i] = v;
+            }
+        }
+        out
+    }
+
+    pub fn trace(&self) -> f64 {
+        assert!(self.is_square());
+        (0..self.rows).map(|i| self.at(i, i) as f64).sum()
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eye_and_at() {
+        let m = Matrix::eye(3, 2.0);
+        assert_eq!(m.at(0, 0), 2.0);
+        assert_eq!(m.at(0, 1), 0.0);
+        assert_eq!(m.trace(), 6.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(0);
+        let m = Matrix::randn(37, 23, 1.0, &mut rng);
+        let tt = m.t().t();
+        assert_eq!(m, tt);
+    }
+
+    #[test]
+    fn transpose_values() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = m.t();
+        assert_eq!(t.shape(), (3, 2));
+        assert_eq!(t.at(2, 1), 6.0);
+        assert_eq!(t.at(0, 1), 4.0);
+    }
+
+    #[test]
+    fn add_sub_scale() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Matrix::from_vec(2, 2, vec![4., 3., 2., 1.]);
+        assert_eq!(a.add(&b).data, vec![5., 5., 5., 5.]);
+        assert_eq!(a.sub(&b).data, vec![-3., -1., 1., 3.]);
+        assert_eq!(a.scale(2.0).data, vec![2., 4., 6., 8.]);
+    }
+
+    #[test]
+    fn axpy() {
+        let mut a = Matrix::from_vec(1, 3, vec![1., 1., 1.]);
+        let b = Matrix::from_vec(1, 3, vec![1., 2., 3.]);
+        a.add_scaled_inplace(0.5, &b);
+        assert_eq!(a.data, vec![1.5, 2.0, 2.5]);
+    }
+
+    #[test]
+    fn frobenius() {
+        let a = Matrix::from_vec(1, 2, vec![3., 4.]);
+        assert!((a.frobenius() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn symmetrize_is_symmetric() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::randn(8, 8, 1.0, &mut rng);
+        let s = m.symmetrize();
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(s.at(i, j), s.at(j, i));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_length_checked() {
+        Matrix::from_vec(2, 2, vec![1.0; 3]);
+    }
+}

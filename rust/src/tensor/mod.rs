@@ -1,0 +1,17 @@
+//! Dense linear algebra substrate: matrices, GEMM, eigensolver, inverse
+//! roots. This is the Rust mirror of the Pallas L1 kernels, used by the
+//! native optimizer mirrors, the property tests and the Table-1
+//! microbenchmarks.
+
+pub mod eig;
+pub mod gemm;
+pub mod matrix;
+pub mod roots;
+
+pub use eig::{eigh, eigh_default, spectral_map};
+pub use gemm::{gram_left, gram_right, matmul, matmul_st};
+pub use matrix::Matrix;
+pub use roots::{
+    dynamic_beta2, inv_fourth_root_eigh, inv_fourth_root_newton, inv_pth_root_eigh,
+    jorge_update,
+};

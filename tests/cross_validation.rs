@@ -1,0 +1,241 @@
+//! Cross-validation: the HLO artifacts and the native Rust mirrors must
+//! implement the SAME optimizer semantics. These tests pin the L1/L2
+//! artifact math to the L3 mirrors on identical inputs.
+
+use jorge::optim::{build, Hyper, StepCtx};
+use jorge::rngx::Rng;
+use jorge::runtime::{Engine, HostTensor, Role};
+use jorge::tensor::Matrix;
+use std::sync::Arc;
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(Engine::new(dir).unwrap()))
+}
+
+/// Drive the apply_* artifact and the native mirror with identical
+/// params/grads for `steps` steps; assert the trajectories agree.
+fn check_apply_matches_native(opt_name: &str, steps: usize, tol: f32) {
+    let Some(eng) = engine() else { return };
+    let full = eng.load(&format!("apply_mlp_{opt_name}")).unwrap();
+    let has_skip = matches!(opt_name, "jorge" | "shampoo");
+    let skip = has_skip.then(|| eng.load(&format!("apply_mlp_{opt_name}_skip")).unwrap());
+
+    // shapes from the artifact spec
+    let param_specs: Vec<_> = full
+        .spec
+        .inputs
+        .iter()
+        .filter(|i| i.role == Role::Param)
+        .cloned()
+        .collect();
+    let shapes: Vec<(usize, usize)> = param_specs
+        .iter()
+        .map(|s| (s.shape[0], s.shape.get(1).copied().unwrap_or(1)))
+        .collect();
+
+    let mut rng = Rng::new(42);
+    let params0: Vec<Matrix> = shapes
+        .iter()
+        .map(|&(m, n)| Matrix::randn(m, n, 0.3, &mut rng))
+        .collect();
+
+    // artifact state from manifest init rules
+    let mut init_rng = Rng::new(7);
+    let mut art_state: Vec<HostTensor> = full
+        .spec
+        .inputs
+        .iter()
+        .filter(|i| i.role == Role::State)
+        .map(|s| HostTensor::from_init(s, &mut init_rng).unwrap())
+        .collect();
+    let mut art_params: Vec<HostTensor> = params0
+        .iter()
+        .zip(&param_specs)
+        .map(|(m, s)| HostTensor::from_f32(s.shape.clone(), m.data.clone()))
+        .collect();
+
+    let mut native = build(opt_name, &shapes, Hyper::default()).unwrap();
+    let mut nat_params = params0.clone();
+
+    let mut grad_rng = Rng::new(99);
+    for step in 0..steps {
+        let update = step % 2 == 0; // exercise full and skip variants
+        let grads: Vec<Matrix> = shapes
+            .iter()
+            .map(|&(m, n)| Matrix::randn(m, n, 0.05, &mut grad_rng))
+            .collect();
+
+        // artifact step
+        let exe = if update || skip.is_none() { &full } else { skip.as_ref().unwrap() };
+        let mut inputs: Vec<HostTensor> = art_params.clone();
+        for (g, s) in grads.iter().zip(&param_specs) {
+            inputs.push(HostTensor::from_f32(s.shape.clone(), g.data.clone()));
+        }
+        inputs.extend(art_state.iter().cloned());
+        inputs.push(HostTensor::scalar_f32(0.05));
+        inputs.push(HostTensor::scalar_f32(1e-3));
+        let mut out = exe.run(&inputs).unwrap();
+        let st = out.split_off(art_params.len());
+        art_params = out;
+        art_state = st;
+
+        // native step
+        native.step(
+            &mut nat_params,
+            &grads,
+            StepCtx { lr: 0.05, weight_decay: 1e-3, update_precond: update },
+        );
+
+        for (i, (a, n)) in art_params.iter().zip(&nat_params).enumerate() {
+            let a = a.as_f32().unwrap();
+            let scale = n.max_abs().max(1e-6);
+            let max_err = a
+                .iter()
+                .zip(&n.data)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                max_err / scale < tol,
+                "{opt_name} step {step} param {i}: rel err {} (tol {tol})",
+                max_err / scale
+            );
+        }
+    }
+}
+
+#[test]
+fn sgd_artifact_matches_native() {
+    check_apply_matches_native("sgd", 4, 1e-4);
+}
+
+#[test]
+fn adamw_artifact_matches_native() {
+    check_apply_matches_native("adamw", 4, 1e-4);
+}
+
+#[test]
+fn jorge_artifact_matches_native() {
+    // f32 GEMM chains: slightly looser tolerance
+    check_apply_matches_native("jorge", 4, 5e-3);
+}
+
+#[test]
+fn shampoo_artifact_matches_native() {
+    check_apply_matches_native("shampoo", 4, 5e-3);
+}
+
+#[test]
+fn fused_train_step_equals_grad_plus_apply() {
+    // train_mlp_sgd(params, state, batch) must equal
+    // apply_mlp_sgd(params, grad_mlp(params, batch), state)
+    let Some(eng) = engine() else { return };
+    let fused = eng.load("train_mlp_sgd").unwrap();
+    let grad = eng.load("grad_mlp").unwrap();
+    let apply = eng.load("apply_mlp_sgd").unwrap();
+
+    let mut rng = Rng::new(5);
+    let params: Vec<HostTensor> = fused
+        .spec
+        .inputs
+        .iter()
+        .filter(|i| i.role == Role::Param)
+        .map(|s| HostTensor::from_init(s, &mut rng).unwrap())
+        .collect();
+    let state: Vec<HostTensor> = fused
+        .spec
+        .inputs
+        .iter()
+        .filter(|i| i.role == Role::State)
+        .map(|s| HostTensor::from_init(s, &mut rng).unwrap())
+        .collect();
+    let xspec = &fused.spec.inputs[fused.spec.input_index(Role::X).unwrap()];
+    let yspec = &fused.spec.inputs[fused.spec.input_index(Role::Y).unwrap()];
+    let n: usize = xspec.shape.iter().product();
+    let mut xdata = vec![0.0f32; n];
+    rng.fill_normal(&mut xdata, 0.0, 1.0);
+    let x = HostTensor::from_f32(xspec.shape.clone(), xdata);
+    let ydata: Vec<i32> = (0..yspec.elements()).map(|_| rng.below(10) as i32).collect();
+    let y = HostTensor::from_i32(yspec.shape.clone(), ydata);
+
+    // fused
+    let mut inputs: Vec<HostTensor> = params.clone();
+    inputs.extend(state.iter().cloned());
+    inputs.push(x.clone());
+    inputs.push(y.clone());
+    inputs.push(HostTensor::scalar_f32(0.1));
+    inputs.push(HostTensor::scalar_f32(1e-4));
+    let fused_out = fused.run(&inputs).unwrap();
+
+    // grad + apply
+    let mut ginputs: Vec<HostTensor> = params.clone();
+    ginputs.push(x);
+    ginputs.push(y);
+    let gout = grad.run(&ginputs).unwrap();
+    let np = params.len();
+    let grads = &gout[..np];
+    let (loss, metric) = (gout[np].scalar(), gout[np + 1].scalar());
+
+    let mut ainputs: Vec<HostTensor> = params.clone();
+    ainputs.extend(grads.iter().cloned());
+    ainputs.extend(state.iter().cloned());
+    ainputs.push(HostTensor::scalar_f32(0.1));
+    ainputs.push(HostTensor::scalar_f32(1e-4));
+    let aout = apply.run(&ainputs).unwrap();
+
+    // compare params, state, loss, metric
+    let fl = fused_out[fused_out.len() - 2].scalar();
+    let fm = fused_out[fused_out.len() - 1].scalar();
+    assert!((fl - loss).abs() < 1e-5, "{fl} vs {loss}");
+    assert!((fm - metric).abs() < 1e-6);
+    for (i, (a, b)) in fused_out[..aout.len()].iter().zip(&aout).enumerate() {
+        let av = a.as_f32().unwrap();
+        let bv = b.as_f32().unwrap();
+        let max_err = av
+            .iter()
+            .zip(bv)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-4, "output {i}: {max_err}");
+    }
+}
+
+#[test]
+fn grad_artifact_zero_for_constant_logits_bias_symmetry() {
+    // sanity on the grad artifact: loss is finite, grads finite & bounded
+    let Some(eng) = engine() else { return };
+    let grad = eng.load("grad_mlp").unwrap();
+    let mut rng = Rng::new(11);
+    let mut inputs: Vec<HostTensor> = Vec::new();
+    for s in &grad.spec.inputs {
+        match s.role {
+            Role::Param => {
+                let mut d = vec![0.0f32; s.elements()];
+                rng.fill_normal(&mut d, 0.0, 0.1);
+                inputs.push(HostTensor::from_f32(s.shape.clone(), d));
+            }
+            Role::X => {
+                let mut d = vec![0.0f32; s.elements()];
+                rng.fill_normal(&mut d, 0.0, 1.0);
+                inputs.push(HostTensor::from_f32(s.shape.clone(), d));
+            }
+            Role::Y => {
+                let d: Vec<i32> = (0..s.elements()).map(|_| rng.below(10) as i32).collect();
+                inputs.push(HostTensor::from_i32(s.shape.clone(), d));
+            }
+            _ => unreachable!(),
+        }
+    }
+    let out = grad.run(&inputs).unwrap();
+    for (t, spec) in out.iter().zip(&grad.spec.outputs) {
+        if let Some(d) = t.as_f32() {
+            assert!(d.iter().all(|v| v.is_finite()), "{} not finite", spec.name);
+        }
+    }
+    let loss = out[out.len() - 2].scalar();
+    assert!(loss > 0.0 && loss < 20.0);
+}

@@ -1,0 +1,179 @@
+//! Coordinator integration: full training runs through the PJRT runtime,
+//! determinism, data-parallel equivalence, checkpoint round-trips,
+//! failure injection.
+
+use jorge::config::{ScheduleKind, TrainConfig};
+use jorge::coordinator::Trainer;
+use jorge::runtime::Engine;
+use std::sync::Arc;
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(Engine::new(dir).unwrap()))
+}
+
+fn tiny_cfg(opt: &str, workers: usize) -> TrainConfig {
+    TrainConfig {
+        model: "mlp".into(),
+        optimizer: opt.into(),
+        epochs: 2,
+        steps_per_epoch: 8,
+        lr: 0.01,
+        weight_decay: 1e-4,
+        schedule: ScheduleKind::Constant,
+        precond_every: 2,
+        seed: 33,
+        workers,
+        dataset_size: 64 * 8 * workers.max(1) * 2,
+        eval_every_epochs: 1000,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn training_reduces_loss_all_optimizers() {
+    let Some(eng) = engine() else { return };
+    for opt in ["sgd", "adamw", "shampoo", "jorge"] {
+        let mut trainer = Trainer::new(tiny_cfg(opt, 1), eng.clone()).unwrap();
+        let r = trainer.run().unwrap();
+        let first = r.step_losses.first().copied().unwrap() as f64;
+        let last = r.epochs.last().unwrap().train_loss;
+        assert!(last < first, "{opt}: loss {first} -> {last}");
+        assert!(r.epochs.iter().all(|e| e.val_metric.is_finite()));
+    }
+}
+
+#[test]
+fn same_seed_same_trajectory() {
+    let Some(eng) = engine() else { return };
+    let r1 = Trainer::new(tiny_cfg("jorge", 1), eng.clone()).unwrap().run().unwrap();
+    let r2 = Trainer::new(tiny_cfg("jorge", 1), eng.clone()).unwrap().run().unwrap();
+    assert_eq!(r1.step_losses, r2.step_losses);
+    let r3 = {
+        let mut cfg = tiny_cfg("jorge", 1);
+        cfg.seed = 34;
+        Trainer::new(cfg, eng).unwrap().run().unwrap()
+    };
+    assert_ne!(r1.step_losses, r3.step_losses);
+}
+
+#[test]
+fn data_parallel_runs_and_learns() {
+    let Some(eng) = engine() else { return };
+    for workers in [2usize, 4] {
+        let mut trainer = Trainer::new(tiny_cfg("jorge", workers), eng.clone()).unwrap();
+        let r = trainer.run().unwrap();
+        let first = r.step_losses.first().copied().unwrap() as f64;
+        let last = r.epochs.last().unwrap().train_loss;
+        assert!(last < first, "{workers} workers: {first} -> {last}");
+    }
+}
+
+#[test]
+fn native_apply_matches_artifact_apply_trajectory() {
+    // data-parallel with native mirrors vs apply artifacts: same seed,
+    // same shards => near-identical loss trajectories.
+    let Some(eng) = engine() else { return };
+    let mut cfg_a = tiny_cfg("sgd", 2);
+    let mut cfg_n = tiny_cfg("sgd", 2);
+    cfg_n.native = true;
+    cfg_a.seed = 77;
+    cfg_n.seed = 77;
+    let ra = Trainer::new(cfg_a, eng.clone()).unwrap().run().unwrap();
+    let rn = Trainer::new(cfg_n, eng).unwrap().run().unwrap();
+    assert_eq!(ra.step_losses.len(), rn.step_losses.len());
+    for (i, (a, n)) in ra.step_losses.iter().zip(&rn.step_losses).enumerate() {
+        assert!(
+            (a - n).abs() < 1e-3 * a.abs().max(1.0),
+            "step {i}: artifact {a} vs native {n}"
+        );
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_eval() {
+    let Some(eng) = engine() else { return };
+    let path = std::env::temp_dir().join(format!("jorge_it_ckpt_{}", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+
+    let mut trainer = Trainer::new(tiny_cfg("jorge", 1), eng.clone()).unwrap();
+    trainer.run().unwrap();
+    let (loss_before, metric_before) = trainer.evaluate().unwrap();
+    trainer.save_checkpoint(&path).unwrap();
+
+    let mut restored = Trainer::new(tiny_cfg("jorge", 1), eng).unwrap();
+    let (fresh_loss, _) = restored.evaluate().unwrap();
+    restored.load_checkpoint(&path).unwrap();
+    let (loss_after, metric_after) = restored.evaluate().unwrap();
+
+    assert!((loss_before - loss_after).abs() < 1e-6);
+    assert!((metric_before - metric_after).abs() < 1e-6);
+    assert!(fresh_loss > loss_after, "restore had no effect");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn checkpoint_rejects_wrong_model() {
+    let Some(eng) = engine() else { return };
+    let path = std::env::temp_dir().join(format!("jorge_it_ckpt2_{}", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    let trainer = Trainer::new(tiny_cfg("jorge", 1), eng.clone()).unwrap();
+    trainer.save_checkpoint(&path).unwrap();
+
+    let mut cfg = tiny_cfg("sgd", 1); // different optimizer => state mismatch
+    cfg.model = "mlp".into();
+    let mut other = Trainer::new(cfg, eng).unwrap();
+    assert!(other.load_checkpoint(&path).is_err());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn precond_interval_changes_trajectory_but_not_stability() {
+    let Some(eng) = engine() else { return };
+    let mut c1 = tiny_cfg("jorge", 1);
+    c1.precond_every = 1;
+    let mut c8 = tiny_cfg("jorge", 1);
+    c8.precond_every = 8;
+    let r1 = Trainer::new(c1, eng.clone()).unwrap().run().unwrap();
+    let r8 = Trainer::new(c8, eng).unwrap().run().unwrap();
+    assert_ne!(r1.step_losses, r8.step_losses);
+    assert!(r1.step_losses.iter().all(|l| l.is_finite()));
+    assert!(r8.step_losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn unknown_artifact_and_bad_dirs_error_cleanly() {
+    let Some(eng) = engine() else { return };
+    assert!(eng.load("train_mlp_nonexistent").is_err());
+    assert!(Engine::new("/definitely/not/a/dir").is_err());
+}
+
+#[test]
+fn corrupt_artifact_fails_to_load() {
+    let dir = std::env::temp_dir().join(format!("jorge_corrupt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // minimal manifest pointing at a garbage HLO file
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "hyper": {}, "models": {},
+            "artifacts": {"bad": {"file": "bad.hlo.txt", "kind": "kernel",
+            "inputs": [], "outputs": []}}}"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("bad.hlo.txt"), "this is not HLO at all").unwrap();
+    let eng = Engine::new(dir.to_str().unwrap()).unwrap();
+    assert!(eng.load("bad").is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn config_validation_rejected_before_engine_work() {
+    let Some(eng) = engine() else { return };
+    let mut cfg = tiny_cfg("jorge", 1);
+    cfg.precond_every = 0;
+    assert!(Trainer::new(cfg, eng).is_err());
+}

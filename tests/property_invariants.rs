@@ -1,0 +1,307 @@
+//! Property-based tests (mini-proptest `checkers`) over the paper's
+//! mathematical invariants and the coordinator substrates.
+
+use jorge::checkers::{check, Config, MatrixGen, PairGen, UsizeGen};
+use jorge::collectives::{ring_all_reduce, tree_all_reduce};
+use jorge::config::ScheduleKind;
+use jorge::optim::Schedule;
+use jorge::rngx::Rng;
+use jorge::tensor::{
+    dynamic_beta2, gram_left, inv_fourth_root_newton, jorge_update, matmul, Matrix,
+};
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, seed: 0x10C0_u64 ^ 0x9E3779B9, max_shrink_iters: 64 }
+}
+
+// ---------------------------------------------------------------------------
+// Jorge preconditioner invariants (App. A.1)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_gram_matrices_symmetric_psd() {
+    let gen = MatrixGen { max_dim: 12, scale: 2.0 };
+    check("gram-sym-psd", cfg(48), &gen, |case| {
+        let g = case.to_matrix();
+        let s = gram_left(&g);
+        for i in 0..s.rows {
+            if s.at(i, i) < -1e-4 {
+                return Err(format!("negative diagonal {}", s.at(i, i)));
+            }
+            for j in 0..s.cols {
+                if (s.at(i, j) - s.at(j, i)).abs() > 1e-4 {
+                    return Err("asymmetric gram".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_jorge_update_finite_and_symmetric_for_any_gradient() {
+    let gen = MatrixGen { max_dim: 10, scale: 3.0 };
+    check("jorge-update-valid", cfg(48), &gen, |case| {
+        let g = case.to_matrix();
+        let s = gram_left(&g);
+        let p = Matrix::eye(g.rows, (1e-6f32).powf(-0.25));
+        let out = jorge_update(&p, &s);
+        if !out.all_finite() {
+            return Err("non-finite preconditioner".into());
+        }
+        let asym = out.sub(&out.t()).max_abs() / out.max_abs().max(1e-12);
+        if asym > 0.05 {
+            return Err(format!("asymmetry {asym}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dynamic_beta2_validates_series() {
+    // for any positive statistic norm: beta2 in (0,1) and the series
+    // argument norm == 1 at the bound (Eq. 10)
+    let gen = UsizeGen { lo: 1, hi: 1_000_000 };
+    check("beta2-bound", cfg(64), &gen, |&n| {
+        let nx = n as f64 / 100.0;
+        let b2 = dynamic_beta2(nx);
+        if !(0.0 < b2 && b2 < 1.0) {
+            return Err(format!("beta2 {b2}"));
+        }
+        let arg = (1.0 - b2) / b2 * nx;
+        if (arg - 1.0).abs() > 1e-9 {
+            return Err(format!("series arg {arg}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_newton_root_inverts_spd() {
+    let gen = MatrixGen { max_dim: 10, scale: 1.0 };
+    check("newton-root", cfg(24), &gen, |case| {
+        let g = case.to_matrix();
+        let n = g.rows;
+        let mut a = gram_left(&g);
+        a.scale_inplace(1.0 / n as f32);
+        for i in 0..n {
+            a.data[i * n + i] += 0.5; // well inside SPD
+        }
+        let h = inv_fourth_root_newton(&a, 30, 0.0);
+        let h2 = matmul(&h, &h);
+        let h4 = matmul(&h2, &h2);
+        let prod = matmul(&h4, &a);
+        let err = prod.max_abs_diff(&Matrix::eye(n, 1.0));
+        if err > 0.05 {
+            return Err(format!("H^4 A != I (err {err})"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Collectives: any (ranks, length) sums correctly
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_ring_all_reduce_equals_sum() {
+    let gen = PairGen(UsizeGen { lo: 1, hi: 9 }, UsizeGen { lo: 0, hi: 300 });
+    check("ring-allreduce", cfg(64), &gen, |&(ranks, len)| {
+        let mut rng = Rng::new((ranks * 1000 + len) as u64);
+        let bufs: Vec<Vec<f32>> = (0..ranks)
+            .map(|_| (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let mut want = vec![0.0f32; len];
+        for b in &bufs {
+            for (w, v) in want.iter_mut().zip(b) {
+                *w += v;
+            }
+        }
+        let mut got = bufs.clone();
+        ring_all_reduce(&mut got);
+        for (r, b) in got.iter().enumerate() {
+            for i in 0..len {
+                if (b[i] - want[i]).abs() > 1e-3 * want[i].abs().max(1.0) {
+                    return Err(format!("rank {r} idx {i}: {} vs {}", b[i], want[i]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tree_equals_ring() {
+    let gen = PairGen(UsizeGen { lo: 1, hi: 8 }, UsizeGen { lo: 1, hi: 200 });
+    check("tree-vs-ring", cfg(48), &gen, |&(ranks, len)| {
+        let mut rng = Rng::new((ranks * 31 + len) as u64);
+        let bufs: Vec<Vec<f32>> = (0..ranks)
+            .map(|_| (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let mut a = bufs.clone();
+        let mut b = bufs;
+        ring_all_reduce(&mut a);
+        tree_all_reduce(&mut b);
+        for (x, y) in a[0].iter().zip(&b[0]) {
+            if (x - y).abs() > 1e-3 * x.abs().max(1.0) {
+                return Err(format!("{x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Schedules: monotone after warmup for decaying kinds, bounded everywhere
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_schedules_bounded_and_decay_monotone() {
+    let gen = PairGen(UsizeGen { lo: 10, hi: 500 }, UsizeGen { lo: 0, hi: 50 });
+    check("schedule-bounds", cfg(64), &gen, |&(total, warmup)| {
+        for kind in [
+            ScheduleKind::Constant,
+            ScheduleKind::Step,
+            ScheduleKind::Cosine,
+            ScheduleKind::Poly,
+        ] {
+            let s = Schedule::new(kind, 0.4, total, warmup.min(total / 2), &[0.33, 0.66]);
+            let mut prev = f64::INFINITY;
+            for step in 0..=total {
+                let lr = s.lr_at(step);
+                if !(0.0..=0.4 + 1e-12).contains(&lr) {
+                    return Err(format!("{kind:?}@{step}: lr {lr} out of bounds"));
+                }
+                if step > s.warmup_steps && lr > prev + 1e-12 && kind != ScheduleKind::Constant
+                {
+                    return Err(format!("{kind:?}@{step}: lr increased {prev} -> {lr}"));
+                }
+                if step >= s.warmup_steps {
+                    prev = lr;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Optimizer step invariants across random shapes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_all_optimizers_keep_params_finite() {
+    use jorge::optim::{build, Hyper, StepCtx};
+    let gen = PairGen(UsizeGen { lo: 1, hi: 12 }, UsizeGen { lo: 1, hi: 12 });
+    check("optims-finite", cfg(24), &gen, |&(m, n)| {
+        let shapes = [(m, n), (n.max(1), 1)];
+        for opt_name in ["sgd", "adamw", "shampoo", "jorge"] {
+            let mut opt = build(opt_name, &shapes, Hyper::default()).unwrap();
+            let mut rng = Rng::new((m * 100 + n) as u64);
+            let mut params: Vec<Matrix> = shapes
+                .iter()
+                .map(|&(a, b)| Matrix::randn(a, b, 1.0, &mut rng))
+                .collect();
+            for step in 0..5 {
+                let grads: Vec<Matrix> = shapes
+                    .iter()
+                    .map(|&(a, b)| Matrix::randn(a, b, 0.5, &mut rng))
+                    .collect();
+                opt.step(
+                    &mut params,
+                    &grads,
+                    StepCtx { lr: 0.05, weight_decay: 1e-3, update_precond: step % 2 == 0 },
+                );
+                for p in &params {
+                    if !p.all_finite() {
+                        return Err(format!("{opt_name} produced non-finite params"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grafting_magnitude_equals_sgd_on_first_step() {
+    use jorge::optim::{build, Hyper, StepCtx};
+    let gen = PairGen(UsizeGen { lo: 2, hi: 12 }, UsizeGen { lo: 2, hi: 12 });
+    check("grafting-magnitude", cfg(24), &gen, |&(m, n)| {
+        let shapes = [(m, n)];
+        let mut rng = Rng::new((m * 37 + n) as u64);
+        let params0: Vec<Matrix> = vec![Matrix::randn(m, n, 1.0, &mut rng)];
+        let grads: Vec<Matrix> = vec![Matrix::randn(m, n, 0.2, &mut rng)];
+        for opt_name in ["shampoo", "jorge"] {
+            let mut opt = build(opt_name, &shapes, Hyper::default()).unwrap();
+            let mut params = params0.clone();
+            opt.step(
+                &mut params,
+                &grads,
+                StepCtx { lr: 0.05, weight_decay: 0.0, update_precond: true },
+            );
+            let step_norm = params[0].sub(&params0[0]).frobenius();
+            let want = 0.05 * grads[0].frobenius();
+            if (step_norm - want).abs() / want > 1e-3 {
+                return Err(format!("{opt_name}: {step_norm} vs {want}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Data pipeline invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sharder_partitions_for_any_workers() {
+    use jorge::data::Sharder;
+    let gen = PairGen(UsizeGen { lo: 1, hi: 8 }, UsizeGen { lo: 8, hi: 400 });
+    check("sharder-partition", cfg(64), &gen, |&(workers, len)| {
+        let s = Sharder { dataset_len: len, workers, seed: 9 };
+        let shards = s.epoch_shards(3);
+        if shards.len() != workers {
+            return Err("wrong shard count".into());
+        }
+        let per = len / workers;
+        let mut seen = std::collections::BTreeSet::new();
+        for sh in &shards {
+            if sh.len() != per {
+                return Err(format!("ragged shard {} != {per}", sh.len()));
+            }
+            for &i in sh {
+                if i >= len || !seen.insert(i) {
+                    return Err(format!("duplicate or oob index {i}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_datasets_deterministic_and_in_range() {
+    use jorge::data::for_model;
+    let gen = UsizeGen { lo: 0, hi: 500 };
+    check("dataset-determinism", cfg(32), &gen, |&idx| {
+        for model in ["mlp", "cnn", "segnet", "transformer"] {
+            let d1 = for_model(model, 1000, 5).unwrap();
+            let d2 = for_model(model, 1000, 5).unwrap();
+            let b1 = d1.batch(&[idx]);
+            let b2 = d2.batch(&[idx]);
+            if b1.x_f32 != b2.x_f32 || b1.x_i32 != b2.x_i32 || b1.y != b2.y {
+                return Err(format!("{model}: non-deterministic sample {idx}"));
+            }
+            let max_class = match model {
+                "mlp" | "cnn" => 10,
+                "segnet" => 8,
+                _ => 512,
+            };
+            if b1.y.iter().any(|&y| y < 0 || y >= max_class) {
+                return Err(format!("{model}: label out of range"));
+            }
+        }
+        Ok(())
+    });
+}
