@@ -5,10 +5,10 @@
 //!     (Jorge = 1.5x Adam without grafting, 2x with, in the blocked
 //!     square limit);
 //!  2. measured `state_floats()` of the live native mirrors;
-//!  3. the manifest's state tensors for the HLO artifacts (what the
-//!     coordinator actually allocates).
+//!  3. the manifest's state tensors (what the coordinator actually
+//!     allocates — native-backend synthesised or HLO-artifact).
 
-use jorge::benchrun::{artifacts_dir, engine};
+use jorge::benchrun::engine;
 use jorge::benchx::Table;
 use jorge::models;
 use jorge::optim::memory::{ratio_vs_adam, state_bytes, OptKind};
@@ -56,18 +56,14 @@ fn measured_mirrors() {
 }
 
 fn manifest_states() -> anyhow::Result<()> {
-    if !std::path::Path::new(&artifacts_dir()).join("manifest.json").exists() {
-        println!("(skipping A6c: no artifacts)");
-        return Ok(());
-    }
     let engine = engine()?;
     let mut table = Table::new(
-        "A6c (artifacts): state floats per train artifact (what the coordinator allocates)",
+        "A6c (manifest): state floats per train artifact (what the coordinator allocates)",
         &["model", "optimizer", "param floats", "state floats", "state/param"],
     );
     for model in ["mlp", "cnn", "segnet", "transformer"] {
         for opt in ["sgd", "adamw", "jorge", "shampoo"] {
-            let art = engine.manifest.artifact(&format!("train_{model}_{opt}")).unwrap();
+            let art = engine.manifest().artifact(&format!("train_{model}_{opt}")).unwrap();
             let p: usize = art
                 .inputs
                 .iter()

@@ -1,20 +1,20 @@
-//! End-to-end driver: train the 3.4M-parameter decoder transformer LM on
-//! the synthetic Markov corpus for a few hundred steps with Jorge,
-//! exercising every layer of the stack at once:
+//! End-to-end driver: train the decoder transformer LM on the synthetic
+//! Markov corpus for a few hundred steps with Jorge, exercising every
+//! layer of the stack at once:
 //!
-//!   L1 Pallas jorge-update kernels (inside the HLO artifacts)
-//!   L2 fused fwd/bwd + optimizer train step (AOT, PJRT-executed)
+//!   L1 jorge-update kernels (Pallas inside the HLO artifacts, or the
+//!      `tensor` mirrors on the native backend)
+//!   L2 fused fwd/bwd + optimizer train step
 //!   L3 coordinator: schedule, update-interval policy, eval, checkpoints
 //!
 //! Logs the loss curve to CSV; the run recorded in EXPERIMENTS.md §E2E
 //! was produced by exactly this binary.
 //!
-//!     cargo run --release --offline --example e2e_transformer [-- --steps N]
+//!     cargo run --release --example e2e_transformer [-- --steps N]
 
 use jorge::config::{ScheduleKind, TrainConfig};
 use jorge::coordinator::Trainer;
-use jorge::runtime::Engine;
-use std::sync::Arc;
+use jorge::runtime::backend_for;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -43,16 +43,17 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
 
-    let engine = Arc::new(Engine::new("artifacts")?);
+    let engine = backend_for("artifacts", "auto")?;
     println!(
-        "e2e transformer LM: {} params, {} steps, jorge precond_every={} (pjrt {})",
-        engine.manifest.models["transformer"].param_count,
+        "e2e transformer LM: {} params, {} steps, jorge precond_every={} (backend {})",
+        engine.manifest().models["transformer"].param_count,
         steps,
         cfg.precond_every,
         engine.platform()
     );
     let mut trainer = Trainer::new(cfg, engine)?;
     let result = trainer.run()?;
+    std::fs::create_dir_all("runs")?;
     result.write_csv("runs/e2e_transformer_jorge.csv")?;
     trainer.save_checkpoint("runs/e2e_transformer_jorge.ckpt")?;
 

@@ -2,18 +2,17 @@
 //! stand-in): SGD vs AdamW vs Shampoo vs Jorge, sample efficiency to a
 //! target validation accuracy — the workload the paper's intro motivates.
 //!
-//!     cargo run --release --offline --example optimizer_faceoff [-- --fast]
+//!     cargo run --release --example optimizer_faceoff [-- --fast]
 
 use jorge::benchx::Table;
 use jorge::config::{ScheduleKind, TrainConfig};
 use jorge::coordinator::Trainer;
-use jorge::runtime::Engine;
-use std::sync::Arc;
+use jorge::runtime::backend_for;
 
 fn main() -> anyhow::Result<()> {
     let fast = std::env::args().any(|a| a == "--fast");
     let (epochs, steps) = if fast { (6, 20) } else { (15, 40) };
-    let engine = Arc::new(Engine::new("artifacts")?);
+    let engine = backend_for("artifacts", "auto")?;
 
     let base = TrainConfig {
         model: "cnn".into(),

@@ -1,15 +1,16 @@
 //! Quickstart: train a small classifier with Jorge, bootstrapped from a
 //! well-tuned SGD config exactly as §4 of the paper prescribes.
 //!
-//!     make artifacts && cargo run --release --offline --example quickstart
+//!     cargo run --release --example quickstart
 //!
 //! Demonstrates the public API end to end: config -> single-shot Jorge
-//! bootstrap -> Trainer (PJRT-backed fused steps) -> metrics.
+//! bootstrap -> Trainer (backend-fused steps) -> metrics. Runs on the
+//! native backend out of the box; with `--features pjrt` and
+//! `make artifacts` the same code runs through PJRT.
 
 use jorge::config::{ScheduleKind, TrainConfig};
 use jorge::coordinator::Trainer;
-use jorge::runtime::Engine;
-use std::sync::Arc;
+use jorge::runtime::backend_for;
 
 fn main() -> anyhow::Result<()> {
     // 1. The "well-tuned SGD baseline" for the synthetic MLP benchmark.
@@ -33,8 +34,8 @@ fn main() -> anyhow::Result<()> {
     let mut jorge_cfg = TrainConfig::bootstrap_jorge_from_sgd(&sgd_cfg, 0.9);
     jorge_cfg.precond_every = 10;
 
-    let engine = Arc::new(Engine::new("artifacts")?);
-    println!("pjrt platform: {}", engine.platform());
+    let engine = backend_for("artifacts", "auto")?;
+    println!("backend: {}", engine.platform());
 
     sgd_cfg.target_metric = 0.0; // run the full budget
     let sgd_result = Trainer::new(sgd_cfg, engine.clone())?.run()?;

@@ -5,16 +5,15 @@
 //! the synth-seg task (the DeepLabv3 slot) and prints the val-metric
 //! trajectories plus the overfitting signature (train loss vs val).
 //!
-//!     cargo run --release --offline --example schedule_ablation
+//!     cargo run --release --example schedule_ablation
 
 use jorge::benchx::Table;
 use jorge::config::{ScheduleKind, TrainConfig};
 use jorge::coordinator::Trainer;
-use jorge::runtime::Engine;
-use std::sync::Arc;
+use jorge::runtime::backend_for;
 
 fn main() -> anyhow::Result<()> {
-    let engine = Arc::new(Engine::new("artifacts")?);
+    let engine = backend_for("artifacts", "auto")?;
     let schedules = [ScheduleKind::Cosine, ScheduleKind::Poly, ScheduleKind::Step];
     let epochs = 12;
 

@@ -2,20 +2,25 @@
 //!
 //! Environment knobs:
 //! * `JORGE_ARTIFACTS` — artifacts dir (default `artifacts`)
+//! * `JORGE_BACKEND` — auto | native | pjrt (default `auto`)
 //! * `JORGE_BENCH_SEEDS` — trials per cell (default 2)
 //! * `JORGE_FAST=1` — shrink budgets for smoke runs
 
 use crate::config::TrainConfig;
 use crate::coordinator::{RunResult, Trainer};
-use crate::runtime::Engine;
+use crate::runtime::{backend_for, ExecBackend};
 use std::sync::Arc;
 
 pub fn artifacts_dir() -> String {
     std::env::var("JORGE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
 }
 
-pub fn engine() -> anyhow::Result<Arc<Engine>> {
-    Ok(Arc::new(Engine::new(&artifacts_dir())?))
+pub fn backend_choice() -> String {
+    std::env::var("JORGE_BACKEND").unwrap_or_else(|_| "auto".into())
+}
+
+pub fn engine() -> anyhow::Result<Arc<dyn ExecBackend>> {
+    backend_for(&artifacts_dir(), &backend_choice())
 }
 
 pub fn fast() -> bool {
@@ -29,7 +34,7 @@ pub fn n_seeds() -> usize {
         .unwrap_or(2)
 }
 
-pub fn run(cfg: TrainConfig, engine: Arc<Engine>) -> anyhow::Result<RunResult> {
+pub fn run(cfg: TrainConfig, engine: Arc<dyn ExecBackend>) -> anyhow::Result<RunResult> {
     Trainer::new(cfg, engine)?.run()
 }
 

@@ -257,6 +257,9 @@ pub struct TrainConfig {
     /// Use the native Rust optimizer mirrors instead of HLO artifacts
     /// (fast path for convergence studies; numerics cross-validated).
     pub native: bool,
+    /// Execution backend: "auto" (PJRT when built+artifacts present,
+    /// native otherwise), "native", or "pjrt".
+    pub backend: String,
     pub log_every: usize,
     pub max_steps: usize,
 }
@@ -282,6 +285,7 @@ impl Default for TrainConfig {
             artifacts_dir: "artifacts".into(),
             out_dir: "runs".into(),
             native: false,
+            backend: "auto".into(),
             log_every: 10,
             max_steps: usize::MAX,
         }
@@ -318,6 +322,7 @@ impl TrainConfig {
             artifacts_dir: t.str_or("paths.artifacts", &d.artifacts_dir),
             out_dir: t.str_or("paths.out", &d.out_dir),
             native: t.bool_or("train.native", d.native),
+            backend: t.str_or("train.backend", &d.backend),
             log_every: t.usize_or("train.log_every", d.log_every),
             max_steps: t.usize_or("train.max_steps", d.max_steps),
         };
@@ -333,6 +338,10 @@ impl TrainConfig {
         }
         if !OPTS.contains(&self.optimizer.as_str()) {
             return Err(format!("unknown optimizer {:?} (choose {OPTS:?})", self.optimizer));
+        }
+        let backends = crate::runtime::backend::BACKEND_CHOICES;
+        if !backends.contains(&self.backend.as_str()) {
+            return Err(format!("unknown backend {:?} (choose {backends:?})", self.backend));
         }
         if self.epochs == 0 || self.steps_per_epoch == 0 {
             return Err("epochs and steps_per_epoch must be > 0".into());

@@ -1,8 +1,9 @@
 //! The training coordinator — L3's core loop.
 //!
-//! Two execution modes, both with Python nowhere on the path:
+//! Two execution modes, both generic over the execution backend
+//! (native Rust or PJRT) and with Python nowhere on the path:
 //!
-//! * **fused** (workers == 1): one PJRT call per step runs
+//! * **fused** (workers == 1): one backend call per step runs
 //!   fwd + bwd + optimizer, with the coordinator choosing the
 //!   `train_*` vs `train_*_skip` executable per step — this is how the
 //!   paper's *preconditioner update interval* hyperparameter is realised.
@@ -18,7 +19,7 @@ use crate::data::{for_model, Dataset, Sharder};
 use crate::metricsio::{CsvWriter, Stopwatch, Summary};
 use crate::optim::{self, Hyper, Optimizer, Schedule, StepCtx};
 use crate::rngx::Rng;
-use crate::runtime::{CompiledStep, Dtype, Engine, HostTensor, Manifest, Role};
+use crate::runtime::{Dtype, ExecBackend, ExecStep, HostTensor, Manifest, Role};
 use crate::tensor::Matrix;
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
@@ -77,16 +78,16 @@ const EVAL_BATCHES: usize = 4;
 
 pub struct Trainer {
     pub cfg: TrainConfig,
-    engine: Arc<Engine>,
+    engine: Arc<dyn ExecBackend>,
     dataset: Box<dyn Dataset>,
     schedule: Schedule,
     // executables
-    train_full: Arc<CompiledStep>,
-    train_skip: Option<Arc<CompiledStep>>,
-    grad: Arc<CompiledStep>,
-    apply_full: Arc<CompiledStep>,
-    apply_skip: Option<Arc<CompiledStep>>,
-    eval: Arc<CompiledStep>,
+    train_full: Arc<dyn ExecStep>,
+    train_skip: Option<Arc<dyn ExecStep>>,
+    grad: Arc<dyn ExecStep>,
+    apply_full: Arc<dyn ExecStep>,
+    apply_skip: Option<Arc<dyn ExecStep>>,
+    eval: Arc<dyn ExecStep>,
     // live state
     pub params: Vec<HostTensor>,
     pub opt_state: Vec<HostTensor>,
@@ -96,7 +97,7 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    pub fn new(cfg: TrainConfig, engine: Arc<Engine>) -> Result<Trainer> {
+    pub fn new(cfg: TrainConfig, engine: Arc<dyn ExecBackend>) -> Result<Trainer> {
         cfg.validate().map_err(|e| anyhow!(e))?;
         // dist-shampoo shares shampoo's math; sharding only changes the
         // projected wall-clock (perfmodel), not the trajectory.
@@ -122,7 +123,7 @@ impl Trainer {
         let mut rng = Rng::new(cfg.seed);
         let mut params = Vec::new();
         let mut opt_state = Vec::new();
-        for spec in &train_full.spec.inputs {
+        for spec in &train_full.spec().inputs {
             match spec.role {
                 Role::Param => params.push(HostTensor::from_init(spec, &mut rng).map_err(|e| anyhow!(e))?),
                 Role::State => {
@@ -135,7 +136,7 @@ impl Trainer {
 
         let native_opt = if cfg.native {
             let shapes: Vec<(usize, usize)> = train_full
-                .spec
+                .spec()
                 .inputs
                 .iter()
                 .filter(|s| s.role == Role::Param)
@@ -148,7 +149,7 @@ impl Trainer {
 
         // dataset: train region + held-out eval region
         let meta = engine
-            .manifest
+            .manifest()
             .models
             .get(&cfg.model)
             .ok_or_else(|| anyhow!("model {} not in manifest", cfg.model))?;
@@ -178,10 +179,11 @@ impl Trainer {
         })
     }
 
-    fn batch_tensors(&self, step: &CompiledStep, indices: &[usize]) -> (HostTensor, HostTensor) {
+    fn batch_tensors(&self, step: &dyn ExecStep, indices: &[usize]) -> (HostTensor, HostTensor) {
         let b = self.dataset.batch(indices);
-        let x_spec = &step.spec.inputs[step.spec.input_index(Role::X).unwrap()];
-        let y_spec = &step.spec.inputs[step.spec.input_index(Role::Y).unwrap()];
+        let spec = step.spec();
+        let x_spec = &spec.inputs[spec.input_index(Role::X).unwrap()];
+        let y_spec = &spec.inputs[spec.input_index(Role::Y).unwrap()];
         let x = match x_spec.dtype {
             Dtype::F32 => HostTensor::from_f32(x_spec.shape.clone(), b.x_f32),
             Dtype::I32 => HostTensor::from_i32(x_spec.shape.clone(), b.x_i32),
@@ -203,7 +205,7 @@ impl Trainer {
         } else {
             self.train_skip.as_ref().unwrap().clone()
         };
-        let (x, y) = self.batch_tensors(&step, indices);
+        let (x, y) = self.batch_tensors(step.as_ref(), indices);
         let mut inputs: Vec<HostTensor> =
             Vec::with_capacity(self.params.len() + self.opt_state.len() + 4);
         inputs.extend(self.params.iter().cloned());
@@ -235,7 +237,7 @@ impl Trainer {
                 .iter()
                 .map(|idx| {
                     let grad_step = grad_step.clone();
-                    let (x, y) = self.batch_tensors(&grad_step, idx);
+                    let (x, y) = self.batch_tensors(grad_step.as_ref(), idx);
                     s.spawn(move || -> Result<(Vec<HostTensor>, f64, f64)> {
                         let mut inputs: Vec<HostTensor> = params.to_vec();
                         inputs.push(x);
@@ -343,14 +345,14 @@ impl Trainer {
 
     /// Held-out evaluation: mean loss/metric over EVAL_BATCHES batches.
     pub fn evaluate(&self) -> Result<(f64, f64)> {
-        let meta = &self.engine.manifest.models[&self.cfg.model];
+        let meta = &self.engine.manifest().models[&self.cfg.model];
         let eb = meta.eval_batch;
         let mut loss = Summary::new();
         let mut metric = Summary::new();
         for k in 0..EVAL_BATCHES {
             let base = self.cfg.dataset_size + k * eb;
             let indices: Vec<usize> = (base..base + eb).collect();
-            let (x, y) = self.batch_tensors(&self.eval, &indices);
+            let (x, y) = self.batch_tensors(self.eval.as_ref(), &indices);
             let mut inputs: Vec<HostTensor> = self.params.to_vec();
             inputs.push(x);
             inputs.push(y);
@@ -363,14 +365,10 @@ impl Trainer {
 
     /// Run the full training loop.
     pub fn run(&mut self) -> Result<RunResult> {
-        let batch = self.engine.manifest.models[&self.cfg.model].batch;
-        let per_worker_batch = if self.cfg.workers > 1 {
-            // grad artifact batch == model batch; each worker consumes a
-            // full batch (weak scaling, like the paper's DDP runs)
-            batch
-        } else {
-            batch
-        };
+        // grad artifact batch == model batch; with workers > 1 every
+        // worker consumes a full batch (weak scaling, like the paper's
+        // DDP runs)
+        let per_worker_batch = self.engine.manifest().models[&self.cfg.model].batch;
 
         let mut result = RunResult {
             model: self.cfg.model.clone(),
@@ -457,7 +455,7 @@ impl Trainer {
 
     /// Save params + optimizer state.
     pub fn save_checkpoint(&self, path: &str) -> std::io::Result<()> {
-        let spec = &self.train_full.spec;
+        let spec = self.train_full.spec();
         let mut named: Vec<(String, &HostTensor)> = Vec::new();
         let mut pi = 0;
         let mut si = 0;

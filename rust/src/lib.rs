@@ -6,14 +6,18 @@
 //!   Jorge preconditioner update as tiled GEMMs (build time only).
 //! * **L2** — JAX models + optimizers (`python/compile/`): fused train
 //!   steps AOT-lowered to HLO-text artifacts.
-//! * **L3** — this crate: the training coordinator. Loads the artifacts
-//!   through PJRT (`runtime`), schedules preconditioner updates, drives
-//!   data-parallel workers with simulated collectives (`coordinator`,
-//!   `collectives`), and regenerates every table/figure of the paper's
-//!   evaluation (`benches/`, `perfmodel`).
+//! * **L3** — this crate: the training coordinator. Executes steps
+//!   through a pluggable [`runtime::ExecBackend`] — the pure-Rust
+//!   [`runtime::NativeBackend`] (native models in [`nn`] + optimizer
+//!   mirrors in [`optim`], no artifacts needed) or the PJRT
+//!   [`runtime::Engine`] behind the `pjrt` feature — schedules
+//!   preconditioner updates, drives data-parallel workers with simulated
+//!   collectives (`coordinator`, `collectives`), and regenerates every
+//!   table/figure of the paper's evaluation (`benches/`, `perfmodel`).
 //!
 //! Native mirrors of all four optimizers live in [`optim`] and are
-//! cross-validated against the HLO artifacts in the integration tests.
+//! cross-validated against the HLO artifacts in the integration tests
+//! when the `pjrt` feature and artifacts are available.
 
 pub mod benchrun;
 pub mod benchx;
@@ -26,6 +30,7 @@ pub mod data;
 pub mod jsonio;
 pub mod metricsio;
 pub mod models;
+pub mod nn;
 pub mod optim;
 pub mod perfmodel;
 pub mod rngx;

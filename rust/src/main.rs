@@ -17,8 +17,7 @@ use jorge::coordinator::Trainer;
 use jorge::models;
 use jorge::optim::memory::{ratio_vs_adam, state_bytes, OptKind};
 use jorge::perfmodel::{project_dist_shampoo_iteration, project_iteration, GpuModel};
-use jorge::runtime::Engine;
-use std::sync::Arc;
+use jorge::runtime::backend_for;
 
 fn flag_spec() -> Vec<FlagSpec> {
     vec![
@@ -36,6 +35,7 @@ fn flag_spec() -> Vec<FlagSpec> {
         flag("target-metric", "stop when validation metric reaches this"),
         flag("dataset-size", "synthetic dataset size"),
         flag("artifacts", "artifacts directory (default: artifacts)"),
+        flag("backend", "execution backend: auto | native | pjrt"),
         flag("out", "output directory for CSV metrics"),
         flag("checkpoint", "checkpoint path to save (train) / load (eval)"),
         flag("max-steps", "hard cap on optimizer steps"),
@@ -93,6 +93,9 @@ fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<()> {
     if let Some(v) = args.get("artifacts") {
         cfg.artifacts_dir = v.into();
     }
+    if let Some(v) = args.get("backend") {
+        cfg.backend = v.into();
+    }
     if let Some(v) = args.get("out") {
         cfg.out_dir = v.into();
     }
@@ -120,9 +123,9 @@ fn load_config(args: &Args) -> Result<TrainConfig> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let engine = Arc::new(Engine::new(&cfg.artifacts_dir)?);
+    let engine = backend_for(&cfg.artifacts_dir, &cfg.backend)?;
     eprintln!(
-        "jorge train: model={} opt={} workers={} precond_every={} schedule={} (pjrt: {})",
+        "jorge train: model={} opt={} workers={} precond_every={} schedule={} (backend: {})",
         cfg.model,
         cfg.optimizer,
         cfg.workers,
@@ -134,6 +137,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let tag = format!("{}_{}_s{}", cfg.model, cfg.optimizer, cfg.seed);
     let mut trainer = Trainer::new(cfg, engine)?;
     let result = trainer.run()?;
+    std::fs::create_dir_all(&out_dir)?;
     let csv = format!("{out_dir}/{tag}.csv");
     result.write_csv(&csv)?;
     if let Some(path) = args.get("checkpoint") {
@@ -153,7 +157,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let engine = Arc::new(Engine::new(&cfg.artifacts_dir)?);
+    let engine = backend_for(&cfg.artifacts_dir, &cfg.backend)?;
     let mut trainer = Trainer::new(cfg, engine)?;
     if let Some(path) = args.get("checkpoint") {
         trainer.load_checkpoint(path)?;
@@ -269,12 +273,13 @@ fn cmd_memory_report(_args: &Args) -> Result<()> {
 
 fn cmd_inspect(args: &Args) -> Result<()> {
     let dir = args.get_or("artifacts", "artifacts");
-    let engine = Engine::new(&dir)?;
+    let choice = args.get_or("backend", "auto");
+    let engine = backend_for(&dir, &choice)?;
     let mut table = Table::new(
-        &format!("Artifacts in {dir} (pjrt: {})", engine.platform()),
+        &format!("Artifacts in {dir} (backend: {})", engine.platform()),
         &["name", "kind", "model", "inputs", "outputs"],
     );
-    for (name, art) in &engine.manifest.artifacts {
+    for (name, art) in &engine.manifest().artifacts {
         table.row(&[
             name.clone(),
             art.kind.clone(),

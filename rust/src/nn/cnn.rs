@@ -1,0 +1,184 @@
+//! Native CNN — mirror of `model.make_cnn` (the ResNet-50/ImageNet
+//! stand-in): three SAME 3x3 conv + ReLU + 2x2 max-pool stages over
+//! 32x32x3 inputs, then a 512 -> 64 -> 10 classifier head.
+
+use super::ops::{
+    accuracy, add_bias, col2im, col_sums, im2col, maxpool2, maxpool2_bwd, relu,
+    relu_bwd_inplace, softmax_xent, Conv,
+};
+use super::{he, zeros, BatchRef, ModelSpec, NativeModel};
+use crate::runtime::manifest::Dtype;
+use crate::tensor::{matmul, Matrix};
+
+pub const CNN_HW: usize = 32;
+pub const CNN_CIN: usize = 3;
+pub const CNN_CLASSES: usize = 10;
+const CHANNELS: [usize; 3] = [8, 16, 32];
+const FC_HIDDEN: usize = 64;
+
+/// Conv stage shapes: 32x32x3 -> 16x16x8 -> 8x8x16 -> (pool) 4x4x32.
+fn conv_stages() -> [Conv; 3] {
+    [
+        Conv { h: 32, w: 32, cin: CNN_CIN, cout: CHANNELS[0], k: 3 },
+        Conv { h: 16, w: 16, cin: CHANNELS[0], cout: CHANNELS[1], k: 3 },
+        Conv { h: 8, w: 8, cin: CHANNELS[1], cout: CHANNELS[2], k: 3 },
+    ]
+}
+
+const FLAT: usize = 4 * 4 * CHANNELS[2];
+
+pub struct Cnn {
+    spec: ModelSpec,
+}
+
+impl Cnn {
+    pub fn new() -> Cnn {
+        let mut params = Vec::new();
+        for (i, cv) in conv_stages().iter().enumerate() {
+            params.push(he(&format!("conv{}.w", i + 1), cv.patch(), cv.cout));
+            params.push(zeros(&format!("conv{}.b", i + 1), cv.cout, 1));
+        }
+        params.push(he("fc1.w", FLAT, FC_HIDDEN));
+        params.push(zeros("fc1.b", FC_HIDDEN, 1));
+        params.push(he("fc2.w", FC_HIDDEN, CNN_CLASSES));
+        params.push(zeros("fc2.b", CNN_CLASSES, 1));
+        let spec = ModelSpec {
+            name: "cnn",
+            metric: "accuracy",
+            batch: 32,
+            eval_batch: 128,
+            x_dtype: Dtype::F32,
+            x_sample: vec![CNN_HW, CNN_HW, CNN_CIN],
+            y_sample: vec![],
+            params,
+        };
+        Cnn { spec }
+    }
+}
+
+impl Default for Cnn {
+    fn default() -> Self {
+        Cnn::new()
+    }
+}
+
+/// Per-stage forward cache.
+struct StageCache {
+    col: Matrix,
+    pre: Matrix,
+    argmax: Vec<usize>,
+    in_len: usize,
+}
+
+impl NativeModel for Cnn {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn loss_grad(&self, params: &[Matrix], batch: &BatchRef) -> (Vec<Matrix>, f64, f64) {
+        let b = batch.batch;
+        let stages = conv_stages();
+
+        // forward through the conv tower
+        let mut act: Vec<f32> = batch.x_f32.to_vec();
+        let mut caches: Vec<StageCache> = Vec::with_capacity(3);
+        for (si, cv) in stages.iter().enumerate() {
+            let in_len = act.len();
+            let col = im2col(&act, b, cv);
+            let mut pre = matmul(&col, &params[2 * si]);
+            add_bias(&mut pre, &params[2 * si + 1]);
+            let post = relu(&pre);
+            let (pooled, argmax) = maxpool2(&post.data, b, cv.h, cv.w, cv.cout);
+            act = pooled;
+            caches.push(StageCache { col, pre, argmax, in_len });
+        }
+
+        // classifier head
+        let hf = Matrix::from_vec(b, FLAT, act);
+        let (fc1w, fc1b, fc2w, fc2b) = (&params[6], &params[7], &params[8], &params[9]);
+        let mut zf = matmul(&hf, fc1w);
+        add_bias(&mut zf, fc1b);
+        let af = relu(&zf);
+        let mut logits = matmul(&af, fc2w);
+        add_bias(&mut logits, fc2b);
+
+        let out = softmax_xent(&logits, batch.y);
+        let acc = accuracy(&out.preds, batch.y);
+
+        // backward through the head
+        let dlogits = out.dlogits;
+        let dfc2w = matmul(&af.t(), &dlogits);
+        let dfc2b = col_sums(&dlogits);
+        let mut daf = matmul(&dlogits, &fc2w.t());
+        relu_bwd_inplace(&mut daf, &zf);
+        let dfc1w = matmul(&hf.t(), &daf);
+        let dfc1b = col_sums(&daf);
+        let dhf = matmul(&daf, &fc1w.t());
+
+        // backward through the conv tower (reverse stage order)
+        let mut grads: Vec<Matrix> = vec![Matrix::zeros(1, 1); 6];
+        let mut dpooled: Vec<f32> = dhf.data;
+        for si in (0..3).rev() {
+            let cv = &stages[si];
+            let cache = &caches[si];
+            let dpost = maxpool2_bwd(&dpooled, &cache.argmax, cache.pre.data.len());
+            let mut dpre = Matrix::from_vec(b * cv.h * cv.w, cv.cout, dpost);
+            relu_bwd_inplace(&mut dpre, &cache.pre);
+            grads[2 * si] = matmul(&cache.col.t(), &dpre);
+            grads[2 * si + 1] = col_sums(&dpre);
+            if si > 0 {
+                let dcol = matmul(&dpre, &params[2 * si].t());
+                dpooled = col2im(&dcol, b, cv);
+                debug_assert_eq!(dpooled.len(), cache.in_len);
+            }
+        }
+
+        grads.extend([dfc1w, dfc1b, dfc2w, dfc2b]);
+        (grads, out.loss, acc)
+    }
+
+    fn loss_metric(&self, params: &[Matrix], batch: &BatchRef) -> (f64, f64) {
+        let b = batch.batch;
+        let mut act: Vec<f32> = batch.x_f32.to_vec();
+        for (si, cv) in conv_stages().iter().enumerate() {
+            let col = im2col(&act, b, cv);
+            let mut pre = matmul(&col, &params[2 * si]);
+            add_bias(&mut pre, &params[2 * si + 1]);
+            let post = relu(&pre);
+            let (pooled, _) = maxpool2(&post.data, b, cv.h, cv.w, cv.cout);
+            act = pooled;
+        }
+        let hf = Matrix::from_vec(b, FLAT, act);
+        let mut zf = matmul(&hf, &params[6]);
+        add_bias(&mut zf, &params[7]);
+        let af = relu(&zf);
+        let mut logits = matmul(&af, &params[8]);
+        add_bias(&mut logits, &params[9]);
+        let out = softmax_xent(&logits, batch.y);
+        (out.loss, accuracy(&out.preds, batch.y))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::testutil::{grad_check, overfits_one_batch};
+
+    #[test]
+    fn spec_matches_l2_inventory() {
+        let c = Cnn::new();
+        let want = 27 * 8 + 8 + 72 * 16 + 16 + 144 * 32 + 32 + 512 * 64 + 64 + 64 * 10 + 10;
+        assert_eq!(c.spec().param_count(), want);
+        assert_eq!(c.spec().x_len(), 32 * 32 * 3);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        grad_check(&Cnn::new(), 2, CNN_CLASSES, 3);
+    }
+
+    #[test]
+    fn overfits_a_small_batch() {
+        overfits_one_batch(&Cnn::new(), 4, CNN_CLASSES, 40);
+    }
+}

@@ -1,0 +1,128 @@
+//! Native MLP — mirror of `model.make_mlp` (the Mask-RCNN "third
+//! benchmark" slot): 128 -> 256 -> 128 -> 10 with ReLU and softmax
+//! cross-entropy.
+
+use super::ops::{accuracy, add_bias, col_sums, relu, relu_bwd_inplace, softmax_xent};
+use super::{he, zeros, BatchRef, ModelSpec, NativeModel};
+use crate::runtime::manifest::Dtype;
+use crate::tensor::{matmul, Matrix};
+
+pub const MLP_IN: usize = 128;
+pub const MLP_H1: usize = 256;
+pub const MLP_H2: usize = 128;
+pub const MLP_CLASSES: usize = 10;
+
+pub struct Mlp {
+    spec: ModelSpec,
+}
+
+impl Mlp {
+    pub fn new() -> Mlp {
+        let spec = ModelSpec {
+            name: "mlp",
+            metric: "accuracy",
+            batch: 64,
+            eval_batch: 256,
+            x_dtype: Dtype::F32,
+            x_sample: vec![MLP_IN],
+            y_sample: vec![],
+            params: vec![
+                he("w1", MLP_IN, MLP_H1),
+                zeros("b1", MLP_H1, 1),
+                he("w2", MLP_H1, MLP_H2),
+                zeros("b2", MLP_H2, 1),
+                he("w3", MLP_H2, MLP_CLASSES),
+                zeros("b3", MLP_CLASSES, 1),
+            ],
+        };
+        Mlp { spec }
+    }
+}
+
+impl Default for Mlp {
+    fn default() -> Self {
+        Mlp::new()
+    }
+}
+
+impl NativeModel for Mlp {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn loss_grad(&self, params: &[Matrix], batch: &BatchRef) -> (Vec<Matrix>, f64, f64) {
+        let b = batch.batch;
+        let (w1, b1, w2, b2, w3, b3) =
+            (&params[0], &params[1], &params[2], &params[3], &params[4], &params[5]);
+        let x = Matrix::from_vec(b, MLP_IN, batch.x_f32.to_vec());
+
+        // forward
+        let mut z1 = matmul(&x, w1);
+        add_bias(&mut z1, b1);
+        let a1 = relu(&z1);
+        let mut z2 = matmul(&a1, w2);
+        add_bias(&mut z2, b2);
+        let a2 = relu(&z2);
+        let mut logits = matmul(&a2, w3);
+        add_bias(&mut logits, b3);
+
+        let out = softmax_xent(&logits, batch.y);
+        let acc = accuracy(&out.preds, batch.y);
+
+        // backward
+        let dlogits = out.dlogits;
+        let dw3 = matmul(&a2.t(), &dlogits);
+        let db3 = col_sums(&dlogits);
+        let mut da2 = matmul(&dlogits, &w3.t());
+        relu_bwd_inplace(&mut da2, &z2);
+        let dw2 = matmul(&a1.t(), &da2);
+        let db2 = col_sums(&da2);
+        let mut da1 = matmul(&da2, &w2.t());
+        relu_bwd_inplace(&mut da1, &z1);
+        let dw1 = matmul(&x.t(), &da1);
+        let db1 = col_sums(&da1);
+
+        (vec![dw1, db1, dw2, db2, dw3, db3], out.loss, acc)
+    }
+
+    fn loss_metric(&self, params: &[Matrix], batch: &BatchRef) -> (f64, f64) {
+        let b = batch.batch;
+        let (w1, b1, w2, b2, w3, b3) =
+            (&params[0], &params[1], &params[2], &params[3], &params[4], &params[5]);
+        let x = Matrix::from_vec(b, MLP_IN, batch.x_f32.to_vec());
+        let mut z1 = matmul(&x, w1);
+        add_bias(&mut z1, b1);
+        let a1 = relu(&z1);
+        let mut z2 = matmul(&a1, w2);
+        add_bias(&mut z2, b2);
+        let a2 = relu(&z2);
+        let mut logits = matmul(&a2, w3);
+        add_bias(&mut logits, b3);
+        let out = softmax_xent(&logits, batch.y);
+        (out.loss, accuracy(&out.preds, batch.y))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::testutil::{grad_check, overfits_one_batch};
+
+    #[test]
+    fn spec_matches_l2_inventory() {
+        let m = Mlp::new();
+        // 128*256 + 256 + 256*128 + 128 + 128*10 + 10
+        assert_eq!(m.spec().param_count(), 128 * 256 + 256 + 256 * 128 + 128 + 128 * 10 + 10);
+        assert_eq!(m.spec().y_len(), 1);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        grad_check(&Mlp::new(), 4, MLP_CLASSES, 5);
+    }
+
+    #[test]
+    fn overfits_a_small_batch() {
+        overfits_one_batch(&Mlp::new(), 8, MLP_CLASSES, 40);
+    }
+}

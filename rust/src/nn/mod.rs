@@ -1,0 +1,257 @@
+//! Native (pure-Rust) trainable models — the execution substrate behind
+//! [`crate::runtime::NativeBackend`].
+//!
+//! Each model mirrors one of the L2/JAX workloads in
+//! `python/compile/model.py` at the same simulator scale (the transformer
+//! is scaled to d=128/2 layers so a CPU-only CI box trains it in
+//! seconds): forward pass, analytic backward pass, loss and metric, all
+//! on the `tensor` substrate. Every parameter is a 2-D matrix (conv
+//! kernels collapsed to `(kh*kw*cin, cout)`, biases/gains to `(n, 1)`) —
+//! the layout §3 of the paper prescribes for two-sided preconditioning,
+//! and exactly what the native optimizer mirrors in [`crate::optim`]
+//! consume.
+
+pub mod cnn;
+pub mod mlp;
+pub mod ops;
+pub mod segnet;
+pub mod transformer;
+
+pub use cnn::Cnn;
+pub use mlp::Mlp;
+pub use segnet::Segnet;
+pub use transformer::Transformer;
+
+use crate::runtime::manifest::{Dtype, Init};
+use crate::tensor::Matrix;
+
+/// One 2-D parameter slot with its manifest init rule.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub init: Init,
+}
+
+/// Static description of a workload: parameter inventory + batch I/O.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub metric: &'static str,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub x_dtype: Dtype,
+    /// Per-sample x dims (batch dim excluded), e.g. `[128]` or `[32, 32, 3]`.
+    pub x_sample: Vec<usize>,
+    /// Per-sample y dims; empty for a single class label.
+    pub y_sample: Vec<usize>,
+    pub params: Vec<ParamSpec>,
+}
+
+impl ModelSpec {
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.rows * p.cols).sum()
+    }
+
+    pub fn shapes(&self) -> Vec<(usize, usize)> {
+        self.params.iter().map(|p| (p.rows, p.cols)).collect()
+    }
+
+    /// Labels per sample (1 for classification, H*W for segmentation...).
+    pub fn y_len(&self) -> usize {
+        self.y_sample.iter().product::<usize>().max(1)
+    }
+
+    /// Floats per sample in x (0 for token inputs).
+    pub fn x_len(&self) -> usize {
+        self.x_sample.iter().product::<usize>().max(1)
+    }
+}
+
+/// A borrowed host-side batch, dtype split like [`crate::data::Batch`].
+pub struct BatchRef<'a> {
+    pub batch: usize,
+    pub x_f32: &'a [f32],
+    pub x_i32: &'a [i32],
+    pub y: &'a [i32],
+}
+
+/// A trainable native model: forward, analytic backward, loss + metric.
+pub trait NativeModel: Send + Sync {
+    fn spec(&self) -> &ModelSpec;
+
+    /// Forward + backward on one batch. Returns (grads in param order,
+    /// mean loss, metric).
+    fn loss_grad(&self, params: &[Matrix], batch: &BatchRef) -> (Vec<Matrix>, f64, f64);
+
+    /// Forward only: (mean loss, metric).
+    fn loss_metric(&self, params: &[Matrix], batch: &BatchRef) -> (f64, f64) {
+        let (_, loss, metric) = self.loss_grad(params, batch);
+        (loss, metric)
+    }
+}
+
+/// All model slots the native backend serves.
+pub const MODEL_NAMES: &[&str] = &["mlp", "cnn", "segnet", "transformer"];
+
+/// Build the native model for a workload slot.
+pub fn for_model(name: &str) -> Result<Box<dyn NativeModel>, String> {
+    match name {
+        "mlp" => Ok(Box::new(Mlp::new())),
+        "cnn" => Ok(Box::new(Cnn::new())),
+        "segnet" => Ok(Box::new(Segnet::new())),
+        "transformer" => Ok(Box::new(Transformer::default_lm())),
+        other => Err(format!("no native model for {other:?}")),
+    }
+}
+
+// -- spec construction helpers ----------------------------------------------
+
+pub(crate) fn he(name: &str, rows: usize, cols: usize) -> ParamSpec {
+    ParamSpec {
+        name: name.to_string(),
+        rows,
+        cols,
+        init: Init::He { fan_in: rows, scale: 1.0 },
+    }
+}
+
+pub(crate) fn he_scaled(name: &str, rows: usize, cols: usize, scale: f32) -> ParamSpec {
+    ParamSpec { name: name.to_string(), rows, cols, init: Init::He { fan_in: rows, scale } }
+}
+
+pub(crate) fn zeros(name: &str, rows: usize, cols: usize) -> ParamSpec {
+    ParamSpec { name: name.to_string(), rows, cols, init: Init::Zeros }
+}
+
+pub(crate) fn ones(name: &str, rows: usize, cols: usize) -> ParamSpec {
+    ParamSpec { name: name.to_string(), rows, cols, init: Init::Ones }
+}
+
+pub(crate) fn normal(name: &str, rows: usize, cols: usize, std: f32) -> ParamSpec {
+    ParamSpec { name: name.to_string(), rows, cols, init: Init::Normal { std } }
+}
+
+// -- shared test machinery ---------------------------------------------------
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::optim::{Hyper, Optimizer, Sgd, StepCtx};
+    use crate::rngx::Rng;
+    use crate::runtime::manifest::{IoSpec, Role};
+    use crate::runtime::HostTensor;
+
+    /// Initialise params from the manifest init rules (same path the
+    /// trainer uses).
+    pub fn init_params(spec: &ModelSpec, seed: u64) -> Vec<Matrix> {
+        let mut rng = Rng::new(seed);
+        spec.params
+            .iter()
+            .map(|p| {
+                let io = IoSpec {
+                    name: p.name.clone(),
+                    shape: vec![p.rows, p.cols],
+                    dtype: Dtype::F32,
+                    role: Role::Param,
+                    init: Some(p.init.clone()),
+                };
+                let t = HostTensor::from_init(&io, &mut rng).unwrap();
+                Matrix::from_vec(p.rows, p.cols, t.as_f32().unwrap().to_vec())
+            })
+            .collect()
+    }
+
+    /// A random learnable-ish batch: gaussian x (or uniform tokens) and
+    /// uniform labels in `[0, classes)`.
+    pub struct OwnedBatch {
+        pub batch: usize,
+        pub x_f32: Vec<f32>,
+        pub x_i32: Vec<i32>,
+        pub y: Vec<i32>,
+    }
+
+    impl OwnedBatch {
+        pub fn view(&self) -> BatchRef<'_> {
+            BatchRef { batch: self.batch, x_f32: &self.x_f32, x_i32: &self.x_i32, y: &self.y }
+        }
+    }
+
+    pub fn random_batch(spec: &ModelSpec, b: usize, classes: usize, seed: u64) -> OwnedBatch {
+        let mut rng = Rng::new(seed);
+        let (mut x_f32, mut x_i32) = (Vec::new(), Vec::new());
+        match spec.x_dtype {
+            Dtype::F32 => {
+                x_f32 = vec![0.0; b * spec.x_len()];
+                rng.fill_normal(&mut x_f32, 0.0, 1.0);
+            }
+            Dtype::I32 => {
+                x_i32 = (0..b * spec.x_len()).map(|_| rng.below(classes as u64) as i32).collect();
+            }
+        }
+        let y = (0..b * spec.y_len()).map(|_| rng.below(classes as u64) as i32).collect();
+        OwnedBatch { batch: b, x_f32, x_i32, y }
+    }
+
+    /// Central-difference gradient check over sampled coordinates of
+    /// every parameter. Analytic-vs-numeric agreement to `rel_tol` (with
+    /// a small absolute floor for f32 roundoff).
+    pub fn grad_check(model: &dyn NativeModel, b: usize, classes: usize, per_param: usize) {
+        let spec = model.spec().clone();
+        let mut params = init_params(&spec, 11);
+        let batch = random_batch(&spec, b, classes, 23);
+        let (grads, loss, _) = model.loss_grad(&params, &batch.view());
+        assert!(loss.is_finite(), "loss not finite");
+        let mut rng = Rng::new(7);
+        for pi in 0..params.len() {
+            let n = params[pi].data.len();
+            for _ in 0..per_param.min(n) {
+                let ci = rng.below(n as u64) as usize;
+                let w0 = params[pi].data[ci];
+                let h = 2e-3f32 * w0.abs().max(0.5);
+                params[pi].data[ci] = w0 + h;
+                let (lp, _) = model.loss_metric(&params, &batch.view());
+                params[pi].data[ci] = w0 - h;
+                let (lm, _) = model.loss_metric(&params, &batch.view());
+                params[pi].data[ci] = w0;
+                let num = ((lp - lm) / (2.0 * h as f64)) as f32;
+                let ana = grads[pi].data[ci];
+                // loose enough to absorb f32 roundoff and the odd relu
+                // kink; a wrong backward pass is off by orders of
+                // magnitude, not 5%
+                let tol = 5e-2 * ana.abs().max(num.abs()).max(0.1);
+                assert!(
+                    (num - ana).abs() <= tol,
+                    "{} param {pi} ({}) coord {ci}: numeric {num} vs analytic {ana}",
+                    spec.name,
+                    spec.params[pi].name
+                );
+            }
+        }
+    }
+
+    /// Repeated SGD steps on a fixed batch must reduce the loss.
+    pub fn overfits_one_batch(model: &dyn NativeModel, b: usize, classes: usize, steps: usize) {
+        let spec = model.spec().clone();
+        let mut params = init_params(&spec, 3);
+        let batch = random_batch(&spec, b, classes, 5);
+        let mut opt = Sgd::new(&spec.shapes(), Hyper::default());
+        let mut first = f64::NAN;
+        let mut last = f64::NAN;
+        for step in 0..steps {
+            let (grads, loss, _) = model.loss_grad(&params, &batch.view());
+            assert!(loss.is_finite(), "step {step}: loss not finite");
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+            opt.step(
+                &mut params,
+                &grads,
+                StepCtx { lr: 0.05, weight_decay: 0.0, update_precond: true },
+            );
+        }
+        assert!(last < 0.8 * first, "{}: no learning ({first} -> {last})", spec.name);
+    }
+}

@@ -1,0 +1,179 @@
+//! Native SegNet — mirror of `model.make_segnet` (the DeepLabv3/MS-COCO
+//! stand-in): two SAME 3x3 convs + ReLU and a 1x1 head predicting 8
+//! classes per pixel of a 16x16x3 input; mean-IoU metric.
+
+use super::ops::{
+    add_bias, col2im, col_sums, im2col, mean_iou, relu, relu_bwd_inplace, softmax_xent, Conv,
+};
+use super::{he, zeros, BatchRef, ModelSpec, NativeModel};
+use crate::runtime::manifest::Dtype;
+use crate::tensor::{matmul, Matrix};
+
+pub const SEG_HW: usize = 16;
+pub const SEG_CIN: usize = 3;
+pub const SEG_CLASSES: usize = 8;
+const SEG_CH: usize = 16;
+
+fn seg_stages() -> [Conv; 3] {
+    [
+        Conv { h: SEG_HW, w: SEG_HW, cin: SEG_CIN, cout: SEG_CH, k: 3 },
+        Conv { h: SEG_HW, w: SEG_HW, cin: SEG_CH, cout: SEG_CH, k: 3 },
+        Conv { h: SEG_HW, w: SEG_HW, cin: SEG_CH, cout: SEG_CLASSES, k: 1 },
+    ]
+}
+
+pub struct Segnet {
+    spec: ModelSpec,
+}
+
+impl Segnet {
+    pub fn new() -> Segnet {
+        let stages = seg_stages();
+        let names = ["conv1", "conv2", "head"];
+        let mut params = Vec::new();
+        for (cv, name) in stages.iter().zip(names) {
+            params.push(he(&format!("{name}.w"), cv.patch(), cv.cout));
+            params.push(zeros(&format!("{name}.b"), cv.cout, 1));
+        }
+        let spec = ModelSpec {
+            name: "segnet",
+            metric: "iou",
+            batch: 16,
+            eval_batch: 64,
+            x_dtype: Dtype::F32,
+            x_sample: vec![SEG_HW, SEG_HW, SEG_CIN],
+            y_sample: vec![SEG_HW, SEG_HW],
+            params,
+        };
+        Segnet { spec }
+    }
+}
+
+impl Default for Segnet {
+    fn default() -> Self {
+        Segnet::new()
+    }
+}
+
+impl NativeModel for Segnet {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn loss_grad(&self, params: &[Matrix], batch: &BatchRef) -> (Vec<Matrix>, f64, f64) {
+        let b = batch.batch;
+        let stages = seg_stages();
+
+        // forward: conv1+relu, conv2+relu, 1x1 head (no relu)
+        let mut act: Vec<f32> = batch.x_f32.to_vec();
+        let mut cols: Vec<Matrix> = Vec::with_capacity(3);
+        let mut pres: Vec<Matrix> = Vec::with_capacity(3);
+        for (si, cv) in stages.iter().enumerate() {
+            let col = im2col(&act, b, cv);
+            let mut pre = matmul(&col, &params[2 * si]);
+            add_bias(&mut pre, &params[2 * si + 1]);
+            act = if si < 2 { relu(&pre).data } else { pre.data.clone() };
+            cols.push(col);
+            pres.push(pre);
+        }
+
+        // per-pixel softmax cross-entropy over the head logits
+        let logits = Matrix::from_vec(b * SEG_HW * SEG_HW, SEG_CLASSES, act);
+        let out = softmax_xent(&logits, batch.y);
+        let iou = mean_iou(&out.preds, batch.y, SEG_CLASSES);
+
+        // backward
+        let mut grads: Vec<Matrix> = vec![Matrix::zeros(1, 1); 6];
+        let mut dpre = out.dlogits;
+        for si in (0..3).rev() {
+            let cv = &stages[si];
+            if si < 2 {
+                relu_bwd_inplace(&mut dpre, &pres[si]);
+            }
+            grads[2 * si] = matmul(&cols[si].t(), &dpre);
+            grads[2 * si + 1] = col_sums(&dpre);
+            if si > 0 {
+                let dcol = matmul(&dpre, &params[2 * si].t());
+                let dact = col2im(&dcol, b, cv);
+                dpre = Matrix::from_vec(b * cv.h * cv.w, cv.cin, dact);
+            }
+        }
+
+        (grads, out.loss, iou)
+    }
+
+    fn loss_metric(&self, params: &[Matrix], batch: &BatchRef) -> (f64, f64) {
+        let b = batch.batch;
+        let mut act: Vec<f32> = batch.x_f32.to_vec();
+        for (si, cv) in seg_stages().iter().enumerate() {
+            let col = im2col(&act, b, cv);
+            let mut pre = matmul(&col, &params[2 * si]);
+            add_bias(&mut pre, &params[2 * si + 1]);
+            act = if si < 2 { relu(&pre).data } else { pre.data };
+        }
+        let logits = Matrix::from_vec(b * SEG_HW * SEG_HW, SEG_CLASSES, act);
+        let out = softmax_xent(&logits, batch.y);
+        (out.loss, mean_iou(&out.preds, batch.y, SEG_CLASSES))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::testutil::{grad_check, init_params};
+    use crate::optim::{Hyper, Optimizer, Sgd, StepCtx};
+    use crate::rngx::Rng;
+
+    #[test]
+    fn spec_matches_l2_inventory() {
+        let s = Segnet::new();
+        let want = 27 * 16 + 16 + 144 * 16 + 16 + 16 * 8 + 8;
+        assert_eq!(s.spec().param_count(), want);
+        assert_eq!(s.spec().y_len(), 256);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        grad_check(&Segnet::new(), 2, SEG_CLASSES, 4);
+    }
+
+    #[test]
+    fn learns_a_pointwise_rule() {
+        // per-pixel label = binary code of the three channel signs — a
+        // rule the conv stack can fit quickly, unlike random labels
+        let s = Segnet::new();
+        let b = 2;
+        let mut rng = Rng::new(5);
+        let mut x = vec![0.0f32; b * SEG_HW * SEG_HW * 3];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let mut y = vec![0i32; b * SEG_HW * SEG_HW];
+        for (pi, yo) in y.iter_mut().enumerate() {
+            let mut c = 0i32;
+            for ch in 0..3 {
+                if x[pi * 3 + ch] > 0.0 {
+                    c |= 1 << ch;
+                }
+            }
+            *yo = c;
+        }
+        let batch = BatchRef { batch: b, x_f32: &x, x_i32: &[], y: &y };
+        let mut params = init_params(s.spec(), 3);
+        let mut opt = Sgd::new(&s.spec().shapes(), Hyper::default());
+        let mut first = f64::NAN;
+        let mut last = f64::NAN;
+        for step in 0..80 {
+            let (grads, loss, _) = s.loss_grad(&params, &batch);
+            assert!(loss.is_finite(), "step {step}");
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+            opt.step(
+                &mut params,
+                &grads,
+                StepCtx { lr: 0.05, weight_decay: 0.0, update_precond: true },
+            );
+        }
+        assert!(last < 0.8 * first, "segnet: no learning ({first} -> {last})");
+    }
+}

@@ -1,0 +1,341 @@
+//! Native decoder-only transformer LM — mirror of
+//! `model.make_transformer`, scaled to simulator size (d=128, 2 layers)
+//! so the CPU-only native backend trains it in seconds. Pre-LN blocks
+//! with learned gains, multi-head causal attention, GELU MLP, weight
+//! tying off, softmax cross-entropy over all positions.
+
+use super::ops::{
+    accuracy, causal_softmax_inplace, gelu, gelu_bwd_inplace, layernorm_bwd, layernorm_fwd,
+    softmax_rows_bwd, softmax_xent, LnCache,
+};
+use super::{he_scaled, normal, ones, BatchRef, ModelSpec, NativeModel, ParamSpec};
+use crate::runtime::manifest::Dtype;
+use crate::tensor::{matmul, Matrix};
+
+pub struct Transformer {
+    vocab: usize,
+    seq: usize,
+    d: usize,
+    layers: usize,
+    heads: usize,
+    spec: ModelSpec,
+}
+
+impl Transformer {
+    pub fn new(
+        vocab: usize,
+        seq: usize,
+        d: usize,
+        layers: usize,
+        heads: usize,
+        ff: usize,
+        batch: usize,
+        eval_batch: usize,
+    ) -> Transformer {
+        assert!(d % heads == 0, "d must be divisible by heads");
+        let mut params: Vec<ParamSpec> = vec![
+            normal("embed", vocab, d, 0.02),
+            normal("pos", seq, d, 0.02),
+        ];
+        for l in 0..layers {
+            params.push(ones(&format!("l{l}.ln1_g"), d, 1));
+            params.push(he_scaled(&format!("l{l}.wq"), d, d, 0.5));
+            params.push(he_scaled(&format!("l{l}.wk"), d, d, 0.5));
+            params.push(he_scaled(&format!("l{l}.wv"), d, d, 0.5));
+            params.push(he_scaled(&format!("l{l}.wo"), d, d, 0.5));
+            params.push(ones(&format!("l{l}.ln2_g"), d, 1));
+            params.push(he_scaled(&format!("l{l}.w1"), d, ff, 0.5));
+            params.push(he_scaled(&format!("l{l}.w2"), ff, d, 0.5));
+        }
+        params.push(ones("lnf_g", d, 1));
+        params.push(he_scaled("head", d, vocab, 0.5));
+        let spec = ModelSpec {
+            name: "transformer",
+            metric: "token_acc",
+            batch,
+            eval_batch,
+            x_dtype: Dtype::I32,
+            x_sample: vec![seq],
+            y_sample: vec![seq],
+            params,
+        };
+        Transformer { vocab, seq, d, layers, heads, spec }
+    }
+
+    /// The workload configuration the native backend serves.
+    pub fn default_lm() -> Transformer {
+        Transformer::new(512, 64, 128, 2, 4, 512, 8, 16)
+    }
+
+    /// A miniature instance for gradient checks.
+    pub fn tiny() -> Transformer {
+        Transformer::new(13, 6, 8, 1, 2, 16, 2, 4)
+    }
+
+    fn lidx(&self, l: usize, j: usize) -> usize {
+        2 + l * 8 + j
+    }
+}
+
+/// Per-head `(S, dh)` slice of a `(B*S, D)` activation matrix.
+fn slice_head(m: &Matrix, bi: usize, s: usize, off: usize, dh: usize) -> Matrix {
+    let mut out = Matrix::zeros(s, dh);
+    for i in 0..s {
+        let base = (bi * s + i) * m.cols + off;
+        out.data[i * dh..(i + 1) * dh].copy_from_slice(&m.data[base..base + dh]);
+    }
+    out
+}
+
+/// Accumulate a `(S, dh)` head block back into a `(B*S, D)` matrix.
+fn add_head(dst: &mut Matrix, blk: &Matrix, bi: usize, s: usize, off: usize) {
+    let dh = blk.cols;
+    for i in 0..s {
+        let base = (bi * s + i) * dst.cols + off;
+        let d = &mut dst.data[base..base + dh];
+        for (dv, bv) in d.iter_mut().zip(&blk.data[i * dh..(i + 1) * dh]) {
+            *dv += bv;
+        }
+    }
+}
+
+struct LayerCache {
+    ln1: LnCache,
+    q: Matrix,
+    k: Matrix,
+    v: Matrix,
+    /// Attention probabilities, one `(S, S)` matrix per (batch, head).
+    probs: Vec<Matrix>,
+    /// Concatenated head outputs, pre-`wo`.
+    o: Matrix,
+    ln2: LnCache,
+    /// Pre-GELU FFN activation.
+    u: Matrix,
+    /// Post-GELU FFN activation.
+    a: Matrix,
+}
+
+struct Fwd {
+    layer_caches: Vec<LayerCache>,
+    lnf: LnCache,
+    logits: Matrix,
+}
+
+impl Transformer {
+    fn forward(&self, params: &[Matrix], batch: &BatchRef) -> Fwd {
+        let (b, s, d, dh) = (batch.batch, self.seq, self.d, self.d / self.heads);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let embed = &params[0];
+        let pos = &params[1];
+
+        // token + position embeddings
+        let mut x = Matrix::zeros(b * s, d);
+        for bi in 0..b {
+            for si in 0..s {
+                let tok = batch.x_i32[bi * s + si] as usize;
+                assert!(tok < self.vocab, "token {tok} out of range");
+                let row = &mut x.data[(bi * s + si) * d..(bi * s + si + 1) * d];
+                for j in 0..d {
+                    row[j] = embed.data[tok * d + j] + pos.data[si * d + j];
+                }
+            }
+        }
+
+        let mut layer_caches = Vec::with_capacity(self.layers);
+        for l in 0..self.layers {
+            let ln1 = layernorm_fwd(&x, &params[self.lidx(l, 0)]);
+            let q = matmul(&ln1.y, &params[self.lidx(l, 1)]);
+            let k = matmul(&ln1.y, &params[self.lidx(l, 2)]);
+            let v = matmul(&ln1.y, &params[self.lidx(l, 3)]);
+            let mut probs = Vec::with_capacity(b * self.heads);
+            let mut o = Matrix::zeros(b * s, d);
+            for bi in 0..b {
+                for hd in 0..self.heads {
+                    let off = hd * dh;
+                    let qb = slice_head(&q, bi, s, off, dh);
+                    let kb = slice_head(&k, bi, s, off, dh);
+                    let vb = slice_head(&v, bi, s, off, dh);
+                    let mut scores = matmul(&qb, &kb.t());
+                    scores.scale_inplace(scale);
+                    causal_softmax_inplace(&mut scores);
+                    let o_bh = matmul(&scores, &vb);
+                    add_head(&mut o, &o_bh, bi, s, off);
+                    probs.push(scores);
+                }
+            }
+            let attn_out = matmul(&o, &params[self.lidx(l, 4)]);
+            for (xv, av) in x.data.iter_mut().zip(&attn_out.data) {
+                *xv += av;
+            }
+
+            let ln2 = layernorm_fwd(&x, &params[self.lidx(l, 5)]);
+            let u = matmul(&ln2.y, &params[self.lidx(l, 6)]);
+            let a = gelu(&u);
+            let f = matmul(&a, &params[self.lidx(l, 7)]);
+            for (xv, fv) in x.data.iter_mut().zip(&f.data) {
+                *xv += fv;
+            }
+
+            layer_caches.push(LayerCache { ln1, q, k, v, probs, o, ln2, u, a });
+        }
+
+        let lnf = layernorm_fwd(&x, &params[2 + self.layers * 8]);
+        let logits = matmul(&lnf.y, &params[3 + self.layers * 8]);
+        Fwd { layer_caches, lnf, logits }
+    }
+}
+
+impl NativeModel for Transformer {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn loss_grad(&self, params: &[Matrix], batch: &BatchRef) -> (Vec<Matrix>, f64, f64) {
+        let (b, s, d, dh) = (batch.batch, self.seq, self.d, self.d / self.heads);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let fwd = self.forward(params, batch);
+
+        let out = softmax_xent(&fwd.logits, batch.y);
+        let acc = accuracy(&out.preds, batch.y);
+
+        let mut grads: Vec<Matrix> =
+            params.iter().map(|p| Matrix::zeros(p.rows, p.cols)).collect();
+
+        // head + final layer norm
+        let head_i = 3 + self.layers * 8;
+        let lnf_i = 2 + self.layers * 8;
+        grads[head_i] = matmul(&fwd.lnf.y.t(), &out.dlogits);
+        let dxf = matmul(&out.dlogits, &params[head_i].t());
+        let (mut dx, dgf) = layernorm_bwd(&fwd.lnf, &params[lnf_i], &dxf);
+        grads[lnf_i] = dgf;
+
+        for l in (0..self.layers).rev() {
+            let cache = &fwd.layer_caches[l];
+
+            // FFN block: x_out = x_mid + gelu(ln2(x_mid)) @ w2
+            let df = &dx; // residual pass-through
+            grads[self.lidx(l, 7)] = matmul(&cache.a.t(), df);
+            let mut du = matmul(df, &params[self.lidx(l, 7)].t());
+            gelu_bwd_inplace(&mut du, &cache.u);
+            grads[self.lidx(l, 6)] = matmul(&cache.ln2.y.t(), &du);
+            let dh2 = matmul(&du, &params[self.lidx(l, 6)].t());
+            let (dx_ln2, dg2) = layernorm_bwd(&cache.ln2, &params[self.lidx(l, 5)], &dh2);
+            grads[self.lidx(l, 5)] = dg2;
+            for (xv, av) in dx.data.iter_mut().zip(&dx_ln2.data) {
+                *xv += av;
+            }
+
+            // attention block: x_mid = x_in + (heads(ln1(x_in))) @ wo
+            let dattn = &dx;
+            grads[self.lidx(l, 4)] = matmul(&cache.o.t(), dattn);
+            let do_all = matmul(dattn, &params[self.lidx(l, 4)].t());
+            let mut dq = Matrix::zeros(b * s, d);
+            let mut dk = Matrix::zeros(b * s, d);
+            let mut dv = Matrix::zeros(b * s, d);
+            for bi in 0..b {
+                for hd in 0..self.heads {
+                    let off = hd * dh;
+                    let p = &cache.probs[bi * self.heads + hd];
+                    let do_bh = slice_head(&do_all, bi, s, off, dh);
+                    let vb = slice_head(&cache.v, bi, s, off, dh);
+                    let qb = slice_head(&cache.q, bi, s, off, dh);
+                    let kb = slice_head(&cache.k, bi, s, off, dh);
+                    let dp = matmul(&do_bh, &vb.t());
+                    let dv_bh = matmul(&p.t(), &do_bh);
+                    let mut ds = softmax_rows_bwd(p, &dp);
+                    ds.scale_inplace(scale);
+                    let dq_bh = matmul(&ds, &kb);
+                    let dk_bh = matmul(&ds.t(), &qb);
+                    add_head(&mut dq, &dq_bh, bi, s, off);
+                    add_head(&mut dk, &dk_bh, bi, s, off);
+                    add_head(&mut dv, &dv_bh, bi, s, off);
+                }
+            }
+            grads[self.lidx(l, 1)] = matmul(&cache.ln1.y.t(), &dq);
+            grads[self.lidx(l, 2)] = matmul(&cache.ln1.y.t(), &dk);
+            grads[self.lidx(l, 3)] = matmul(&cache.ln1.y.t(), &dv);
+            let mut dh1 = matmul(&dq, &params[self.lidx(l, 1)].t());
+            let dh_k = matmul(&dk, &params[self.lidx(l, 2)].t());
+            let dh_v = matmul(&dv, &params[self.lidx(l, 3)].t());
+            for i in 0..dh1.data.len() {
+                dh1.data[i] += dh_k.data[i] + dh_v.data[i];
+            }
+            let (dx_ln1, dg1) = layernorm_bwd(&cache.ln1, &params[self.lidx(l, 0)], &dh1);
+            grads[self.lidx(l, 0)] = dg1;
+            for (xv, av) in dx.data.iter_mut().zip(&dx_ln1.data) {
+                *xv += av;
+            }
+        }
+
+        // embeddings: scatter-add token rows, accumulate positions
+        for bi in 0..b {
+            for si in 0..s {
+                let tok = batch.x_i32[bi * s + si] as usize;
+                let row = &dx.data[(bi * s + si) * d..(bi * s + si + 1) * d];
+                let erow = &mut grads[0].data[tok * d..(tok + 1) * d];
+                for (ev, rv) in erow.iter_mut().zip(row) {
+                    *ev += rv;
+                }
+                let prow = &mut grads[1].data[si * d..(si + 1) * d];
+                for (pv, rv) in prow.iter_mut().zip(row) {
+                    *pv += rv;
+                }
+            }
+        }
+
+        (grads, out.loss, acc)
+    }
+
+    fn loss_metric(&self, params: &[Matrix], batch: &BatchRef) -> (f64, f64) {
+        let fwd = self.forward(params, batch);
+        let out = softmax_xent(&fwd.logits, batch.y);
+        (out.loss, accuracy(&out.preds, batch.y))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::testutil::{grad_check, init_params, overfits_one_batch, random_batch};
+
+    #[test]
+    fn default_spec_shapes() {
+        let t = Transformer::default_lm();
+        assert_eq!(t.spec().params.len(), 2 + 2 * 8 + 2);
+        assert_eq!(t.spec().x_len(), 64);
+        assert_eq!(t.spec().y_len(), 64);
+        assert!(t.spec().param_count() > 400_000, "{}", t.spec().param_count());
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        grad_check(&Transformer::tiny(), 2, 13, 4);
+    }
+
+    #[test]
+    fn overfits_a_small_batch() {
+        overfits_one_batch(&Transformer::tiny(), 2, 13, 60);
+    }
+
+    #[test]
+    fn causal_mask_blocks_future_tokens() {
+        // changing a future token must not change the logits of earlier
+        // positions
+        let t = Transformer::tiny();
+        let params = init_params(t.spec(), 1);
+        let batch = random_batch(t.spec(), 1, 13, 2);
+        let fwd_a = t.forward(&params, &batch.view());
+        let mut batch_b = batch;
+        let last = batch_b.x_i32.len() - 1;
+        batch_b.x_i32[last] = (batch_b.x_i32[last] + 1) % 13;
+        let fwd_b = t.forward(&params, &batch_b.view());
+        let cols = fwd_a.logits.cols;
+        for r in 0..last {
+            for c in 0..cols {
+                let a = fwd_a.logits.data[r * cols + c];
+                let b2 = fwd_b.logits.data[r * cols + c];
+                assert!((a - b2).abs() < 1e-5, "position {r} leaked future info");
+            }
+        }
+    }
+}

@@ -56,6 +56,14 @@ impl Optimizer for AdamW {
     fn state_mut(&mut self) -> Vec<&mut Matrix> {
         self.exp_avg.iter_mut().chain(self.exp_avg_sq.iter_mut()).collect()
     }
+
+    fn step_count(&self) -> u64 {
+        self.t
+    }
+
+    fn set_step_count(&mut self, t: u64) {
+        self.t = t;
+    }
 }
 
 #[cfg(test)]

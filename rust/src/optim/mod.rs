@@ -80,6 +80,16 @@ pub trait Optimizer: Send {
 
     /// Expose flat state for checkpointing / cross-validation.
     fn state_mut(&mut self) -> Vec<&mut Matrix>;
+
+    /// Scalar step counter, for optimizers with bias correction (AdamW).
+    /// The native backend round-trips it alongside the matrix state so
+    /// stateless step execution preserves trajectories exactly.
+    fn step_count(&self) -> u64 {
+        0
+    }
+
+    /// Restore the step counter (no-op for counter-free optimizers).
+    fn set_step_count(&mut self, _t: u64) {}
 }
 
 /// Construct an optimizer by name for a given parameter inventory.

@@ -1,0 +1,102 @@
+//! Pluggable execution backends.
+//!
+//! The coordinator is generic over *how* a step executes: `ExecBackend`
+//! hands out `ExecStep`s by artifact name (the `train_*` / `grad_*` /
+//! `apply_*` / `eval_*` naming scheme of `aot.py`), and an `ExecStep`
+//! maps host tensors to host tensors. Two implementations exist:
+//!
+//! * [`crate::runtime::NativeBackend`] — pure Rust, always available:
+//!   native model forward/backward (`nn`) + native optimizer mirrors
+//!   (`optim`), no artifacts or system libraries required.
+//! * [`crate::runtime::Engine`] — PJRT execution of the AOT-lowered HLO
+//!   artifacts, behind the off-by-default `pjrt` cargo feature.
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::values::HostTensor;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// One executable step: a fixed I/O signature plus a run function.
+pub trait ExecStep: Send + Sync {
+    /// The manifest spec describing inputs/outputs of this step.
+    fn spec(&self) -> &ArtifactSpec;
+
+    /// Execute with host tensors; returns one host tensor per output.
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+}
+
+/// A provider of executable steps plus the manifest describing them.
+pub trait ExecBackend: Send + Sync {
+    /// Human-readable platform tag ("native", "cpu", ...).
+    fn platform(&self) -> String;
+
+    /// The manifest: artifact I/O specs, model metadata, hyperparameters.
+    fn manifest(&self) -> &Manifest;
+
+    /// Resolve an artifact name to an executable step (cached).
+    fn load(&self, name: &str) -> Result<Arc<dyn ExecStep>>;
+}
+
+/// The valid `backend_for` choices (also what `TrainConfig` validates).
+pub const BACKEND_CHOICES: &[&str] = &["auto", "native", "pjrt"];
+
+/// Build a backend by name: `"native"`, `"pjrt"`, or `"auto"`.
+///
+/// `auto` prefers PJRT when the crate is built with the `pjrt` feature
+/// *and* `artifacts_dir` holds a manifest, and falls back to the native
+/// backend otherwise — so a clean checkout trains out of the box.
+pub fn backend_for(artifacts_dir: &str, choice: &str) -> Result<Arc<dyn ExecBackend>> {
+    match choice {
+        "native" => Ok(Arc::new(super::native::NativeBackend::new())),
+        "pjrt" => pjrt_backend(artifacts_dir),
+        "auto" => {
+            if cfg!(feature = "pjrt")
+                && std::path::Path::new(artifacts_dir).join("manifest.json").exists()
+            {
+                return pjrt_backend(artifacts_dir);
+            }
+            Ok(Arc::new(super::native::NativeBackend::new()))
+        }
+        other => {
+            Err(anyhow::anyhow!("unknown backend {other:?} (choose {BACKEND_CHOICES:?})"))
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_backend(artifacts_dir: &str) -> Result<Arc<dyn ExecBackend>> {
+    Ok(Arc::new(super::engine::Engine::new(artifacts_dir)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend(_artifacts_dir: &str) -> Result<Arc<dyn ExecBackend>> {
+    Err(anyhow::anyhow!(
+        "backend \"pjrt\" requires building with `--features pjrt` (and the xla crate; see README)"
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_and_auto_resolve() {
+        let b = backend_for("/nonexistent", "native").unwrap();
+        assert_eq!(b.platform(), "native");
+        // without artifacts, auto falls back to native
+        let b = backend_for("/nonexistent", "auto").unwrap();
+        assert_eq!(b.platform(), "native");
+    }
+
+    #[test]
+    fn unknown_choice_is_error() {
+        assert!(backend_for("artifacts", "tpu").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_without_feature_is_explained() {
+        let err = backend_for("artifacts", "pjrt").unwrap_err().to_string();
+        assert!(err.contains("--features pjrt"), "{err}");
+    }
+}

@@ -2,6 +2,7 @@
 //! many times. Adapted from /opt/xla-example/load_hlo — HLO *text* is the
 //! interchange format (see aot.py).
 
+use super::backend::{ExecBackend, ExecStep};
 use super::manifest::{ArtifactSpec, Manifest};
 use super::values::HostTensor;
 use anyhow::{anyhow, Context, Result};
@@ -105,6 +106,31 @@ impl Engine {
             .with_context(|| format!("compiling {name}"))?;
         let step = std::sync::Arc::new(CompiledStep { spec, exe });
         self.cache.lock().unwrap().insert(name.to_string(), step.clone());
+        Ok(step)
+    }
+}
+
+impl ExecStep for CompiledStep {
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        CompiledStep::run(self, inputs)
+    }
+}
+
+impl ExecBackend for Engine {
+    fn platform(&self) -> String {
+        Engine::platform(self)
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load(&self, name: &str) -> Result<std::sync::Arc<dyn ExecStep>> {
+        let step = Engine::load(self, name)?;
         Ok(step)
     }
 }

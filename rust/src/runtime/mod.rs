@@ -1,14 +1,24 @@
-//! PJRT runtime: manifest-driven artifact loading and execution.
+//! Execution runtime: manifest-driven step loading and execution.
 //!
-//! `Engine` wraps the `xla` crate's PJRT CPU client; `CompiledStep` pairs
-//! a compiled executable with its manifest I/O spec so the coordinator is
-//! generic over models and optimizers. Host tensors (`HostTensor`) carry
-//! dtype-tagged data between the coordinator and the device.
+//! [`ExecBackend`]/[`ExecStep`] abstract over how a training step runs so
+//! the coordinator is generic over models, optimizers *and* execution
+//! substrates. [`NativeBackend`] drives the pure-Rust model and optimizer
+//! mirrors and is always available; [`Engine`] (behind the `pjrt` cargo
+//! feature) compiles and executes the AOT-lowered HLO-text artifacts
+//! through the `xla` crate's PJRT CPU client. Host tensors
+//! ([`HostTensor`]) carry dtype-tagged data between the coordinator and
+//! whichever backend is active.
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
+pub mod native;
 pub mod values;
 
+pub use backend::{backend_for, ExecBackend, ExecStep, BACKEND_CHOICES};
+#[cfg(feature = "pjrt")]
 pub use engine::{CompiledStep, Engine};
 pub use manifest::{ArtifactSpec, Dtype, Init, IoSpec, Manifest, Role};
+pub use native::NativeBackend;
 pub use values::HostTensor;

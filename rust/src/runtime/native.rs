@@ -1,0 +1,772 @@
+//! Pure-Rust execution backend — no artifacts, no system libraries.
+//!
+//! `NativeBackend` synthesises the same manifest surface `aot.py` writes
+//! (`train_*` / `grad_*` / `apply_*` / `eval_*` artifacts with typed I/O
+//! specs and init rules) and executes each step natively: model
+//! forward/backward from [`crate::nn`], optimizer updates from the
+//! mirrors in [`crate::optim`]. Steps are stateless — optimizer state is
+//! round-tripped through the step's State tensors exactly like the HLO
+//! artifacts do it, so fused-vs-split execution and checkpointing behave
+//! identically across backends.
+
+use super::backend::{ExecBackend, ExecStep};
+use super::manifest::{ArtifactSpec, Dtype, Init, IoSpec, Manifest, ModelMeta, Role};
+use super::values::HostTensor;
+use crate::nn::{self, BatchRef, NativeModel};
+use crate::optim::{self, Hyper, StepCtx};
+use crate::tensor::Matrix;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+const OPTS: &[&str] = &["sgd", "adamw", "shampoo", "jorge"];
+
+/// What a native step does when run.
+enum Kind {
+    Train { opt: String, update_precond: bool },
+    Grad,
+    Apply { opt: String, update_precond: bool },
+    Eval,
+}
+
+/// One stateless native step (see module docs).
+pub struct NativeStep {
+    spec: ArtifactSpec,
+    model: Arc<dyn NativeModel>,
+    kind: Kind,
+    hyper: Hyper,
+}
+
+/// The always-available pure-Rust backend.
+pub struct NativeBackend {
+    manifest: Manifest,
+    hyper: Hyper,
+    models: BTreeMap<String, Arc<dyn NativeModel>>,
+    cache: Mutex<BTreeMap<String, Arc<dyn ExecStep>>>,
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        let hyper = Hyper::default();
+        let mut models: BTreeMap<String, Arc<dyn NativeModel>> = BTreeMap::new();
+        for name in nn::MODEL_NAMES {
+            let model = nn::for_model(name).expect("builtin model");
+            models.insert(name.to_string(), Arc::from(model));
+        }
+        let manifest = build_manifest(&models, &hyper);
+        NativeBackend { manifest, hyper, models, cache: Mutex::new(BTreeMap::new()) }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend::new()
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn platform(&self) -> String {
+        "native".to_string()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load(&self, name: &str) -> Result<Arc<dyn ExecStep>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(name) {
+            return Ok(hit.clone());
+        }
+        let spec = self.manifest.artifact(name).map_err(|e| anyhow!(e))?.clone();
+        let model_name =
+            spec.model.clone().ok_or_else(|| anyhow!("{name}: artifact has no model"))?;
+        let model = self
+            .models
+            .get(&model_name)
+            .ok_or_else(|| anyhow!("{name}: unknown model {model_name}"))?
+            .clone();
+        let update_precond = !name.ends_with("_skip");
+        let kind = match spec.kind.as_str() {
+            "train" => Kind::Train {
+                opt: spec.optimizer.clone().unwrap_or_default(),
+                update_precond,
+            },
+            "grad" => Kind::Grad,
+            "apply" => Kind::Apply {
+                opt: spec.optimizer.clone().unwrap_or_default(),
+                update_precond,
+            },
+            "eval" => Kind::Eval,
+            other => return Err(anyhow!("{name}: unknown artifact kind {other:?}")),
+        };
+        let step: Arc<dyn ExecStep> =
+            Arc::new(NativeStep { spec, model, kind, hyper: self.hyper });
+        self.cache.lock().unwrap().insert(name.to_string(), step.clone());
+        Ok(step)
+    }
+}
+
+impl ExecStep for NativeStep {
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if t.shape() != spec.shape.as_slice() {
+                return Err(anyhow!(
+                    "{}: input {} shape {:?} != spec {:?}",
+                    self.spec.name,
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                ));
+            }
+        }
+
+        // partition inputs by role, preserving order
+        let mut params_in: Vec<&HostTensor> = Vec::new();
+        let mut grads_in: Vec<&HostTensor> = Vec::new();
+        let mut state_in: Vec<&HostTensor> = Vec::new();
+        let (mut x, mut y, mut lr, mut wd) = (None, None, None, None);
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            match spec.role {
+                Role::Param => params_in.push(t),
+                Role::Grad => grads_in.push(t),
+                Role::State => state_in.push(t),
+                Role::X => x = Some(t),
+                Role::Y => y = Some(t),
+                Role::Lr => lr = Some(t),
+                Role::Wd => wd = Some(t),
+                _ => {}
+            }
+        }
+        let mut mats = to_matrices(&params_in)?;
+        let lr = lr.map(|t| t.scalar() as f32).unwrap_or(0.0);
+        let wd = wd.map(|t| t.scalar() as f32).unwrap_or(0.0);
+
+        match &self.kind {
+            Kind::Train { opt, update_precond } => {
+                let batch = batch_ref(need(x, "x")?, need(y, "y")?)?;
+                let (grads, loss, metric) = self.model.loss_grad(&mats, &batch);
+                let state_out = apply_optimizer(
+                    opt,
+                    self.hyper,
+                    &mut mats,
+                    &grads,
+                    &state_in,
+                    lr,
+                    wd,
+                    *update_precond,
+                )?;
+                let mut out = tensors_from(&mats, &params_in);
+                out.extend(state_out);
+                out.push(HostTensor::scalar_f32(loss as f32));
+                out.push(HostTensor::scalar_f32(metric as f32));
+                Ok(out)
+            }
+            Kind::Grad => {
+                let batch = batch_ref(need(x, "x")?, need(y, "y")?)?;
+                let (grads, loss, metric) = self.model.loss_grad(&mats, &batch);
+                let mut out: Vec<HostTensor> = grads
+                    .iter()
+                    .zip(&params_in)
+                    .map(|(g, p)| HostTensor::from_f32(p.shape().to_vec(), g.data.clone()))
+                    .collect();
+                out.push(HostTensor::scalar_f32(loss as f32));
+                out.push(HostTensor::scalar_f32(metric as f32));
+                Ok(out)
+            }
+            Kind::Apply { opt, update_precond } => {
+                let gmats = to_matrices(&grads_in)?;
+                let state_out = apply_optimizer(
+                    opt,
+                    self.hyper,
+                    &mut mats,
+                    &gmats,
+                    &state_in,
+                    lr,
+                    wd,
+                    *update_precond,
+                )?;
+                let mut out = tensors_from(&mats, &params_in);
+                out.extend(state_out);
+                Ok(out)
+            }
+            Kind::Eval => {
+                let batch = batch_ref(need(x, "x")?, need(y, "y")?)?;
+                let (loss, metric) = self.model.loss_metric(&mats, &batch);
+                Ok(vec![
+                    HostTensor::scalar_f32(loss as f32),
+                    HostTensor::scalar_f32(metric as f32),
+                ])
+            }
+        }
+    }
+}
+
+fn need<'a>(t: Option<&'a HostTensor>, what: &str) -> Result<&'a HostTensor> {
+    t.ok_or_else(|| anyhow!("missing {what} input"))
+}
+
+fn to_matrix(t: &HostTensor) -> Result<Matrix> {
+    let d = t.as_f32().ok_or_else(|| anyhow!("expected f32 tensor"))?;
+    let sh = t.shape();
+    let rows = sh.first().copied().unwrap_or(1);
+    let cols = sh.get(1).copied().unwrap_or(1);
+    Ok(Matrix::from_vec(rows, cols, d.to_vec()))
+}
+
+fn to_matrices(ts: &[&HostTensor]) -> Result<Vec<Matrix>> {
+    ts.iter().map(|t| to_matrix(t)).collect()
+}
+
+fn tensors_from(mats: &[Matrix], like: &[&HostTensor]) -> Vec<HostTensor> {
+    mats.iter()
+        .zip(like)
+        .map(|(m, t)| HostTensor::from_f32(t.shape().to_vec(), m.data.clone()))
+        .collect()
+}
+
+fn batch_ref<'a>(x: &'a HostTensor, y: &'a HostTensor) -> Result<BatchRef<'a>> {
+    let batch = x.shape().first().copied().unwrap_or(1);
+    let (x_f32, x_i32): (&[f32], &[i32]) = match x {
+        HostTensor::F32 { data, .. } => (data.as_slice(), &[]),
+        HostTensor::I32 { data, .. } => (&[], data.as_slice()),
+    };
+    let y = y.as_i32().ok_or_else(|| anyhow!("labels must be i32"))?;
+    Ok(BatchRef { batch, x_f32, x_i32, y })
+}
+
+/// Build the optimizer, import state, step, export state.
+fn apply_optimizer(
+    opt_name: &str,
+    hyper: Hyper,
+    params: &mut [Matrix],
+    grads: &[Matrix],
+    state_in: &[&HostTensor],
+    lr: f32,
+    wd: f32,
+    update_precond: bool,
+) -> Result<Vec<HostTensor>> {
+    let shapes: Vec<(usize, usize)> = params.iter().map(|p| (p.rows, p.cols)).collect();
+    let mut opt = optim::build(opt_name, &shapes, hyper).map_err(|e| anyhow!(e))?;
+    let has_counter = opt_name == "adamw";
+    let nslots = state_in.len() - usize::from(has_counter);
+    {
+        let mut slots = opt.state_mut();
+        if slots.len() != nslots {
+            return Err(anyhow!(
+                "{opt_name}: state arity mismatch ({} tensors vs {} slots)",
+                nslots,
+                slots.len()
+            ));
+        }
+        for (slot, t) in slots.iter_mut().zip(&state_in[..nslots]) {
+            let d = t.as_f32().ok_or_else(|| anyhow!("state must be f32"))?;
+            if d.len() != slot.data.len() {
+                return Err(anyhow!("{opt_name}: state tensor length mismatch"));
+            }
+            slot.data.copy_from_slice(d);
+        }
+    }
+    if has_counter {
+        let t = state_in[nslots].as_f32().ok_or_else(|| anyhow!("counter must be f32"))?;
+        opt.set_step_count(t[0] as u64);
+    }
+    opt.step(params, grads, StepCtx { lr, weight_decay: wd, update_precond });
+    let mut out = Vec::with_capacity(state_in.len());
+    {
+        let mut slots = opt.state_mut();
+        for (slot, t) in slots.iter_mut().zip(&state_in[..nslots]) {
+            out.push(HostTensor::from_f32(t.shape().to_vec(), slot.data.clone()));
+        }
+    }
+    if has_counter {
+        out.push(HostTensor::from_f32(vec![1], vec![opt.step_count() as f32]));
+    }
+    Ok(out)
+}
+
+// -- manifest synthesis ------------------------------------------------------
+
+fn fspec(name: String, shape: Vec<usize>, role: Role, init: Option<Init>) -> IoSpec {
+    IoSpec { name, shape, dtype: Dtype::F32, role, init }
+}
+
+fn param_iospecs(model: &dyn NativeModel, role: Role, with_init: bool) -> Vec<IoSpec> {
+    model
+        .spec()
+        .params
+        .iter()
+        .map(|p| {
+            fspec(
+                p.name.clone(),
+                vec![p.rows, p.cols],
+                role,
+                if with_init { Some(p.init.clone()) } else { None },
+            )
+        })
+        .collect()
+}
+
+/// State tensor specs in exactly the order `Optimizer::state_mut` exposes
+/// them (plus AdamW's trailing step counter).
+fn state_iospecs(opt: &str, shapes: &[(usize, usize)], hyper: &Hyper, role: Role) -> Vec<IoSpec> {
+    let eps = hyper.precond_eps;
+    let pscale = eps.powf(-0.25);
+    let mut out = Vec::new();
+    match opt {
+        "sgd" => {
+            for (i, &(m, n)) in shapes.iter().enumerate() {
+                out.push(fspec(format!("mom_{i}"), vec![m, n], role, Some(Init::Zeros)));
+            }
+        }
+        "adamw" => {
+            for (i, &(m, n)) in shapes.iter().enumerate() {
+                out.push(fspec(format!("exp_avg_{i}"), vec![m, n], role, Some(Init::Zeros)));
+            }
+            for (i, &(m, n)) in shapes.iter().enumerate() {
+                out.push(fspec(format!("exp_avg_sq_{i}"), vec![m, n], role, Some(Init::Zeros)));
+            }
+            out.push(fspec("t".to_string(), vec![1], role, Some(Init::Zeros)));
+        }
+        "shampoo" => {
+            for (i, &(m, n)) in shapes.iter().enumerate() {
+                if m > 1 && n > 1 {
+                    out.push(fspec(
+                        format!("lstat_{i}"),
+                        vec![m, m],
+                        role,
+                        Some(Init::Eye { scale: eps }),
+                    ));
+                    out.push(fspec(
+                        format!("rstat_{i}"),
+                        vec![n, n],
+                        role,
+                        Some(Init::Eye { scale: eps }),
+                    ));
+                    out.push(fspec(
+                        format!("pl_{i}"),
+                        vec![m, m],
+                        role,
+                        Some(Init::Eye { scale: pscale }),
+                    ));
+                    out.push(fspec(
+                        format!("pr_{i}"),
+                        vec![n, n],
+                        role,
+                        Some(Init::Eye { scale: pscale }),
+                    ));
+                }
+                out.push(fspec(format!("mom_{i}"), vec![m, n], role, Some(Init::Zeros)));
+                out.push(fspec(format!("gmom_{i}"), vec![m, n], role, Some(Init::Zeros)));
+            }
+        }
+        "jorge" => {
+            for (i, &(m, n)) in shapes.iter().enumerate() {
+                if m > 1 && n > 1 {
+                    out.push(fspec(
+                        format!("l_hat_{i}"),
+                        vec![m, m],
+                        role,
+                        Some(Init::Eye { scale: pscale }),
+                    ));
+                    out.push(fspec(
+                        format!("r_hat_{i}"),
+                        vec![n, n],
+                        role,
+                        Some(Init::Eye { scale: pscale }),
+                    ));
+                }
+                out.push(fspec(format!("mom_{i}"), vec![m, n], role, Some(Init::Zeros)));
+                out.push(fspec(format!("gmom_{i}"), vec![m, n], role, Some(Init::Zeros)));
+            }
+        }
+        _ => {}
+    }
+    out
+}
+
+fn batch_io(model: &dyn NativeModel, batch: usize) -> (IoSpec, IoSpec) {
+    let spec = model.spec();
+    let mut x_shape = vec![batch];
+    x_shape.extend(&spec.x_sample);
+    let mut y_shape = vec![batch];
+    y_shape.extend(&spec.y_sample);
+    let x = IoSpec {
+        name: "x".to_string(),
+        shape: x_shape,
+        dtype: spec.x_dtype,
+        role: Role::X,
+        init: None,
+    };
+    let y = IoSpec {
+        name: "y".to_string(),
+        shape: y_shape,
+        dtype: Dtype::I32,
+        role: Role::Y,
+        init: None,
+    };
+    (x, y)
+}
+
+fn scalar_out(name: &str, role: Role) -> IoSpec {
+    fspec(name.to_string(), vec![], role, None)
+}
+
+fn build_manifest(models: &BTreeMap<String, Arc<dyn NativeModel>>, hyper: &Hyper) -> Manifest {
+    let mut artifacts = BTreeMap::new();
+    let mut metas = BTreeMap::new();
+
+    for (mname, model) in models {
+        let spec = model.spec();
+        let shapes = spec.shapes();
+        metas.insert(
+            mname.clone(),
+            ModelMeta {
+                name: mname.clone(),
+                metric: spec.metric.to_string(),
+                batch: spec.batch,
+                eval_batch: spec.eval_batch,
+                x_shape: {
+                    let mut s = vec![spec.batch];
+                    s.extend(&spec.x_sample);
+                    s
+                },
+                y_shape: {
+                    let mut s = vec![spec.batch];
+                    s.extend(&spec.y_sample);
+                    s
+                },
+                param_count: spec.param_count(),
+            },
+        );
+
+        let (x, y) = batch_io(model.as_ref(), spec.batch);
+        let (ex, ey) = batch_io(model.as_ref(), spec.eval_batch);
+        let lr = fspec("lr".to_string(), vec![], Role::Lr, None);
+        let wd = fspec("wd".to_string(), vec![], Role::Wd, None);
+        let params_in = param_iospecs(model.as_ref(), Role::Param, true);
+        let params_out = param_iospecs(model.as_ref(), Role::Param, false);
+        let grads_io = param_iospecs(model.as_ref(), Role::Grad, false);
+
+        // grad_{model}: params, x, y -> grads, loss, metric
+        let mut inputs = params_out.clone();
+        inputs.push(x.clone());
+        inputs.push(y.clone());
+        let mut outputs = grads_io.clone();
+        outputs.push(scalar_out("loss", Role::Loss));
+        outputs.push(scalar_out("metric", Role::Metric));
+        let name = format!("grad_{mname}");
+        artifacts.insert(
+            name.clone(),
+            ArtifactSpec {
+                name,
+                file: String::new(),
+                kind: "grad".to_string(),
+                model: Some(mname.clone()),
+                optimizer: None,
+                inputs,
+                outputs,
+            },
+        );
+
+        // eval_{model}: params, x, y -> loss, metric (held-out batch size)
+        let mut inputs = params_out.clone();
+        inputs.push(ex);
+        inputs.push(ey);
+        let outputs =
+            vec![scalar_out("loss", Role::Loss), scalar_out("metric", Role::Metric)];
+        let name = format!("eval_{mname}");
+        artifacts.insert(
+            name.clone(),
+            ArtifactSpec {
+                name,
+                file: String::new(),
+                kind: "eval".to_string(),
+                model: Some(mname.clone()),
+                optimizer: None,
+                inputs,
+                outputs,
+            },
+        );
+
+        for opt in OPTS {
+            let state_in = state_iospecs(opt, &shapes, hyper, Role::State);
+            let state_out = state_iospecs(opt, &shapes, hyper, Role::State)
+                .into_iter()
+                .map(|mut s| {
+                    s.init = None;
+                    s
+                })
+                .collect::<Vec<_>>();
+            let has_skip = matches!(*opt, "shampoo" | "jorge");
+            let variants: &[&str] = if has_skip { &["", "_skip"] } else { &[""] };
+            for suffix in variants {
+                // train_{model}_{opt}[_skip]:
+                //   params, state, x, y, lr, wd -> params, state, loss, metric
+                let mut inputs = params_in.clone();
+                inputs.extend(state_in.clone());
+                inputs.push(x.clone());
+                inputs.push(y.clone());
+                inputs.push(lr.clone());
+                inputs.push(wd.clone());
+                let mut outputs = params_out.clone();
+                outputs.extend(state_out.clone());
+                outputs.push(scalar_out("loss", Role::Loss));
+                outputs.push(scalar_out("metric", Role::Metric));
+                let name = format!("train_{mname}_{opt}{suffix}");
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactSpec {
+                        name,
+                        file: String::new(),
+                        kind: "train".to_string(),
+                        model: Some(mname.clone()),
+                        optimizer: Some(opt.to_string()),
+                        inputs,
+                        outputs,
+                    },
+                );
+
+                // apply_{model}_{opt}[_skip]:
+                //   params, grads, state, lr, wd -> params, state
+                let mut inputs = params_in.clone();
+                inputs.extend(grads_io.clone());
+                inputs.extend(state_in.clone());
+                inputs.push(lr.clone());
+                inputs.push(wd.clone());
+                let mut outputs = params_out.clone();
+                outputs.extend(state_out.clone());
+                let name = format!("apply_{mname}_{opt}{suffix}");
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactSpec {
+                        name,
+                        file: String::new(),
+                        kind: "apply".to_string(),
+                        model: Some(mname.clone()),
+                        optimizer: Some(opt.to_string()),
+                        inputs,
+                        outputs,
+                    },
+                );
+            }
+        }
+    }
+
+    let mut hyper_map = BTreeMap::new();
+    hyper_map.insert("beta1".to_string(), hyper.beta1 as f64);
+    hyper_map.insert("sgd_momentum".to_string(), hyper.sgd_momentum as f64);
+    hyper_map.insert("shampoo_beta2".to_string(), hyper.shampoo_beta2 as f64);
+    hyper_map.insert("precond_eps".to_string(), hyper.precond_eps as f64);
+    hyper_map.insert("newton_iters".to_string(), hyper.newton_iters as f64);
+    hyper_map.insert("adam_beta1".to_string(), hyper.adam_beta1 as f64);
+    hyper_map.insert("adam_beta2".to_string(), hyper.adam_beta2 as f64);
+    hyper_map.insert("adam_eps".to_string(), hyper.adam_eps as f64);
+
+    Manifest { dir: PathBuf::new(), artifacts, models: metas, hyper: hyper_map }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Rng;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::new()
+    }
+
+    #[test]
+    fn manifest_covers_all_models_and_optimizers() {
+        let b = backend();
+        let m = b.manifest();
+        for model in nn::MODEL_NAMES {
+            assert!(m.models.contains_key(*model), "{model} meta missing");
+            assert!(m.artifacts.contains_key(&format!("grad_{model}")));
+            assert!(m.artifacts.contains_key(&format!("eval_{model}")));
+            for opt in OPTS {
+                assert!(m.artifacts.contains_key(&format!("train_{model}_{opt}")));
+                assert!(m.artifacts.contains_key(&format!("apply_{model}_{opt}")));
+            }
+            assert!(m.artifacts.contains_key(&format!("train_{model}_jorge_skip")));
+        }
+        // trailing inputs of a train artifact are x, y, lr, wd
+        let art = m.artifact("train_mlp_jorge").unwrap();
+        let roles: Vec<Role> = art.inputs.iter().map(|i| i.role).collect();
+        assert_eq!(&roles[roles.len() - 4..], &[Role::X, Role::Y, Role::Lr, Role::Wd]);
+        // every param/state input carries an init rule
+        for i in &art.inputs {
+            if matches!(i.role, Role::Param | Role::State) {
+                assert!(i.init.is_some(), "{} lacks init", i.name);
+            }
+        }
+    }
+
+    #[test]
+    fn hyper_values_present() {
+        let b = backend();
+        assert_eq!(b.manifest().hyper.get("beta1").copied(), Some(0.9));
+        assert!(b.manifest().hyper.contains_key("precond_eps"));
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let b = backend();
+        assert!(b.load("train_mlp_nonexistent").is_err());
+        assert!(b.load("train_resnet_sgd").is_err());
+    }
+
+    #[test]
+    fn load_caches_steps() {
+        let b = backend();
+        let s1 = b.load("train_mlp_sgd").unwrap();
+        let s2 = b.load("train_mlp_sgd").unwrap();
+        assert!(Arc::ptr_eq(&s1, &s2));
+    }
+
+    fn init_inputs(step: &dyn ExecStep, seed: u64) -> Vec<HostTensor> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::new();
+        for spec in &step.spec().inputs {
+            match spec.role {
+                Role::Param | Role::State => {
+                    out.push(HostTensor::from_init(spec, &mut rng).unwrap())
+                }
+                Role::Grad => {
+                    out.push(HostTensor::from_f32(spec.shape.clone(), vec![0.0; spec.elements()]))
+                }
+                Role::X => match spec.dtype {
+                    Dtype::F32 => {
+                        let mut d = vec![0.0f32; spec.elements()];
+                        rng.fill_normal(&mut d, 0.0, 1.0);
+                        out.push(HostTensor::from_f32(spec.shape.clone(), d));
+                    }
+                    Dtype::I32 => {
+                        let d: Vec<i32> =
+                            (0..spec.elements()).map(|_| rng.below(10) as i32).collect();
+                        out.push(HostTensor::from_i32(spec.shape.clone(), d));
+                    }
+                },
+                Role::Y => {
+                    let d: Vec<i32> =
+                        (0..spec.elements()).map(|_| rng.below(8) as i32).collect();
+                    out.push(HostTensor::from_i32(spec.shape.clone(), d));
+                }
+                Role::Lr => out.push(HostTensor::scalar_f32(0.05)),
+                Role::Wd => out.push(HostTensor::scalar_f32(1e-4)),
+                _ => unreachable!(),
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn train_step_runs_and_is_deterministic() {
+        let b = backend();
+        let step = b.load("train_mlp_sgd").unwrap();
+        let inputs = init_inputs(step.as_ref(), 42);
+        let out1 = step.run(&inputs).unwrap();
+        let out2 = step.run(&inputs).unwrap();
+        assert_eq!(out1.len(), step.spec().outputs.len());
+        assert_eq!(out1, out2);
+        // loss output is finite and positive (cross-entropy)
+        let loss = out1[out1.len() - 2].scalar();
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    }
+
+    #[test]
+    fn run_rejects_wrong_arity_and_shape() {
+        let b = backend();
+        let step = b.load("eval_mlp").unwrap();
+        assert!(step.run(&[]).is_err());
+        let mut inputs = init_inputs(step.as_ref(), 1);
+        inputs[0] = HostTensor::from_f32(vec![2, 2], vec![0.0; 4]);
+        assert!(step.run(&inputs).is_err());
+    }
+
+    #[test]
+    fn adamw_counter_round_trips() {
+        // two apply steps through the stateless interface must equal two
+        // steps of a live AdamW mirror (bias correction depends on t).
+        use crate::optim::{build, Optimizer};
+        let b = backend();
+        let step = b.load("apply_mlp_adamw").unwrap();
+        let spec = step.spec().clone();
+
+        let mut rng = Rng::new(9);
+        let mut inputs = init_inputs(step.as_ref(), 9);
+        // randomise grads (init_inputs has no Grad arm: fill by role here)
+        for (t, s) in inputs.iter_mut().zip(&spec.inputs) {
+            if s.role == Role::Grad {
+                let mut d = vec![0.0f32; s.elements()];
+                rng.fill_normal(&mut d, 0.0, 0.1);
+                *t = HostTensor::from_f32(s.shape.clone(), d);
+            }
+        }
+
+        // live mirror
+        let shapes: Vec<(usize, usize)> = spec
+            .inputs
+            .iter()
+            .filter(|s| s.role == Role::Param)
+            .map(|s| (s.shape[0], s.shape.get(1).copied().unwrap_or(1)))
+            .collect();
+        let mut mirror = build("adamw", &shapes, Hyper::default()).unwrap();
+        let mut mirror_params: Vec<Matrix> = inputs
+            .iter()
+            .zip(&spec.inputs)
+            .filter(|(_, s)| s.role == Role::Param)
+            .map(|(t, _)| to_matrix(t).unwrap())
+            .collect();
+        let gmats: Vec<Matrix> = inputs
+            .iter()
+            .zip(&spec.inputs)
+            .filter(|(_, s)| s.role == Role::Grad)
+            .map(|(t, _)| to_matrix(t).unwrap())
+            .collect();
+
+        for _ in 0..2 {
+            let out = step.run(&inputs).unwrap();
+            mirror.step(
+                &mut mirror_params,
+                &gmats,
+                StepCtx { lr: 0.05, weight_decay: 1e-4, update_precond: true },
+            );
+            // write updated params + state back into the inputs
+            let mut oi = 0usize;
+            for (t, s) in inputs.iter_mut().zip(&spec.inputs) {
+                if matches!(s.role, Role::Param | Role::State) {
+                    *t = out[oi].clone();
+                    oi += 1;
+                }
+            }
+        }
+        for (pi, mp) in mirror_params.iter().enumerate() {
+            let t = inputs
+                .iter()
+                .zip(&spec.inputs)
+                .filter(|(_, s)| s.role == Role::Param)
+                .nth(pi)
+                .unwrap()
+                .0;
+            let got = t.as_f32().unwrap();
+            let max_err = got
+                .iter()
+                .zip(&mp.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_err < 1e-6, "param {pi}: {max_err}");
+        }
+    }
+}

@@ -1,7 +1,9 @@
-//! Host-side tensors and conversion to/from XLA literals.
+//! Host-side tensors (and, with the `pjrt` feature, conversion to/from
+//! XLA literals).
 
 use super::manifest::{Dtype, Init, IoSpec};
 use crate::rngx::Rng;
+#[cfg(feature = "pjrt")]
 use xla::Literal;
 
 /// A dtype-tagged host tensor matching one artifact input/output slot.
@@ -118,6 +120,7 @@ impl HostTensor {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> anyhow::Result<Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         match self {
@@ -138,6 +141,7 @@ impl HostTensor {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &Literal, spec: &IoSpec) -> anyhow::Result<HostTensor> {
         Ok(match spec.dtype {
             Dtype::F32 => HostTensor::F32 { shape: spec.shape.clone(), data: lit.to_vec::<f32>()? },
@@ -195,6 +199,7 @@ mod tests {
         .is_err());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_f32() {
         let t = HostTensor::from_f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
@@ -207,6 +212,7 @@ mod tests {
         assert_eq!(t, back);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_i32_and_scalar() {
         let t = HostTensor::from_i32(vec![3], vec![7, 8, 9]);

@@ -1,33 +1,38 @@
-//! Cross-validation: the HLO artifacts and the native Rust mirrors must
-//! implement the SAME optimizer semantics. These tests pin the L1/L2
-//! artifact math to the L3 mirrors on identical inputs.
+//! Cross-validation: every execution path must implement the SAME
+//! optimizer semantics.
+//!
+//! Always-on (native backend): the stateless `apply_*` / `train_*` steps
+//! must reproduce the live optimizer mirrors exactly — this pins the
+//! state round-trip through the manifest I/O convention (including
+//! AdamW's bias-correction counter and the jorge/shampoo `_skip`
+//! variants). With `--features pjrt` and artifacts present, the same
+//! harness additionally pins the HLO-artifact math to the mirrors.
 
 use jorge::optim::{build, Hyper, StepCtx};
 use jorge::rngx::Rng;
-use jorge::runtime::{Engine, HostTensor, Role};
+use jorge::runtime::{ExecBackend, HostTensor, NativeBackend, Role};
 use jorge::tensor::Matrix;
 use std::sync::Arc;
 
-fn engine() -> Option<Arc<Engine>> {
-    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    if !std::path::Path::new(dir).join("manifest.json").exists() {
-        eprintln!("skipping: run `make artifacts` first");
-        return None;
-    }
-    Some(Arc::new(Engine::new(dir).unwrap()))
+fn native() -> Arc<dyn ExecBackend> {
+    Arc::new(NativeBackend::new())
 }
 
-/// Drive the apply_* artifact and the native mirror with identical
-/// params/grads for `steps` steps; assert the trajectories agree.
-fn check_apply_matches_native(opt_name: &str, steps: usize, tol: f32) {
-    let Some(eng) = engine() else { return };
+/// Drive the backend's `apply_mlp_*` step and the live mirror with
+/// identical params/grads for `steps` steps; assert the trajectories
+/// agree to `tol`.
+fn check_apply_matches_mirror(eng: &dyn ExecBackend, opt_name: &str, steps: usize, tol: f32) {
     let full = eng.load(&format!("apply_mlp_{opt_name}")).unwrap();
     let has_skip = matches!(opt_name, "jorge" | "shampoo");
-    let skip = has_skip.then(|| eng.load(&format!("apply_mlp_{opt_name}_skip")).unwrap());
+    let skip = if has_skip {
+        Some(eng.load(&format!("apply_mlp_{opt_name}_skip")).unwrap())
+    } else {
+        None
+    };
 
     // shapes from the artifact spec
     let param_specs: Vec<_> = full
-        .spec
+        .spec()
         .inputs
         .iter()
         .filter(|i| i.role == Role::Param)
@@ -39,15 +44,13 @@ fn check_apply_matches_native(opt_name: &str, steps: usize, tol: f32) {
         .collect();
 
     let mut rng = Rng::new(42);
-    let params0: Vec<Matrix> = shapes
-        .iter()
-        .map(|&(m, n)| Matrix::randn(m, n, 0.3, &mut rng))
-        .collect();
+    let params0: Vec<Matrix> =
+        shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.3, &mut rng)).collect();
 
-    // artifact state from manifest init rules
+    // backend-side state from manifest init rules
     let mut init_rng = Rng::new(7);
     let mut art_state: Vec<HostTensor> = full
-        .spec
+        .spec()
         .inputs
         .iter()
         .filter(|i| i.role == Role::State)
@@ -59,18 +62,16 @@ fn check_apply_matches_native(opt_name: &str, steps: usize, tol: f32) {
         .map(|(m, s)| HostTensor::from_f32(s.shape.clone(), m.data.clone()))
         .collect();
 
-    let mut native = build(opt_name, &shapes, Hyper::default()).unwrap();
-    let mut nat_params = params0.clone();
+    let mut mirror = build(opt_name, &shapes, Hyper::default()).unwrap();
+    let mut mirror_params = params0.clone();
 
     let mut grad_rng = Rng::new(99);
     for step in 0..steps {
         let update = step % 2 == 0; // exercise full and skip variants
-        let grads: Vec<Matrix> = shapes
-            .iter()
-            .map(|&(m, n)| Matrix::randn(m, n, 0.05, &mut grad_rng))
-            .collect();
+        let grads: Vec<Matrix> =
+            shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.05, &mut grad_rng)).collect();
 
-        // artifact step
+        // backend step
         let exe = if update || skip.is_none() { &full } else { skip.as_ref().unwrap() };
         let mut inputs: Vec<HostTensor> = art_params.clone();
         for (g, s) in grads.iter().zip(&param_specs) {
@@ -84,21 +85,18 @@ fn check_apply_matches_native(opt_name: &str, steps: usize, tol: f32) {
         art_params = out;
         art_state = st;
 
-        // native step
-        native.step(
-            &mut nat_params,
+        // mirror step
+        mirror.step(
+            &mut mirror_params,
             &grads,
             StepCtx { lr: 0.05, weight_decay: 1e-3, update_precond: update },
         );
 
-        for (i, (a, n)) in art_params.iter().zip(&nat_params).enumerate() {
+        for (i, (a, n)) in art_params.iter().zip(&mirror_params).enumerate() {
             let a = a.as_f32().unwrap();
             let scale = n.max_abs().max(1e-6);
-            let max_err = a
-                .iter()
-                .zip(&n.data)
-                .map(|(x, y)| (x - y).abs())
-                .fold(0.0f32, f32::max);
+            let max_err =
+                a.iter().zip(&n.data).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
             assert!(
                 max_err / scale < tol,
                 "{opt_name} step {step} param {i}: rel err {} (tol {tol})",
@@ -109,52 +107,50 @@ fn check_apply_matches_native(opt_name: &str, steps: usize, tol: f32) {
 }
 
 #[test]
-fn sgd_artifact_matches_native() {
-    check_apply_matches_native("sgd", 4, 1e-4);
+fn sgd_apply_matches_mirror() {
+    check_apply_matches_mirror(native().as_ref(), "sgd", 4, 1e-6);
 }
 
 #[test]
-fn adamw_artifact_matches_native() {
-    check_apply_matches_native("adamw", 4, 1e-4);
+fn adamw_apply_matches_mirror() {
+    check_apply_matches_mirror(native().as_ref(), "adamw", 4, 1e-6);
 }
 
 #[test]
-fn jorge_artifact_matches_native() {
-    // f32 GEMM chains: slightly looser tolerance
-    check_apply_matches_native("jorge", 4, 5e-3);
+fn jorge_apply_matches_mirror() {
+    check_apply_matches_mirror(native().as_ref(), "jorge", 4, 1e-6);
 }
 
 #[test]
-fn shampoo_artifact_matches_native() {
-    check_apply_matches_native("shampoo", 4, 5e-3);
+fn shampoo_apply_matches_mirror() {
+    check_apply_matches_mirror(native().as_ref(), "shampoo", 4, 1e-6);
 }
 
-#[test]
-fn fused_train_step_equals_grad_plus_apply() {
-    // train_mlp_sgd(params, state, batch) must equal
-    // apply_mlp_sgd(params, grad_mlp(params, batch), state)
-    let Some(eng) = engine() else { return };
+/// `train_mlp_sgd(params, state, batch)` must equal
+/// `apply_mlp_sgd(params, grad_mlp(params, batch), state)`.
+fn check_fused_equals_grad_plus_apply(eng: &dyn ExecBackend) {
     let fused = eng.load("train_mlp_sgd").unwrap();
     let grad = eng.load("grad_mlp").unwrap();
     let apply = eng.load("apply_mlp_sgd").unwrap();
 
     let mut rng = Rng::new(5);
     let params: Vec<HostTensor> = fused
-        .spec
+        .spec()
         .inputs
         .iter()
         .filter(|i| i.role == Role::Param)
         .map(|s| HostTensor::from_init(s, &mut rng).unwrap())
         .collect();
     let state: Vec<HostTensor> = fused
-        .spec
+        .spec()
         .inputs
         .iter()
         .filter(|i| i.role == Role::State)
         .map(|s| HostTensor::from_init(s, &mut rng).unwrap())
         .collect();
-    let xspec = &fused.spec.inputs[fused.spec.input_index(Role::X).unwrap()];
-    let yspec = &fused.spec.inputs[fused.spec.input_index(Role::Y).unwrap()];
+    let spec = fused.spec();
+    let xspec = &spec.inputs[spec.input_index(Role::X).unwrap()];
+    let yspec = &spec.inputs[spec.input_index(Role::Y).unwrap()];
     let n: usize = xspec.shape.iter().product();
     let mut xdata = vec![0.0f32; n];
     rng.fill_normal(&mut xdata, 0.0, 1.0);
@@ -195,23 +191,22 @@ fn fused_train_step_equals_grad_plus_apply() {
     for (i, (a, b)) in fused_out[..aout.len()].iter().zip(&aout).enumerate() {
         let av = a.as_f32().unwrap();
         let bv = b.as_f32().unwrap();
-        let max_err = av
-            .iter()
-            .zip(bv)
-            .map(|(x, y)| (x - y).abs())
-            .fold(0.0f32, f32::max);
+        let max_err = av.iter().zip(bv).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
         assert!(max_err < 1e-4, "output {i}: {max_err}");
     }
 }
 
 #[test]
-fn grad_artifact_zero_for_constant_logits_bias_symmetry() {
-    // sanity on the grad artifact: loss is finite, grads finite & bounded
-    let Some(eng) = engine() else { return };
+fn fused_train_step_equals_grad_plus_apply() {
+    check_fused_equals_grad_plus_apply(native().as_ref());
+}
+
+/// Sanity on the grad step: loss finite and positive, grads finite.
+fn check_grad_step_sane(eng: &dyn ExecBackend) {
     let grad = eng.load("grad_mlp").unwrap();
     let mut rng = Rng::new(11);
     let mut inputs: Vec<HostTensor> = Vec::new();
-    for s in &grad.spec.inputs {
+    for s in &grad.spec().inputs {
         match s.role {
             Role::Param => {
                 let mut d = vec![0.0f32; s.elements()];
@@ -231,11 +226,55 @@ fn grad_artifact_zero_for_constant_logits_bias_symmetry() {
         }
     }
     let out = grad.run(&inputs).unwrap();
-    for (t, spec) in out.iter().zip(&grad.spec.outputs) {
+    for (t, spec) in out.iter().zip(&grad.spec().outputs) {
         if let Some(d) = t.as_f32() {
             assert!(d.iter().all(|v| v.is_finite()), "{} not finite", spec.name);
         }
     }
     let loss = out[out.len() - 2].scalar();
     assert!(loss > 0.0 && loss < 20.0);
+}
+
+#[test]
+fn grad_step_outputs_finite_and_bounded() {
+    check_grad_step_sane(native().as_ref());
+}
+
+// -- HLO-artifact agreement (requires `--features pjrt` + `make artifacts`)
+
+#[cfg(feature = "pjrt")]
+mod pjrt_artifacts {
+    use super::*;
+    use jorge::runtime::Engine;
+
+    fn engine() -> Option<Arc<dyn ExecBackend>> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Arc::new(Engine::new(dir).unwrap()))
+    }
+
+    #[test]
+    fn artifact_apply_matches_mirror_all_optimizers() {
+        let Some(eng) = engine() else { return };
+        check_apply_matches_mirror(eng.as_ref(), "sgd", 4, 1e-4);
+        check_apply_matches_mirror(eng.as_ref(), "adamw", 4, 1e-4);
+        // f32 GEMM chains: slightly looser tolerance
+        check_apply_matches_mirror(eng.as_ref(), "jorge", 4, 5e-3);
+        check_apply_matches_mirror(eng.as_ref(), "shampoo", 4, 5e-3);
+    }
+
+    #[test]
+    fn artifact_fused_equals_grad_plus_apply() {
+        let Some(eng) = engine() else { return };
+        check_fused_equals_grad_plus_apply(eng.as_ref());
+    }
+
+    #[test]
+    fn artifact_grad_outputs_finite() {
+        let Some(eng) = engine() else { return };
+        check_grad_step_sane(eng.as_ref());
+    }
 }

@@ -1,19 +1,18 @@
-//! Coordinator integration: full training runs through the PJRT runtime,
-//! determinism, data-parallel equivalence, checkpoint round-trips,
-//! failure injection.
+//! Coordinator integration: full training runs, determinism,
+//! data-parallel equivalence, checkpoint round-trips, failure injection.
+//!
+//! Everything here executes end-to-end through the pure-Rust
+//! `NativeBackend` — no artifacts, no skipping. The artifact-vs-native
+//! agreement suites live in `cross_validation.rs` behind the `pjrt`
+//! feature.
 
 use jorge::config::{ScheduleKind, TrainConfig};
 use jorge::coordinator::Trainer;
-use jorge::runtime::Engine;
+use jorge::runtime::{backend_for, ExecBackend, NativeBackend};
 use std::sync::Arc;
 
-fn engine() -> Option<Arc<Engine>> {
-    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    if !std::path::Path::new(dir).join("manifest.json").exists() {
-        eprintln!("skipping: run `make artifacts` first");
-        return None;
-    }
-    Some(Arc::new(Engine::new(dir).unwrap()))
+fn backend() -> Arc<dyn ExecBackend> {
+    Arc::new(NativeBackend::new())
 }
 
 fn tiny_cfg(opt: &str, workers: usize) -> TrainConfig {
@@ -30,13 +29,14 @@ fn tiny_cfg(opt: &str, workers: usize) -> TrainConfig {
         workers,
         dataset_size: 64 * 8 * workers.max(1) * 2,
         eval_every_epochs: 1000,
+        backend: "native".into(),
         ..Default::default()
     }
 }
 
 #[test]
 fn training_reduces_loss_all_optimizers() {
-    let Some(eng) = engine() else { return };
+    let eng = backend();
     for opt in ["sgd", "adamw", "shampoo", "jorge"] {
         let mut trainer = Trainer::new(tiny_cfg(opt, 1), eng.clone()).unwrap();
         let r = trainer.run().unwrap();
@@ -49,7 +49,7 @@ fn training_reduces_loss_all_optimizers() {
 
 #[test]
 fn same_seed_same_trajectory() {
-    let Some(eng) = engine() else { return };
+    let eng = backend();
     let r1 = Trainer::new(tiny_cfg("jorge", 1), eng.clone()).unwrap().run().unwrap();
     let r2 = Trainer::new(tiny_cfg("jorge", 1), eng.clone()).unwrap().run().unwrap();
     assert_eq!(r1.step_losses, r2.step_losses);
@@ -63,7 +63,7 @@ fn same_seed_same_trajectory() {
 
 #[test]
 fn data_parallel_runs_and_learns() {
-    let Some(eng) = engine() else { return };
+    let eng = backend();
     for workers in [2usize, 4] {
         let mut trainer = Trainer::new(tiny_cfg("jorge", workers), eng.clone()).unwrap();
         let r = trainer.run().unwrap();
@@ -74,10 +74,12 @@ fn data_parallel_runs_and_learns() {
 }
 
 #[test]
-fn native_apply_matches_artifact_apply_trajectory() {
-    // data-parallel with native mirrors vs apply artifacts: same seed,
-    // same shards => near-identical loss trajectories.
-    let Some(eng) = engine() else { return };
+fn native_flag_matches_backend_apply_trajectory() {
+    // data-parallel with the trainer-held native mirror (`--native`) vs
+    // the backend's stateless apply step: same seed, same shards =>
+    // near-identical loss trajectories. This pins the state round-trip
+    // through the apply artifacts' I/O convention.
+    let eng = backend();
     let mut cfg_a = tiny_cfg("sgd", 2);
     let mut cfg_n = tiny_cfg("sgd", 2);
     cfg_n.native = true;
@@ -89,14 +91,14 @@ fn native_apply_matches_artifact_apply_trajectory() {
     for (i, (a, n)) in ra.step_losses.iter().zip(&rn.step_losses).enumerate() {
         assert!(
             (a - n).abs() < 1e-3 * a.abs().max(1.0),
-            "step {i}: artifact {a} vs native {n}"
+            "step {i}: backend-apply {a} vs native-mirror {n}"
         );
     }
 }
 
 #[test]
 fn checkpoint_roundtrip_preserves_eval() {
-    let Some(eng) = engine() else { return };
+    let eng = backend();
     let path = std::env::temp_dir().join(format!("jorge_it_ckpt_{}", std::process::id()));
     let path = path.to_str().unwrap().to_string();
 
@@ -118,7 +120,7 @@ fn checkpoint_roundtrip_preserves_eval() {
 
 #[test]
 fn checkpoint_rejects_wrong_model() {
-    let Some(eng) = engine() else { return };
+    let eng = backend();
     let path = std::env::temp_dir().join(format!("jorge_it_ckpt2_{}", std::process::id()));
     let path = path.to_str().unwrap().to_string();
     let trainer = Trainer::new(tiny_cfg("jorge", 1), eng.clone()).unwrap();
@@ -133,7 +135,7 @@ fn checkpoint_rejects_wrong_model() {
 
 #[test]
 fn precond_interval_changes_trajectory_but_not_stability() {
-    let Some(eng) = engine() else { return };
+    let eng = backend();
     let mut c1 = tiny_cfg("jorge", 1);
     c1.precond_every = 1;
     let mut c8 = tiny_cfg("jorge", 1);
@@ -146,34 +148,64 @@ fn precond_interval_changes_trajectory_but_not_stability() {
 }
 
 #[test]
-fn unknown_artifact_and_bad_dirs_error_cleanly() {
-    let Some(eng) = engine() else { return };
+fn unknown_artifacts_and_backends_error_cleanly() {
+    let eng = backend();
     assert!(eng.load("train_mlp_nonexistent").is_err());
-    assert!(Engine::new("/definitely/not/a/dir").is_err());
+    assert!(eng.load("train_resnet50_sgd").is_err());
+    assert!(backend_for("artifacts", "tpu").is_err());
 }
 
 #[test]
-fn corrupt_artifact_fails_to_load() {
-    let dir = std::env::temp_dir().join(format!("jorge_corrupt_{}", std::process::id()));
-    std::fs::create_dir_all(&dir).unwrap();
-    // minimal manifest pointing at a garbage HLO file
-    std::fs::write(
-        dir.join("manifest.json"),
-        r#"{"version": 1, "hyper": {}, "models": {},
-            "artifacts": {"bad": {"file": "bad.hlo.txt", "kind": "kernel",
-            "inputs": [], "outputs": []}}}"#,
-    )
-    .unwrap();
-    std::fs::write(dir.join("bad.hlo.txt"), "this is not HLO at all").unwrap();
-    let eng = Engine::new(dir.to_str().unwrap()).unwrap();
-    assert!(eng.load("bad").is_err());
-    std::fs::remove_dir_all(&dir).ok();
+fn trainer_runs_every_native_model_one_step() {
+    // smoke every workload slot through the fused path: one step + eval
+    let eng = backend();
+    for model in ["mlp", "cnn", "segnet", "transformer"] {
+        let mut cfg = tiny_cfg("sgd", 1);
+        cfg.model = model.into();
+        cfg.epochs = 1;
+        cfg.steps_per_epoch = 1;
+        cfg.max_steps = 1;
+        cfg.dataset_size = 512;
+        let mut trainer = Trainer::new(cfg, eng.clone()).unwrap();
+        let r = trainer.run().unwrap();
+        assert_eq!(r.step_losses.len(), 1, "{model}");
+        assert!(r.step_losses[0].is_finite(), "{model}");
+        assert!(r.epochs[0].val_loss.is_finite(), "{model}");
+    }
 }
 
 #[test]
 fn config_validation_rejected_before_engine_work() {
-    let Some(eng) = engine() else { return };
+    let eng = backend();
     let mut cfg = tiny_cfg("jorge", 1);
     cfg.precond_every = 0;
     assert!(Trainer::new(cfg, eng).is_err());
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt_only {
+    use jorge::runtime::Engine;
+
+    #[test]
+    fn corrupt_artifact_fails_to_load() {
+        let dir = std::env::temp_dir().join(format!("jorge_corrupt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // minimal manifest pointing at a garbage HLO file
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1, "hyper": {}, "models": {},
+                "artifacts": {"bad": {"file": "bad.hlo.txt", "kind": "kernel",
+                "inputs": [], "outputs": []}}}"#,
+        )
+        .unwrap();
+        std::fs::write(dir.join("bad.hlo.txt"), "this is not HLO at all").unwrap();
+        let eng = Engine::new(dir.to_str().unwrap()).unwrap();
+        assert!(eng.load("bad").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_artifact_dir_is_error() {
+        assert!(Engine::new("/definitely/not/a/dir").is_err());
+    }
 }

@@ -1,0 +1,171 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network and no registry cache, so the
+//! workspace vendors the small slice of anyhow's API the codebase uses:
+//! [`Error`], [`Result`], the [`anyhow!`] macro and the [`Context`]
+//! extension trait. Error values carry a flattened message (source chains
+//! are folded into the string at conversion time), which is all the
+//! coordinator and CLI ever do with them.
+
+use std::fmt;
+
+/// A flattened, `Send + Sync` error value.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prepend a context layer, mirroring `anyhow::Error::context`.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`; that is what makes the blanket `From` below
+// coherent alongside the reflexive `impl From<T> for T`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow::Result<T>` — defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context extension for `Result` and `Option`, mirroring anyhow's.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    Error: From<E>,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::string::ToString::to_string(&$err))
+    };
+}
+
+/// `return Err(anyhow!(...))`, mirroring anyhow's `bail!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let n = 3;
+        let b = anyhow!("got {n} of {}", 7);
+        assert_eq!(b.to_string(), "got 3 of 7");
+        let c = anyhow!(String::from("owned"));
+        assert_eq!(c.to_string(), "owned");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn question_mark_passes_through_anyhow_errors() {
+        fn inner() -> Result<()> {
+            Err(anyhow!("already anyhow"))
+        }
+        fn outer() -> Result<()> {
+            inner()?;
+            Ok(())
+        }
+        assert_eq!(outer().unwrap_err().to_string(), "already anyhow");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening state").unwrap_err();
+        assert_eq!(e.to_string(), "opening state: disk on fire");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+    }
+
+    #[test]
+    fn alternate_display_matches_plain() {
+        let e = anyhow!("boom");
+        assert_eq!(format!("{e:#}"), format!("{e}"));
+    }
+}
