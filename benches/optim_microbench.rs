@@ -5,12 +5,15 @@
 //! Also benches the GEMM substrate (scaling + threading) since every
 //! second-order path reduces to it.
 
+use jorge::benchrun::{bench_envelope, json_row, write_bench_json};
 use jorge::benchx::{bench, human_time, Table};
+use jorge::jsonio::Json;
 use jorge::rngx::Rng;
 use jorge::tensor::{
-    gram_left, inv_fourth_root_eigh, inv_fourth_root_newton, jorge_update, matmul, matmul_st,
-    Matrix,
+    gram_left, gram_right, inv_fourth_root_eigh, inv_fourth_root_newton, jorge_update, matmul,
+    matmul_bias_relu, matmul_nt, matmul_st, matmul_tn, Matrix,
 };
+use std::collections::BTreeMap;
 
 fn spd(n: usize, seed: u64) -> Matrix {
     let mut rng = Rng::new(seed);
@@ -26,6 +29,9 @@ fn spd(n: usize, seed: u64) -> Matrix {
 fn main() {
     let fast = std::env::var("JORGE_FAST").map(|v| v == "1").unwrap_or(false);
     let dims: &[usize] = if fast { &[64, 128] } else { &[64, 128, 256, 512] };
+    let mut precond_rows: Vec<Json> = Vec::new();
+    let mut gemm_rows: Vec<Json> = Vec::new();
+    let mut kernel_rows: Vec<Json> = Vec::new();
 
     let mut table = Table::new(
         "Preconditioner update cost vs dimension (the paper's core trade)",
@@ -52,6 +58,10 @@ fn main() {
             format!("{:.2}x", jorge.mean_s / newton.mean_s),
             format!("{:.2}x", jorge.mean_s / eigh.mean_s),
         ]);
+        let mut cells: Vec<(&str, f64)> = vec![("eigh_s", eigh.mean_s)];
+        cells.push(("newton_s", newton.mean_s));
+        cells.push(("jorge_s", jorge.mean_s));
+        precond_rows.push(json_row(&n.to_string(), &cells));
     }
     table.print();
     println!("Shape check: jorge update ≪ eigh at every n; ≈ 1/3 of a 15-iteration Newton root");
@@ -80,6 +90,65 @@ fn main() {
             format!("{:.2}x", st.mean_s / mt.mean_s),
             format!("{gflops:.1}"),
         ]);
+        let cells = [("st_s", st.mean_s), ("mt_s", mt.mean_s), ("gflops_mt", gflops)];
+        gemm_rows.push(json_row(&n.to_string(), &cells));
     }
     gemm.print();
+
+    // the transpose-free / fused kernels the backward passes run on,
+    // plus the threaded grams sitting on every precond update
+    let mut kernels = Table::new(
+        "GEMM variants (transpose-free, fused epilogue) and threaded grams",
+        &["n", "nn", "nt (A B^T)", "tn (A^T B)", "nn+bias+relu", "gram_left", "gram_right"],
+    );
+    for &n in dims {
+        let mut rng = Rng::new(11);
+        let a = Matrix::randn(n, n, 1.0, &mut rng);
+        let b = Matrix::randn(n, n, 1.0, &mut rng);
+        let bias = Matrix::randn(n, 1, 1.0, &mut rng);
+        let g = Matrix::randn(n, n, 1.0, &mut rng);
+        let budget = if fast { 0.15 } else { 0.3 };
+        let nn = bench("nn", budget, || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+        let nt = bench("nt", budget, || {
+            std::hint::black_box(matmul_nt(&a, &b));
+        });
+        let tn = bench("tn", budget, || {
+            std::hint::black_box(matmul_tn(&a, &b));
+        });
+        let fused = bench("fused", budget, || {
+            std::hint::black_box(matmul_bias_relu(&a, &b, &bias));
+        });
+        let gl = bench("gram_left", budget, || {
+            std::hint::black_box(gram_left(&g));
+        });
+        let gr = bench("gram_right", budget, || {
+            std::hint::black_box(gram_right(&g));
+        });
+        kernels.row(&[
+            n.to_string(),
+            human_time(nn.mean_s),
+            human_time(nt.mean_s),
+            human_time(tn.mean_s),
+            human_time(fused.mean_s),
+            human_time(gl.mean_s),
+            human_time(gr.mean_s),
+        ]);
+        let mut cells: Vec<(&str, f64)> = vec![("nn_s", nn.mean_s), ("nt_s", nt.mean_s)];
+        cells.push(("tn_s", tn.mean_s));
+        cells.push(("nn_bias_relu_s", fused.mean_s));
+        cells.push(("gram_left_s", gl.mean_s));
+        cells.push(("gram_right_s", gr.mean_s));
+        kernel_rows.push(json_row(&n.to_string(), &cells));
+    }
+    kernels.print();
+
+    let mut results = BTreeMap::new();
+    results.insert("precond_update".to_string(), Json::Arr(precond_rows));
+    results.insert("gemm_scaling".to_string(), Json::Arr(gemm_rows));
+    results.insert("gemm_kernels".to_string(), Json::Arr(kernel_rows));
+    let payload = bench_envelope("microbench", Json::Obj(results));
+    let path = write_bench_json("microbench", &payload).expect("write BENCH_microbench.json");
+    println!("\nwrote {path}");
 }

@@ -10,10 +10,13 @@
 //!
 //! Expected shape: Jorge within ~1-10% of SGD, Shampoo 20-35% slower.
 
-use jorge::benchrun::{base_config, engine, fast, tune_for};
+use jorge::benchrun::{
+    base_config, bench_envelope, engine, fast, json_row, tune_for, write_bench_json,
+};
 use jorge::benchx::{bench_n, Table};
 use jorge::collectives::CommCostModel;
 use jorge::coordinator::Trainer;
+use jorge::jsonio::Json;
 use jorge::models;
 use jorge::optim::memory::OptKind;
 use jorge::optim::{build, Hyper, StepCtx};
@@ -21,16 +24,18 @@ use jorge::perfmodel::{project_iteration, GpuModel};
 use jorge::rngx::Rng;
 use jorge::tensor::Matrix;
 
-fn measured_artifact_times() -> anyhow::Result<()> {
+fn measured_artifact_times() -> anyhow::Result<Vec<Json>> {
     let engine = engine()?;
     let mut table = Table::new(
         "Table 1a (measured): fused HLO train-step s/iter on this host",
         &["model", "sgd", "adamw", "jorge", "shampoo", "jorge/sgd", "shampoo/sgd"],
     );
+    let mut rows = Vec::new();
+    let opts = ["sgd", "adamw", "jorge", "shampoo"];
     let models = if fast() { vec!["mlp"] } else { vec!["mlp", "cnn", "segnet"] };
     for model in models {
         let mut times = Vec::new();
-        for opt in ["sgd", "adamw", "jorge", "shampoo"] {
+        for opt in opts {
             let mut cfg = base_config(model);
             tune_for(&mut cfg, opt);
             cfg.epochs = 1;
@@ -51,16 +56,19 @@ fn measured_artifact_times() -> anyhow::Result<()> {
             format!("{:.2}x", times[2] / times[0]),
             format!("{:.2}x", times[3] / times[0]),
         ]);
+        let cells: Vec<(&str, f64)> = opts.iter().copied().zip(times.iter().copied()).collect();
+        rows.push(json_row(model, &cells));
     }
     table.print();
-    Ok(())
+    Ok(rows)
 }
 
-fn measured_native_times() {
+fn measured_native_times() -> Vec<Json> {
     let mut table = Table::new(
         "Table 1b (measured): native optimizer step on paper layer inventories, ms/iter (precond every 50)",
         &["network", "sgd", "adamw", "jorge", "shampoo"],
     );
+    let mut rows = Vec::new();
     let nets = if fast() { vec!["resnet18"] } else { vec!["resnet18", "resnet50", "deeplabv3"] };
     for net_name in nets {
         let net = models::by_name(net_name).unwrap().blocked(256);
@@ -71,6 +79,7 @@ fn measured_native_times() {
             .map(|&(m, n)| Matrix::randn(m, n, 0.01, &mut rng))
             .collect();
         let mut cells = vec![net_name.to_string()];
+        let mut json_cells: Vec<(&str, f64)> = Vec::new();
         for opt_name in ["sgd", "adamw", "jorge", "shampoo"] {
             let mut params: Vec<Matrix> = shapes
                 .iter()
@@ -91,10 +100,13 @@ fn measured_native_times() {
                 step_i += 1;
             });
             cells.push(format!("{:.1}", r.mean_s * 1e3));
+            json_cells.push((opt_name, r.mean_s * 1e3));
         }
         table.row(&cells);
+        rows.push(json_row(net_name, &json_cells));
     }
     table.print();
+    rows
 }
 
 fn projected_a100() {
@@ -132,8 +144,16 @@ fn projected_a100() {
 }
 
 fn main() -> anyhow::Result<()> {
-    measured_artifact_times()?;
-    measured_native_times();
+    let artifact_rows = measured_artifact_times()?;
+    let native_rows = measured_native_times();
     projected_a100();
+
+    // machine-readable copy for CI artifacts / future perf-PR diffing
+    let mut results = std::collections::BTreeMap::new();
+    results.insert("train_step_s".to_string(), Json::Arr(artifact_rows));
+    results.insert("optimizer_step_ms".to_string(), Json::Arr(native_rows));
+    let payload = bench_envelope("table1", Json::Obj(results));
+    let path = write_bench_json("table1", &payload)?;
+    println!("\nwrote {path}");
     Ok(())
 }

@@ -5,10 +5,13 @@
 //! * `JORGE_BACKEND` — auto | native | pjrt (default `auto`)
 //! * `JORGE_BENCH_SEEDS` — trials per cell (default 2)
 //! * `JORGE_FAST=1` — shrink budgets for smoke runs
+//! * `JORGE_BENCH_DIR` — where `BENCH_*.json` land (default cwd)
 
 use crate::config::TrainConfig;
 use crate::coordinator::{RunResult, Trainer};
+use crate::jsonio::Json;
 use crate::runtime::{backend_for, ExecBackend};
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 pub fn artifacts_dir() -> String {
@@ -54,6 +57,46 @@ pub fn mean_std(xs: &[f64]) -> (f64, f64) {
 pub fn pm(xs: &[f64]) -> String {
     let (m, s) = mean_std(xs);
     format!("{m:.4} ± {s:.4}")
+}
+
+// -- machine-readable bench output (`BENCH_*.json`) --------------------------
+//
+// Every table bench can drop its numbers next to the printed table so CI
+// uploads them as artifacts and future perf PRs diff iteration times
+// instead of eyeballing logs. Files are gitignored; EXPERIMENTS.md §Perf
+// records the curated baselines.
+
+/// Where `BENCH_*.json` files land (`JORGE_BENCH_DIR`, default cwd).
+pub fn bench_dir() -> String {
+    std::env::var("JORGE_BENCH_DIR").unwrap_or_else(|_| ".".into())
+}
+
+/// Standard envelope: bench id + host threading context around the
+/// bench-specific `results` payload.
+pub fn bench_envelope(bench: &str, results: Json) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("bench".to_string(), Json::Str(bench.to_string()));
+    obj.insert("threads".to_string(), Json::Num(crate::tensor::pool_size() as f64));
+    obj.insert("fast".to_string(), Json::Bool(fast()));
+    obj.insert("results".to_string(), results);
+    Json::Obj(obj)
+}
+
+/// Write `BENCH_{name}.json`; returns the path written.
+pub fn write_bench_json(name: &str, payload: &Json) -> std::io::Result<String> {
+    let path = format!("{}/BENCH_{name}.json", bench_dir());
+    std::fs::write(&path, payload.to_string_pretty())?;
+    Ok(path)
+}
+
+/// Row helper for per-model tables: `{"name": ..., <key>: <value>, ...}`.
+pub fn json_row(name: &str, cells: &[(&str, f64)]) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("name".to_string(), Json::Str(name.to_string()));
+    for (k, v) in cells {
+        obj.insert((*k).to_string(), Json::Num(*v));
+    }
+    Json::Obj(obj)
 }
 
 /// Baseline configs per benchmark slot, mirroring the paper's Table 5/6
@@ -153,6 +196,18 @@ mod tests {
                 cfg.validate().unwrap();
             }
         }
+    }
+
+    #[test]
+    fn bench_json_round_trips() {
+        let row = json_row("mlp", &[("sgd", 0.5), ("jorge", 0.55)]);
+        let env = bench_envelope("table1", Json::Arr(vec![row]));
+        let parsed = Json::parse(&env.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("bench").and_then(Json::as_str), Some("table1"));
+        assert!(parsed.get("threads").and_then(Json::as_f64).unwrap() >= 1.0);
+        let rows = parsed.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows[0].get("name").and_then(Json::as_str), Some("mlp"));
+        assert_eq!(rows[0].get("jorge").and_then(Json::as_f64), Some(0.55));
     }
 
     #[test]

@@ -3,12 +3,12 @@
 //! 32x32x3 inputs, then a 512 -> 64 -> 10 classifier head.
 
 use super::ops::{
-    accuracy, add_bias, col2im, col_sums, im2col, maxpool2, maxpool2_bwd, relu,
-    relu_bwd_inplace, softmax_xent, Conv,
+    accuracy, col2im, col_sums, im2col, maxpool2, maxpool2_bwd, relu_bwd_inplace, softmax_xent,
+    Conv,
 };
 use super::{he, zeros, BatchRef, ModelSpec, NativeModel};
 use crate::runtime::manifest::Dtype;
-use crate::tensor::{matmul, Matrix};
+use crate::tensor::{matmul_bias, matmul_bias_relu, matmul_nt, matmul_tn, Matrix};
 
 pub const CNN_HW: usize = 32;
 pub const CNN_CIN: usize = 3;
@@ -62,10 +62,12 @@ impl Default for Cnn {
     }
 }
 
-/// Per-stage forward cache.
+/// Per-stage forward cache. `post` is the fused conv+bias+ReLU output;
+/// it doubles as the ReLU mask in the backward pass, so the
+/// pre-activation is never materialised.
 struct StageCache {
     col: Matrix,
-    pre: Matrix,
+    post: Matrix,
     argmax: Vec<usize>,
     in_len: usize,
 }
@@ -85,35 +87,30 @@ impl NativeModel for Cnn {
         for (si, cv) in stages.iter().enumerate() {
             let in_len = act.len();
             let col = im2col(&act, b, cv);
-            let mut pre = matmul(&col, &params[2 * si]);
-            add_bias(&mut pre, &params[2 * si + 1]);
-            let post = relu(&pre);
+            let post = matmul_bias_relu(&col, &params[2 * si], &params[2 * si + 1]);
             let (pooled, argmax) = maxpool2(&post.data, b, cv.h, cv.w, cv.cout);
             act = pooled;
-            caches.push(StageCache { col, pre, argmax, in_len });
+            caches.push(StageCache { col, post, argmax, in_len });
         }
 
         // classifier head
         let hf = Matrix::from_vec(b, FLAT, act);
         let (fc1w, fc1b, fc2w, fc2b) = (&params[6], &params[7], &params[8], &params[9]);
-        let mut zf = matmul(&hf, fc1w);
-        add_bias(&mut zf, fc1b);
-        let af = relu(&zf);
-        let mut logits = matmul(&af, fc2w);
-        add_bias(&mut logits, fc2b);
+        let af = matmul_bias_relu(&hf, fc1w, fc1b);
+        let logits = matmul_bias(&af, fc2w, fc2b);
 
         let out = softmax_xent(&logits, batch.y);
         let acc = accuracy(&out.preds, batch.y);
 
-        // backward through the head
+        // backward through the head (transpose-free variants)
         let dlogits = out.dlogits;
-        let dfc2w = matmul(&af.t(), &dlogits);
+        let dfc2w = matmul_tn(&af, &dlogits);
         let dfc2b = col_sums(&dlogits);
-        let mut daf = matmul(&dlogits, &fc2w.t());
-        relu_bwd_inplace(&mut daf, &zf);
-        let dfc1w = matmul(&hf.t(), &daf);
+        let mut daf = matmul_nt(&dlogits, fc2w);
+        relu_bwd_inplace(&mut daf, &af);
+        let dfc1w = matmul_tn(&hf, &daf);
         let dfc1b = col_sums(&daf);
-        let dhf = matmul(&daf, &fc1w.t());
+        let dhf = matmul_nt(&daf, fc1w);
 
         // backward through the conv tower (reverse stage order)
         let mut grads: Vec<Matrix> = vec![Matrix::zeros(1, 1); 6];
@@ -121,13 +118,13 @@ impl NativeModel for Cnn {
         for si in (0..3).rev() {
             let cv = &stages[si];
             let cache = &caches[si];
-            let dpost = maxpool2_bwd(&dpooled, &cache.argmax, cache.pre.data.len());
+            let dpost = maxpool2_bwd(&dpooled, &cache.argmax, cache.post.data.len());
             let mut dpre = Matrix::from_vec(b * cv.h * cv.w, cv.cout, dpost);
-            relu_bwd_inplace(&mut dpre, &cache.pre);
-            grads[2 * si] = matmul(&cache.col.t(), &dpre);
+            relu_bwd_inplace(&mut dpre, &cache.post);
+            grads[2 * si] = matmul_tn(&cache.col, &dpre);
             grads[2 * si + 1] = col_sums(&dpre);
             if si > 0 {
-                let dcol = matmul(&dpre, &params[2 * si].t());
+                let dcol = matmul_nt(&dpre, &params[2 * si]);
                 dpooled = col2im(&dcol, b, cv);
                 debug_assert_eq!(dpooled.len(), cache.in_len);
             }
@@ -142,18 +139,13 @@ impl NativeModel for Cnn {
         let mut act: Vec<f32> = batch.x_f32.to_vec();
         for (si, cv) in conv_stages().iter().enumerate() {
             let col = im2col(&act, b, cv);
-            let mut pre = matmul(&col, &params[2 * si]);
-            add_bias(&mut pre, &params[2 * si + 1]);
-            let post = relu(&pre);
+            let post = matmul_bias_relu(&col, &params[2 * si], &params[2 * si + 1]);
             let (pooled, _) = maxpool2(&post.data, b, cv.h, cv.w, cv.cout);
             act = pooled;
         }
         let hf = Matrix::from_vec(b, FLAT, act);
-        let mut zf = matmul(&hf, &params[6]);
-        add_bias(&mut zf, &params[7]);
-        let af = relu(&zf);
-        let mut logits = matmul(&af, &params[8]);
-        add_bias(&mut logits, &params[9]);
+        let af = matmul_bias_relu(&hf, &params[6], &params[7]);
+        let logits = matmul_bias(&af, &params[8], &params[9]);
         let out = softmax_xent(&logits, batch.y);
         (out.loss, accuracy(&out.preds, batch.y))
     }

@@ -2,10 +2,10 @@
 //! benchmark" slot): 128 -> 256 -> 128 -> 10 with ReLU and softmax
 //! cross-entropy.
 
-use super::ops::{accuracy, add_bias, col_sums, relu, relu_bwd_inplace, softmax_xent};
+use super::ops::{accuracy, col_sums, relu_bwd_inplace, softmax_xent};
 use super::{he, zeros, BatchRef, ModelSpec, NativeModel};
 use crate::runtime::manifest::Dtype;
-use crate::tensor::{matmul, Matrix};
+use crate::tensor::{matmul_bias, matmul_bias_relu, matmul_nt, matmul_tn, Matrix};
 
 pub const MLP_IN: usize = 128;
 pub const MLP_H1: usize = 256;
@@ -56,30 +56,27 @@ impl NativeModel for Mlp {
             (&params[0], &params[1], &params[2], &params[3], &params[4], &params[5]);
         let x = Matrix::from_vec(b, MLP_IN, batch.x_f32.to_vec());
 
-        // forward
-        let mut z1 = matmul(&x, w1);
-        add_bias(&mut z1, b1);
-        let a1 = relu(&z1);
-        let mut z2 = matmul(&a1, w2);
-        add_bias(&mut z2, b2);
-        let a2 = relu(&z2);
-        let mut logits = matmul(&a2, w3);
-        add_bias(&mut logits, b3);
+        // forward — bias + ReLU fused into the GEMM epilogue, so only
+        // the post-activations are materialised (they double as the
+        // ReLU masks in the backward pass)
+        let a1 = matmul_bias_relu(&x, w1, b1);
+        let a2 = matmul_bias_relu(&a1, w2, b2);
+        let logits = matmul_bias(&a2, w3, b3);
 
         let out = softmax_xent(&logits, batch.y);
         let acc = accuracy(&out.preds, batch.y);
 
-        // backward
+        // backward — transpose-free GEMM variants, no `.t()` copies
         let dlogits = out.dlogits;
-        let dw3 = matmul(&a2.t(), &dlogits);
+        let dw3 = matmul_tn(&a2, &dlogits);
         let db3 = col_sums(&dlogits);
-        let mut da2 = matmul(&dlogits, &w3.t());
-        relu_bwd_inplace(&mut da2, &z2);
-        let dw2 = matmul(&a1.t(), &da2);
+        let mut da2 = matmul_nt(&dlogits, w3);
+        relu_bwd_inplace(&mut da2, &a2);
+        let dw2 = matmul_tn(&a1, &da2);
         let db2 = col_sums(&da2);
-        let mut da1 = matmul(&da2, &w2.t());
-        relu_bwd_inplace(&mut da1, &z1);
-        let dw1 = matmul(&x.t(), &da1);
+        let mut da1 = matmul_nt(&da2, w2);
+        relu_bwd_inplace(&mut da1, &a1);
+        let dw1 = matmul_tn(&x, &da1);
         let db1 = col_sums(&da1);
 
         (vec![dw1, db1, dw2, db2, dw3, db3], out.loss, acc)
@@ -90,14 +87,9 @@ impl NativeModel for Mlp {
         let (w1, b1, w2, b2, w3, b3) =
             (&params[0], &params[1], &params[2], &params[3], &params[4], &params[5]);
         let x = Matrix::from_vec(b, MLP_IN, batch.x_f32.to_vec());
-        let mut z1 = matmul(&x, w1);
-        add_bias(&mut z1, b1);
-        let a1 = relu(&z1);
-        let mut z2 = matmul(&a1, w2);
-        add_bias(&mut z2, b2);
-        let a2 = relu(&z2);
-        let mut logits = matmul(&a2, w3);
-        add_bias(&mut logits, b3);
+        let a1 = matmul_bias_relu(&x, w1, b1);
+        let a2 = matmul_bias_relu(&a1, w2, b2);
+        let logits = matmul_bias(&a2, w3, b3);
         let out = softmax_xent(&logits, batch.y);
         (out.loss, accuracy(&out.preds, batch.y))
     }

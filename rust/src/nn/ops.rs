@@ -9,29 +9,13 @@
 
 use crate::tensor::Matrix;
 
-/// `h[r, c] += b[c]` — broadcast a `(cols, 1)` bias over rows.
-pub fn add_bias(h: &mut Matrix, b: &Matrix) {
-    assert_eq!(h.cols, b.rows, "bias shape mismatch");
-    let cols = h.cols;
-    for r in 0..h.rows {
-        let row = &mut h.data[r * cols..(r + 1) * cols];
-        for (v, bv) in row.iter_mut().zip(&b.data) {
-            *v += bv;
-        }
-    }
-}
+// (bias broadcast + ReLU live in the GEMM epilogue now — see
+// `tensor::gemm::{matmul_bias, matmul_bias_relu}`)
 
-pub fn relu(m: &Matrix) -> Matrix {
-    let mut out = m.clone();
-    for v in out.data.iter_mut() {
-        if *v < 0.0 {
-            *v = 0.0;
-        }
-    }
-    out
-}
-
-/// `d *= (pre > 0)` — mask a gradient by the pre-activation sign.
+/// `d *= (pre > 0)` — mask a gradient by the activation sign. The mask
+/// is identical whether `pre` is the pre-activation or the ReLU output
+/// (`relu(z) > 0 ⇔ z > 0`), so callers that fuse ReLU into the GEMM
+/// epilogue pass the post-activation and skip storing `z` entirely.
 pub fn relu_bwd_inplace(d: &mut Matrix, pre: &Matrix) {
     assert_eq!(d.data.len(), pre.data.len());
     for (dv, pv) in d.data.iter_mut().zip(&pre.data) {
@@ -153,74 +137,112 @@ impl Conv {
     }
 }
 
-/// Unfold NHWC input into a `(b*h*w, k*k*cin)` patch matrix whose column
-/// order matches the `(kh*kw*cin, cout)` collapsed weight layout.
-pub fn im2col(x: &[f32], b: usize, cv: &Conv) -> Matrix {
+/// Unfold one NHWC sample into `h*w` patch rows (the per-batch body of
+/// [`im2col`]; `x` and `out` are that sample's slices).
+fn im2col_sample(x: &[f32], cv: &Conv, out: &mut [f32]) {
     let (h, w, cin, k) = (cv.h, cv.w, cv.cin, cv.k);
-    assert_eq!(x.len(), b * h * w * cin, "im2col input length");
     let pad = k / 2;
-    let mut col = Matrix::zeros(b * h * w, cv.patch());
-    for bi in 0..b {
-        for oy in 0..h {
-            for ox in 0..w {
-                let r = (bi * h + oy) * w + ox;
-                let out_row = &mut col.data[r * cv.patch()..(r + 1) * cv.patch()];
-                for ky in 0..k {
-                    let iy = oy + ky;
-                    if iy < pad || iy - pad >= h {
+    for oy in 0..h {
+        for ox in 0..w {
+            let r = oy * w + ox;
+            let out_row = &mut out[r * cv.patch()..(r + 1) * cv.patch()];
+            for ky in 0..k {
+                let iy = oy + ky;
+                if iy < pad || iy - pad >= h {
+                    continue;
+                }
+                let iy = iy - pad;
+                for kx in 0..k {
+                    let ix = ox + kx;
+                    if ix < pad || ix - pad >= w {
                         continue;
                     }
-                    let iy = iy - pad;
-                    for kx in 0..k {
-                        let ix = ox + kx;
-                        if ix < pad || ix - pad >= w {
-                            continue;
-                        }
-                        let ix = ix - pad;
-                        let src = ((bi * h + iy) * w + ix) * cin;
-                        let dst = (ky * k + kx) * cin;
-                        out_row[dst..dst + cin].copy_from_slice(&x[src..src + cin]);
-                    }
+                    let ix = ix - pad;
+                    let src = (iy * w + ix) * cin;
+                    let dst = (ky * k + kx) * cin;
+                    out_row[dst..dst + cin].copy_from_slice(&x[src..src + cin]);
                 }
             }
+        }
+    }
+}
+
+/// Batches below this many output floats run inline; above it, samples
+/// split across the worker pool (each sample's rows are disjoint).
+const IM2COL_PAR_MIN: usize = 1 << 15;
+
+/// Unfold NHWC input into a `(b*h*w, k*k*cin)` patch matrix whose column
+/// order matches the `(kh*kw*cin, cout)` collapsed weight layout.
+/// Threaded over the batch when the patch matrix is large enough.
+pub fn im2col(x: &[f32], b: usize, cv: &Conv) -> Matrix {
+    let (h, w, cin) = (cv.h, cv.w, cv.cin);
+    assert_eq!(x.len(), b * h * w * cin, "im2col input length");
+    let mut col = Matrix::zeros(b * h * w, cv.patch());
+    let per_out = h * w * cv.patch();
+    let per_in = h * w * cin;
+    if b > 1 && col.data.len() >= IM2COL_PAR_MIN && crate::tensor::pool_size() > 1 {
+        crate::tensor::parallel_chunks(&mut col.data, per_out, |bi, out| {
+            im2col_sample(&x[bi * per_in..(bi + 1) * per_in], cv, out);
+        });
+    } else {
+        for bi in 0..b {
+            let out = &mut col.data[bi * per_out..(bi + 1) * per_out];
+            im2col_sample(&x[bi * per_in..(bi + 1) * per_in], cv, out);
         }
     }
     col
 }
 
-/// Fold patch-matrix gradients back onto the NHWC input (adjoint of
-/// [`im2col`]).
-pub fn col2im(dcol: &Matrix, b: usize, cv: &Conv) -> Vec<f32> {
+/// Fold one sample's patch-row gradients back onto its NHWC input (the
+/// per-batch body of [`col2im`]).
+fn col2im_sample(dcol_rows: &[f32], cv: &Conv, dx: &mut [f32]) {
     let (h, w, cin, k) = (cv.h, cv.w, cv.cin, cv.k);
-    assert_eq!(dcol.rows, b * h * w);
-    assert_eq!(dcol.cols, cv.patch());
     let pad = k / 2;
-    let mut dx = vec![0.0f32; b * h * w * cin];
-    for bi in 0..b {
-        for oy in 0..h {
-            for ox in 0..w {
-                let r = (bi * h + oy) * w + ox;
-                let in_row = &dcol.data[r * cv.patch()..(r + 1) * cv.patch()];
-                for ky in 0..k {
-                    let iy = oy + ky;
-                    if iy < pad || iy - pad >= h {
+    for oy in 0..h {
+        for ox in 0..w {
+            let r = oy * w + ox;
+            let in_row = &dcol_rows[r * cv.patch()..(r + 1) * cv.patch()];
+            for ky in 0..k {
+                let iy = oy + ky;
+                if iy < pad || iy - pad >= h {
+                    continue;
+                }
+                let iy = iy - pad;
+                for kx in 0..k {
+                    let ix = ox + kx;
+                    if ix < pad || ix - pad >= w {
                         continue;
                     }
-                    let iy = iy - pad;
-                    for kx in 0..k {
-                        let ix = ox + kx;
-                        if ix < pad || ix - pad >= w {
-                            continue;
-                        }
-                        let ix = ix - pad;
-                        let dst = ((bi * h + iy) * w + ix) * cin;
-                        let src = (ky * k + kx) * cin;
-                        for c in 0..cin {
-                            dx[dst + c] += in_row[src + c];
-                        }
+                    let ix = ix - pad;
+                    let dst = (iy * w + ix) * cin;
+                    let src = (ky * k + kx) * cin;
+                    for c in 0..cin {
+                        dx[dst + c] += in_row[src + c];
                     }
                 }
             }
+        }
+    }
+}
+
+/// Fold patch-matrix gradients back onto the NHWC input (adjoint of
+/// [`im2col`]). Threaded over the batch: each sample's `dx` region is
+/// written by exactly one task.
+pub fn col2im(dcol: &Matrix, b: usize, cv: &Conv) -> Vec<f32> {
+    let (h, w, cin) = (cv.h, cv.w, cv.cin);
+    assert_eq!(dcol.rows, b * h * w);
+    assert_eq!(dcol.cols, cv.patch());
+    let mut dx = vec![0.0f32; b * h * w * cin];
+    let per_out = h * w * cin;
+    let per_in = h * w * cv.patch();
+    if b > 1 && dcol.data.len() >= IM2COL_PAR_MIN && crate::tensor::pool_size() > 1 {
+        crate::tensor::parallel_chunks(&mut dx, per_out, |bi, out| {
+            col2im_sample(&dcol.data[bi * per_in..(bi + 1) * per_in], cv, out);
+        });
+    } else {
+        for bi in 0..b {
+            let out = &mut dx[bi * per_out..(bi + 1) * per_out];
+            col2im_sample(&dcol.data[bi * per_in..(bi + 1) * per_in], cv, out);
         }
     }
     dx

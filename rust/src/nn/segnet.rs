@@ -2,12 +2,10 @@
 //! stand-in): two SAME 3x3 convs + ReLU and a 1x1 head predicting 8
 //! classes per pixel of a 16x16x3 input; mean-IoU metric.
 
-use super::ops::{
-    add_bias, col2im, col_sums, im2col, mean_iou, relu, relu_bwd_inplace, softmax_xent, Conv,
-};
+use super::ops::{col2im, col_sums, im2col, mean_iou, relu_bwd_inplace, softmax_xent, Conv};
 use super::{he, zeros, BatchRef, ModelSpec, NativeModel};
 use crate::runtime::manifest::Dtype;
-use crate::tensor::{matmul, Matrix};
+use crate::tensor::{matmul_bias, matmul_bias_relu, matmul_nt, matmul_tn, Matrix};
 
 pub const SEG_HW: usize = 16;
 pub const SEG_CIN: usize = 3;
@@ -64,36 +62,42 @@ impl NativeModel for Segnet {
         let b = batch.batch;
         let stages = seg_stages();
 
-        // forward: conv1+relu, conv2+relu, 1x1 head (no relu)
-        let mut act: Vec<f32> = batch.x_f32.to_vec();
+        // forward: conv1+relu, conv2+relu, 1x1 head (no relu) — bias and
+        // ReLU fused into the GEMM epilogue; the stored activations
+        // double as the ReLU masks in the backward pass, so each stage
+        // reads the previous stage's output in place (no copies)
         let mut cols: Vec<Matrix> = Vec::with_capacity(3);
-        let mut pres: Vec<Matrix> = Vec::with_capacity(3);
+        let mut acts: Vec<Matrix> = Vec::with_capacity(3);
         for (si, cv) in stages.iter().enumerate() {
-            let col = im2col(&act, b, cv);
-            let mut pre = matmul(&col, &params[2 * si]);
-            add_bias(&mut pre, &params[2 * si + 1]);
-            act = if si < 2 { relu(&pre).data } else { pre.data.clone() };
+            let input: &[f32] = if si == 0 { batch.x_f32 } else { &acts[si - 1].data };
+            let col = im2col(input, b, cv);
+            let post = if si < 2 {
+                matmul_bias_relu(&col, &params[2 * si], &params[2 * si + 1])
+            } else {
+                matmul_bias(&col, &params[2 * si], &params[2 * si + 1])
+            };
             cols.push(col);
-            pres.push(pre);
+            acts.push(post);
         }
 
         // per-pixel softmax cross-entropy over the head logits
-        let logits = Matrix::from_vec(b * SEG_HW * SEG_HW, SEG_CLASSES, act);
+        let head = acts.pop().expect("three conv stages");
+        let logits = Matrix::from_vec(b * SEG_HW * SEG_HW, SEG_CLASSES, head.data);
         let out = softmax_xent(&logits, batch.y);
         let iou = mean_iou(&out.preds, batch.y, SEG_CLASSES);
 
-        // backward
+        // backward (transpose-free variants)
         let mut grads: Vec<Matrix> = vec![Matrix::zeros(1, 1); 6];
         let mut dpre = out.dlogits;
         for si in (0..3).rev() {
             let cv = &stages[si];
             if si < 2 {
-                relu_bwd_inplace(&mut dpre, &pres[si]);
+                relu_bwd_inplace(&mut dpre, &acts[si]);
             }
-            grads[2 * si] = matmul(&cols[si].t(), &dpre);
+            grads[2 * si] = matmul_tn(&cols[si], &dpre);
             grads[2 * si + 1] = col_sums(&dpre);
             if si > 0 {
-                let dcol = matmul(&dpre, &params[2 * si].t());
+                let dcol = matmul_nt(&dpre, &params[2 * si]);
                 let dact = col2im(&dcol, b, cv);
                 dpre = Matrix::from_vec(b * cv.h * cv.w, cv.cin, dact);
             }
@@ -104,12 +108,16 @@ impl NativeModel for Segnet {
 
     fn loss_metric(&self, params: &[Matrix], batch: &BatchRef) -> (f64, f64) {
         let b = batch.batch;
-        let mut act: Vec<f32> = batch.x_f32.to_vec();
+        let mut act: Vec<f32> = Vec::new();
         for (si, cv) in seg_stages().iter().enumerate() {
-            let col = im2col(&act, b, cv);
-            let mut pre = matmul(&col, &params[2 * si]);
-            add_bias(&mut pre, &params[2 * si + 1]);
-            act = if si < 2 { relu(&pre).data } else { pre.data };
+            let input: &[f32] = if si == 0 { batch.x_f32 } else { &act };
+            let col = im2col(input, b, cv);
+            let post = if si < 2 {
+                matmul_bias_relu(&col, &params[2 * si], &params[2 * si + 1])
+            } else {
+                matmul_bias(&col, &params[2 * si], &params[2 * si + 1])
+            };
+            act = post.data;
         }
         let logits = Matrix::from_vec(b * SEG_HW * SEG_HW, SEG_CLASSES, act);
         let out = softmax_xent(&logits, batch.y);

@@ -10,7 +10,7 @@ use super::ops::{
 };
 use super::{he_scaled, normal, ones, BatchRef, ModelSpec, NativeModel, ParamSpec};
 use crate::runtime::manifest::Dtype;
-use crate::tensor::{matmul, Matrix};
+use crate::tensor::{matmul, matmul_nt, matmul_tn, Matrix};
 
 pub struct Transformer {
     vocab: usize,
@@ -155,7 +155,8 @@ impl Transformer {
                     let qb = slice_head(&q, bi, s, off, dh);
                     let kb = slice_head(&k, bi, s, off, dh);
                     let vb = slice_head(&v, bi, s, off, dh);
-                    let mut scores = matmul(&qb, &kb.t());
+                    // q @ k^T without materialising the per-head transpose
+                    let mut scores = matmul_nt(&qb, &kb);
                     scores.scale_inplace(scale);
                     causal_softmax_inplace(&mut scores);
                     let o_bh = matmul(&scores, &vb);
@@ -201,11 +202,12 @@ impl NativeModel for Transformer {
         let mut grads: Vec<Matrix> =
             params.iter().map(|p| Matrix::zeros(p.rows, p.cols)).collect();
 
-        // head + final layer norm
+        // head + final layer norm (transpose-free GEMM variants
+        // throughout the backward pass — no `.t()` copies)
         let head_i = 3 + self.layers * 8;
         let lnf_i = 2 + self.layers * 8;
-        grads[head_i] = matmul(&fwd.lnf.y.t(), &out.dlogits);
-        let dxf = matmul(&out.dlogits, &params[head_i].t());
+        grads[head_i] = matmul_tn(&fwd.lnf.y, &out.dlogits);
+        let dxf = matmul_nt(&out.dlogits, &params[head_i]);
         let (mut dx, dgf) = layernorm_bwd(&fwd.lnf, &params[lnf_i], &dxf);
         grads[lnf_i] = dgf;
 
@@ -214,11 +216,11 @@ impl NativeModel for Transformer {
 
             // FFN block: x_out = x_mid + gelu(ln2(x_mid)) @ w2
             let df = &dx; // residual pass-through
-            grads[self.lidx(l, 7)] = matmul(&cache.a.t(), df);
-            let mut du = matmul(df, &params[self.lidx(l, 7)].t());
+            grads[self.lidx(l, 7)] = matmul_tn(&cache.a, df);
+            let mut du = matmul_nt(df, &params[self.lidx(l, 7)]);
             gelu_bwd_inplace(&mut du, &cache.u);
-            grads[self.lidx(l, 6)] = matmul(&cache.ln2.y.t(), &du);
-            let dh2 = matmul(&du, &params[self.lidx(l, 6)].t());
+            grads[self.lidx(l, 6)] = matmul_tn(&cache.ln2.y, &du);
+            let dh2 = matmul_nt(&du, &params[self.lidx(l, 6)]);
             let (dx_ln2, dg2) = layernorm_bwd(&cache.ln2, &params[self.lidx(l, 5)], &dh2);
             grads[self.lidx(l, 5)] = dg2;
             for (xv, av) in dx.data.iter_mut().zip(&dx_ln2.data) {
@@ -227,8 +229,8 @@ impl NativeModel for Transformer {
 
             // attention block: x_mid = x_in + (heads(ln1(x_in))) @ wo
             let dattn = &dx;
-            grads[self.lidx(l, 4)] = matmul(&cache.o.t(), dattn);
-            let do_all = matmul(dattn, &params[self.lidx(l, 4)].t());
+            grads[self.lidx(l, 4)] = matmul_tn(&cache.o, dattn);
+            let do_all = matmul_nt(dattn, &params[self.lidx(l, 4)]);
             let mut dq = Matrix::zeros(b * s, d);
             let mut dk = Matrix::zeros(b * s, d);
             let mut dv = Matrix::zeros(b * s, d);
@@ -240,23 +242,23 @@ impl NativeModel for Transformer {
                     let vb = slice_head(&cache.v, bi, s, off, dh);
                     let qb = slice_head(&cache.q, bi, s, off, dh);
                     let kb = slice_head(&cache.k, bi, s, off, dh);
-                    let dp = matmul(&do_bh, &vb.t());
-                    let dv_bh = matmul(&p.t(), &do_bh);
+                    let dp = matmul_nt(&do_bh, &vb);
+                    let dv_bh = matmul_tn(p, &do_bh);
                     let mut ds = softmax_rows_bwd(p, &dp);
                     ds.scale_inplace(scale);
                     let dq_bh = matmul(&ds, &kb);
-                    let dk_bh = matmul(&ds.t(), &qb);
+                    let dk_bh = matmul_tn(&ds, &qb);
                     add_head(&mut dq, &dq_bh, bi, s, off);
                     add_head(&mut dk, &dk_bh, bi, s, off);
                     add_head(&mut dv, &dv_bh, bi, s, off);
                 }
             }
-            grads[self.lidx(l, 1)] = matmul(&cache.ln1.y.t(), &dq);
-            grads[self.lidx(l, 2)] = matmul(&cache.ln1.y.t(), &dk);
-            grads[self.lidx(l, 3)] = matmul(&cache.ln1.y.t(), &dv);
-            let mut dh1 = matmul(&dq, &params[self.lidx(l, 1)].t());
-            let dh_k = matmul(&dk, &params[self.lidx(l, 2)].t());
-            let dh_v = matmul(&dv, &params[self.lidx(l, 3)].t());
+            grads[self.lidx(l, 1)] = matmul_tn(&cache.ln1.y, &dq);
+            grads[self.lidx(l, 2)] = matmul_tn(&cache.ln1.y, &dk);
+            grads[self.lidx(l, 3)] = matmul_tn(&cache.ln1.y, &dv);
+            let mut dh1 = matmul_nt(&dq, &params[self.lidx(l, 1)]);
+            let dh_k = matmul_nt(&dk, &params[self.lidx(l, 2)]);
+            let dh_v = matmul_nt(&dv, &params[self.lidx(l, 3)]);
             for i in 0..dh1.data.len() {
                 dh1.data[i] += dh_k.data[i] + dh_v.data[i];
             }

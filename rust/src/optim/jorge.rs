@@ -6,7 +6,7 @@
 //! grafted momentum update with decoupled weight decay. 1-D layers
 //! (biases/gains) take the grafted SGD update directly.
 
-use super::{grafted_update, Hyper, Optimizer, StepCtx};
+use super::{for_each_layer, grafted_update, max_dim, Hyper, INNER_PAR_DIM, Optimizer, StepCtx};
 use crate::tensor::{gram_left, gram_right, jorge_update, matmul, Matrix};
 
 struct LayerState {
@@ -53,7 +53,14 @@ impl Optimizer for Jorge {
 
     fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], ctx: StepCtx) {
         assert_eq!(params.len(), self.layers.len());
-        for ((p, g), st) in params.iter_mut().zip(grads).zip(&mut self.layers) {
+        // Layers are independent: fan the per-layer updates (grams,
+        // inverse-free preconditioner refresh, preconditioned GEMM)
+        // across the worker pool; GEMMs inside a task run inline. On
+        // refresh steps dominated by one large preconditioner, stay
+        // serial so that layer's GEMMs get the pool instead.
+        let hyper = self.hyper;
+        let body = |li: usize, p: &mut Matrix, st: &mut LayerState| {
+            let g = &grads[li];
             match (&mut st.l_hat, &mut st.r_hat) {
                 (Some(l_hat), Some(r_hat)) => {
                     if ctx.update_precond {
@@ -61,15 +68,16 @@ impl Optimizer for Jorge {
                         *r_hat = jorge_update(r_hat, &gram_right(g));
                     }
                     let gtilde = matmul(&matmul(l_hat, g), r_hat);
-                    grafted_update(
-                        p, g, &gtilde, &mut st.mom, &mut st.gmom, ctx, self.hyper, true,
-                    );
+                    grafted_update(p, g, &gtilde, &mut st.mom, &mut st.gmom, ctx, hyper, true);
                 }
                 _ => {
-                    grafted_update(p, g, g, &mut st.mom, &mut st.gmom, ctx, self.hyper, true);
+                    grafted_update(p, g, g, &mut st.mom, &mut st.gmom, ctx, hyper, true);
                 }
             }
-        }
+        };
+        let dims = self.layers.iter().flat_map(|s| [s.l_hat.as_ref(), s.r_hat.as_ref()]);
+        let serial = ctx.update_precond && max_dim(dims) >= INNER_PAR_DIM;
+        for_each_layer(params, &mut self.layers, serial, body);
     }
 
     fn state_floats(&self) -> usize {

@@ -57,6 +57,38 @@ impl Default for Hyper {
     }
 }
 
+/// Outer-vs-inner parallelism pivot for the second-order optimizers: on
+/// preconditioner-refresh steps, a layer whose stat/preconditioner edge
+/// reaches this size dominates the step, so layers run serially and that
+/// layer's GEMMs get the whole pool. Below it (e.g. the 256-blocked
+/// paper inventories), independent layers fan out across the pool and
+/// dynamic task claiming load-balances the tail.
+pub(crate) const INNER_PAR_DIM: usize = 384;
+
+/// Largest square edge among per-layer optional matrices (preconditioner
+/// or gram-stat slots) — the size [`INNER_PAR_DIM`] gates on.
+pub(crate) fn max_dim<'a>(mats: impl Iterator<Item = Option<&'a Matrix>>) -> usize {
+    mats.flatten().map(|m| m.rows).max().unwrap_or(0)
+}
+
+/// Apply an independent per-layer update: serially when `serial` (a
+/// dominant refresh wants the pool for its own GEMMs), otherwise fanned
+/// across the worker pool.
+pub(crate) fn for_each_layer<S: Send>(
+    params: &mut [Matrix],
+    states: &mut [S],
+    serial: bool,
+    f: impl Fn(usize, &mut Matrix, &mut S) + Sync,
+) {
+    if serial {
+        for (li, (p, st)) in params.iter_mut().zip(states.iter_mut()).enumerate() {
+            f(li, p, st);
+        }
+    } else {
+        crate::tensor::parallel_zip_mut(params, states, f);
+    }
+}
+
 /// A training-step context supplied by the coordinator.
 #[derive(Clone, Copy, Debug)]
 pub struct StepCtx {

@@ -7,10 +7,9 @@
 //! Jacobi eigensolver (`RootMethod::Eigh`, the cuSOLVER-style baseline
 //! costed in Table 1).
 
-use super::{grafted_update, Hyper, Optimizer, StepCtx};
-use crate::tensor::{
-    gram_left, gram_right, inv_fourth_root_eigh, inv_fourth_root_newton, matmul, Matrix,
-};
+use super::{for_each_layer, grafted_update, max_dim, Hyper, INNER_PAR_DIM, Optimizer, StepCtx};
+use crate::tensor::{gram_left, gram_right, inv_fourth_root_eigh, inv_fourth_root_newton};
+use crate::tensor::{matmul, Matrix};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RootMethod {
@@ -57,14 +56,12 @@ impl Shampoo {
             .collect();
         Shampoo { hyper, root_method, layers }
     }
+}
 
-    fn root(&self, a: &Matrix) -> Matrix {
-        match self.root_method {
-            RootMethod::Newton => {
-                inv_fourth_root_newton(a, self.hyper.newton_iters, self.hyper.precond_eps)
-            }
-            RootMethod::Eigh => inv_fourth_root_eigh(a, self.hyper.precond_eps),
-        }
+fn root_of(method: RootMethod, hyper: Hyper, a: &Matrix) -> Matrix {
+    match method {
+        RootMethod::Newton => inv_fourth_root_newton(a, hyper.newton_iters, hyper.precond_eps),
+        RootMethod::Eigh => inv_fourth_root_eigh(a, hyper.precond_eps),
     }
 }
 
@@ -75,41 +72,42 @@ impl Optimizer for Shampoo {
 
     fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], ctx: StepCtx) {
         assert_eq!(params.len(), self.layers.len());
-        let b2 = self.hyper.shampoo_beta2;
-        for li in 0..params.len() {
-            let (p, g) = (&mut params[li], &grads[li]);
-            let precond = self.layers[li].lstat.is_some();
-            if precond {
+        // Layers are independent: fan the per-layer work (gram EMAs,
+        // inverse-root refresh, preconditioned GEMM) across the pool.
+        // The expensive roots dominate on `update_precond` steps; when
+        // one large stat dominates those, stay serial so its root's
+        // GEMMs get the pool instead (inner beats outer there).
+        let hyper = self.hyper;
+        let method = self.root_method;
+        let b2 = hyper.shampoo_beta2;
+        let body = |li: usize, p: &mut Matrix, st: &mut LayerState| {
+            let g = &grads[li];
+            if st.lstat.is_some() {
                 // EMA stats every step (Alg. 1 lines 5-8)
-                {
-                    let st = &mut self.layers[li];
-                    let lstat = st.lstat.as_mut().unwrap();
-                    let gl = gram_left(g);
-                    for i in 0..lstat.data.len() {
-                        lstat.data[i] = b2 * lstat.data[i] + (1.0 - b2) * gl.data[i];
-                    }
-                    let rstat = st.rstat.as_mut().unwrap();
-                    let gr = gram_right(g);
-                    for i in 0..rstat.data.len() {
-                        rstat.data[i] = b2 * rstat.data[i] + (1.0 - b2) * gr.data[i];
-                    }
+                let lstat = st.lstat.as_mut().unwrap();
+                let gl = gram_left(g);
+                for i in 0..lstat.data.len() {
+                    lstat.data[i] = b2 * lstat.data[i] + (1.0 - b2) * gl.data[i];
+                }
+                let rstat = st.rstat.as_mut().unwrap();
+                let gr = gram_right(g);
+                for i in 0..rstat.data.len() {
+                    rstat.data[i] = b2 * rstat.data[i] + (1.0 - b2) * gr.data[i];
                 }
                 if ctx.update_precond {
-                    let new_pl = self.root(self.layers[li].lstat.as_ref().unwrap());
-                    let new_pr = self.root(self.layers[li].rstat.as_ref().unwrap());
-                    self.layers[li].pl = Some(new_pl);
-                    self.layers[li].pr = Some(new_pr);
+                    st.pl = Some(root_of(method, hyper, st.lstat.as_ref().unwrap()));
+                    st.pr = Some(root_of(method, hyper, st.rstat.as_ref().unwrap()));
                 }
-                let st = &mut self.layers[li];
-                let gtilde = matmul(&matmul(st.pl.as_ref().unwrap(), g), st.pr.as_ref().unwrap());
-                grafted_update(
-                    p, g, &gtilde, &mut st.mom, &mut st.gmom, ctx, self.hyper, false,
-                );
+                let gtilde =
+                    matmul(&matmul(st.pl.as_ref().unwrap(), g), st.pr.as_ref().unwrap());
+                grafted_update(p, g, &gtilde, &mut st.mom, &mut st.gmom, ctx, hyper, false);
             } else {
-                let st = &mut self.layers[li];
-                grafted_update(p, g, g, &mut st.mom, &mut st.gmom, ctx, self.hyper, false);
+                grafted_update(p, g, g, &mut st.mom, &mut st.gmom, ctx, hyper, false);
             }
-        }
+        };
+        let dims = self.layers.iter().flat_map(|s| [s.lstat.as_ref(), s.rstat.as_ref()]);
+        let serial = ctx.update_precond && max_dim(dims) >= INNER_PAR_DIM;
+        for_each_layer(params, &mut self.layers, serial, body);
     }
 
     fn state_floats(&self) -> usize {

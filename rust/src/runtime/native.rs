@@ -48,6 +48,9 @@ pub struct NativeBackend {
 
 impl NativeBackend {
     pub fn new() -> NativeBackend {
+        // Spawn the GEMM worker pool now so the first train step doesn't
+        // pay thread-creation latency inside a timed iteration.
+        crate::tensor::warm_pool();
         let hyper = Hyper::default();
         let mut models: BTreeMap<String, Arc<dyn NativeModel>> = BTreeMap::new();
         for name in nn::MODEL_NAMES {

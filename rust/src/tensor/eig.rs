@@ -95,7 +95,8 @@ pub fn spectral_map(a: &Matrix, f: impl Fn(f32) -> f32) -> Matrix {
             vf.data[r * n + c] *= s;
         }
     }
-    super::gemm::matmul(&vf, &v.t())
+    // V diag(f(w)) @ V^T via the transpose-free NT kernel
+    super::gemm::matmul_nt(&vf, &v)
 }
 
 #[cfg(test)]

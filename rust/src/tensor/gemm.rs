@@ -1,12 +1,26 @@
-//! Blocked, multi-threaded GEMM — the Rust mirror of the Pallas kernel.
+//! Packed, tile-parallel GEMM — the Rust mirror of the Pallas kernel.
 //!
-//! The optimizer mirrors in `optim/` and the Table-1 micro-benchmarks run
-//! on this. Layout mirrors the L1 kernel: tile the output, stream panels
-//! of A and B through cache (the CPU analogue of HBM->VMEM staging), and
-//! accumulate in f32 registers. Threading splits the output row-blocks
-//! across a scoped thread pool.
+//! The optimizer mirrors in `optim/`, the native models in `nn/` and the
+//! Table-1 micro-benchmarks all run on this. Layout mirrors the L1
+//! kernel: tile the output, pack panels of A and B through cache (the
+//! CPU analogue of HBM->VMEM staging), and accumulate in f32 registers.
+//!
+//! Compared to the first-cut GEMM this module adds:
+//! * a persistent worker pool ([`super::pool`]) instead of a
+//!   `std::thread::scope` spawn per call;
+//! * parallelism over **2-D output tiles**, so tall-skinny and wide
+//!   shapes thread too (the old row-band split left any `m < 128`
+//!   single-threaded no matter how many flops were on the table);
+//! * transpose-free variants [`matmul_nt`] / [`matmul_tn`] so backprop
+//!   never materialises `.t()` copies;
+//! * fused epilogues ([`matmul_bias`], [`matmul_bias_relu`]) that fold
+//!   the bias broadcast and ReLU into the tile while it is cache-hot;
+//! * threaded symmetric rank-k grams ([`gram_left`], [`gram_right`]) on
+//!   Jorge's and Shampoo's every-precond-update path.
 
 use super::matrix::Matrix;
+use super::pool;
+use std::cell::RefCell;
 
 /// Tile edges. 64x64 output tiles with a 64-deep k panel keep the working
 /// set (3 * 64*64*4 B = 48 KiB) inside L1/L2 — measured best on this host
@@ -15,114 +29,276 @@ const MC: usize = 64;
 const NC: usize = 64;
 const KC: usize = 64;
 
-/// Single-threaded blocked kernel: `c[i0.., j0..] += a_panel @ b_panel`.
+/// Threading pays once a GEMM crosses ~1 MFLOP: pool dispatch is a
+/// couple of condvar wakes (microseconds), so the old 4-MFLOP /
+/// `m >= 2 * MC` cliff is gone — the gate is flops and tile count only.
+const PAR_MIN_FLOPS: f64 = 1.0e6;
+
+#[derive(Clone, Copy)]
+enum Layout {
+    /// `A @ B`
+    Nn,
+    /// `A @ B^T`, `B` stored row-major `(n, k)`
+    Nt,
+    /// `A^T @ B`, `A` stored row-major `(k, m)`
+    Tn,
+}
+
+/// Fused epilogue applied to each output tile while it is cache-hot.
+#[derive(Clone, Copy)]
+enum Ep<'a> {
+    None,
+    Bias(&'a [f32]),
+    BiasRelu(&'a [f32]),
+}
+
+thread_local! {
+    /// Per-thread packing scratch: the transposed A block (TN) and the
+    /// contiguous B panel. Reused across tiles — no per-call allocation.
+    static PACK_A: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    static PACK_B: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Shared output buffer; every task writes disjoint row segments only.
+#[derive(Clone, Copy)]
+struct CPtr(*mut f32);
+
+unsafe impl Send for CPtr {}
+unsafe impl Sync for CPtr {}
+
+impl CPtr {
+    /// The `[j0, j0 + nj)` segment of row `i` — exclusive to one task.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn row(&self, i: usize, j0: usize, nj: usize, ldc: usize) -> &mut [f32] {
+        std::slice::from_raw_parts_mut(self.0.add(i * ldc + j0), nj)
+    }
+}
+
+/// Four-lane unrolled dot product — the NT micro-kernel; auto-vectorises.
 #[inline]
-fn gemm_block(
-    a: &[f32],
-    lda: usize,
+fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len(), "dot operand length mismatch");
+    let n = x.len().min(y.len());
+    let n4 = n - n % 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let mut i = 0;
+    while i < n4 {
+        s0 += x[i] * y[i];
+        s1 += x[i + 1] * y[i + 1];
+        s2 += x[i + 2] * y[i + 2];
+        s3 += x[i + 3] * y[i + 3];
+        i += 4;
+    }
+    for j in n4..n {
+        s0 += x[j] * y[j];
+    }
+    (s0 + s2) + (s1 + s3)
+}
+
+/// Copy the `(kk, nj)` panel of `b` at `(k0, j0)` into contiguous
+/// scratch so the inner kernel streams it with unit stride.
+#[inline]
+fn pack_panel(
     b: &[f32],
     ldb: usize,
-    c: &mut [f32],
+    k0: usize,
+    j0: usize,
+    kk: usize,
+    nj: usize,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    for k in 0..kk {
+        out.extend_from_slice(&b[(k0 + k) * ldb + j0..(k0 + k) * ldb + j0 + nj]);
+    }
+}
+
+/// `C[tile] += A_rows @ B_panel`: `ap` holds length-`kk` rows at stride
+/// `lda` from `a_off`; `bp` is the packed `(kk, nj)` panel.
+#[inline]
+fn kernel_axpy(
+    ap: &[f32],
+    lda: usize,
+    a_off: usize,
+    bp: &[f32],
+    c: CPtr,
     ldc: usize,
     i0: usize,
     j0: usize,
-    k0: usize,
     mi: usize,
     nj: usize,
     kk: usize,
 ) {
-    for i in i0..i0 + mi {
-        let arow = &a[i * lda + k0..i * lda + k0 + kk];
-        for k in 0..kk {
-            let aik = arow[k];
+    for i in 0..mi {
+        let arow = &ap[a_off + i * lda..a_off + i * lda + kk];
+        let crow = unsafe { c.row(i0 + i, j0, nj, ldc) };
+        for (k, &aik) in arow.iter().enumerate() {
             if aik == 0.0 {
                 continue;
             }
-            let brow = &b[(k0 + k) * ldb + j0..(k0 + k) * ldb + j0 + nj];
-            let crow = &mut c[i * ldc + j0..i * ldc + j0 + nj];
+            let brow = &bp[k * nj..(k + 1) * nj];
             // inner loop: c[i, j0..] += aik * b[k, j0..]; auto-vectorises
-            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
                 *cv += aik * bv;
             }
         }
     }
 }
 
-/// `A @ B` single-threaded.
-pub fn matmul_st(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols, b.rows, "gemm: {:?} @ {:?}", a.shape(), b.shape());
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut c = Matrix::zeros(m, n);
-    for i0 in (0..m).step_by(MC) {
-        let mi = MC.min(m - i0);
-        for k0 in (0..k).step_by(KC) {
-            let kk = KC.min(k - k0);
-            for j0 in (0..n).step_by(NC) {
-                let nj = NC.min(n - j0);
-                gemm_block(&a.data, k, &b.data, n, &mut c.data, n, i0, j0, k0, mi, nj, kk);
+/// Compute one `(mi, nj)` output tile across all of k, then apply the
+/// fused epilogue while the tile is still cache-hot.
+fn run_tile(
+    layout: Layout,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: CPtr,
+    ldc: usize,
+    kdim: usize,
+    i0: usize,
+    j0: usize,
+    mi: usize,
+    nj: usize,
+    ep: Ep<'_>,
+) {
+    match layout {
+        Layout::Nn => PACK_B.with(|bp| {
+            let bp = &mut *bp.borrow_mut();
+            for k0 in (0..kdim).step_by(KC) {
+                let kk = KC.min(kdim - k0);
+                pack_panel(b, ldb, k0, j0, kk, nj, bp);
+                kernel_axpy(a, lda, i0 * lda + k0, bp, c, ldc, i0, j0, mi, nj, kk);
+            }
+        }),
+        Layout::Tn => PACK_A.with(|ap| {
+            PACK_B.with(|bp| {
+                let ap = &mut *ap.borrow_mut();
+                let bp = &mut *bp.borrow_mut();
+                for k0 in (0..kdim).step_by(KC) {
+                    let kk = KC.min(kdim - k0);
+                    pack_panel(b, ldb, k0, j0, kk, nj, bp);
+                    // pack the (kk, mi) block of A at (k0, i0), transposed,
+                    // so the kernel reads contiguous length-kk rows
+                    ap.resize(mi * kk, 0.0);
+                    for k in 0..kk {
+                        let src = &a[(k0 + k) * lda + i0..(k0 + k) * lda + i0 + mi];
+                        for (i, &v) in src.iter().enumerate() {
+                            ap[i * kk + k] = v;
+                        }
+                    }
+                    kernel_axpy(ap, kk, 0, bp, c, ldc, i0, j0, mi, nj, kk);
+                }
+            })
+        }),
+        Layout::Nt => {
+            // both operands are row-contiguous over k: pure dot products
+            for i in 0..mi {
+                let arow = &a[(i0 + i) * lda..(i0 + i) * lda + kdim];
+                let crow = unsafe { c.row(i0 + i, j0, nj, ldc) };
+                for (j, cv) in crow.iter_mut().enumerate() {
+                    let brow = &b[(j0 + j) * ldb..(j0 + j) * ldb + kdim];
+                    *cv = dot(arow, brow);
+                }
             }
         }
     }
-    c
-}
-
-/// `A @ B`, multi-threaded over output row blocks when the problem is big
-/// enough to amortise thread spawn (std::thread::scope — no pool dep).
-pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let flops = 2.0 * m as f64 * n as f64 * k as f64;
-    let threads = available_threads();
-    if threads <= 1 || flops < 4e6 || m < 2 * MC {
-        return matmul_st(a, b);
-    }
-    assert_eq!(a.cols, b.rows, "gemm: {:?} @ {:?}", a.shape(), b.shape());
-    let mut c = Matrix::zeros(m, n);
-    let row_blocks: Vec<usize> = (0..m).step_by(MC).collect();
-    let nchunks = threads.min(row_blocks.len());
-    let chunk = row_blocks.len().div_ceil(nchunks);
-
-    // Split C into disjoint row bands, one per worker.
-    let band_rows = chunk * MC;
-    let bands: Vec<&mut [f32]> = c.data.chunks_mut(band_rows * n).collect();
-    std::thread::scope(|s| {
-        for (bi, band) in bands.into_iter().enumerate() {
-            let a = &a.data;
-            let b = &b.data;
-            s.spawn(move || {
-                let i_start = bi * band_rows;
-                let mi_total = band.len() / n;
-                for i0 in (0..mi_total).step_by(MC) {
-                    let mi = MC.min(mi_total - i0);
-                    for k0 in (0..k).step_by(KC) {
-                        let kk = KC.min(k - k0);
-                        for j0 in (0..n).step_by(NC) {
-                            let nj = NC.min(n - j0);
-                            // band is row-shifted view of C
-                            gemm_block(
-                                &a[(i_start) * k..],
-                                k,
-                                b,
-                                n,
-                                band,
-                                n,
-                                i0,
-                                j0,
-                                k0,
-                                mi,
-                                nj,
-                                kk,
-                            );
-                        }
-                    }
+    match ep {
+        Ep::None => {}
+        Ep::Bias(bias) => {
+            for i in 0..mi {
+                let crow = unsafe { c.row(i0 + i, j0, nj, ldc) };
+                for (cv, &bv) in crow.iter_mut().zip(&bias[j0..j0 + nj]) {
+                    *cv += bv;
                 }
-            });
+            }
         }
-    });
+        Ep::BiasRelu(bias) => {
+            for i in 0..mi {
+                let crow = unsafe { c.row(i0 + i, j0, nj, ldc) };
+                for (cv, &bv) in crow.iter_mut().zip(&bias[j0..j0 + nj]) {
+                    *cv = (*cv + bv).max(0.0);
+                }
+            }
+        }
+    }
+}
+
+/// Shared driver: shape-check, tile the output 2-D, run tiles on the
+/// pool when the flop count justifies it. Per-element accumulation
+/// order is identical threaded and not, so results are bitwise equal.
+fn gemm(layout: Layout, a: &Matrix, b: &Matrix, ep: Ep<'_>, allow_threads: bool) -> Matrix {
+    let (m, kdim, n) = match layout {
+        Layout::Nn => {
+            assert_eq!(a.cols, b.rows, "gemm: {:?} @ {:?}", a.shape(), b.shape());
+            (a.rows, a.cols, b.cols)
+        }
+        Layout::Nt => {
+            assert_eq!(a.cols, b.cols, "gemm_nt: {:?} @ {:?}^T", a.shape(), b.shape());
+            (a.rows, a.cols, b.rows)
+        }
+        Layout::Tn => {
+            assert_eq!(a.rows, b.rows, "gemm_tn: {:?}^T @ {:?}", a.shape(), b.shape());
+            (a.cols, a.rows, b.cols)
+        }
+    };
+    if let Ep::Bias(bias) | Ep::BiasRelu(bias) = ep {
+        assert_eq!(bias.len(), n, "epilogue bias length");
+    }
+    let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let tiles_n = n.div_ceil(NC);
+    let n_tiles = m.div_ceil(MC) * tiles_n;
+    let cp = CPtr(c.data.as_mut_ptr());
+    let (lda, ldb, ldc) = (a.cols, b.cols, n);
+    let tile = |t: usize| {
+        let i0 = (t / tiles_n) * MC;
+        let j0 = (t % tiles_n) * NC;
+        let (mi, nj) = (MC.min(m - i0), NC.min(n - j0));
+        run_tile(layout, &a.data, lda, &b.data, ldb, cp, ldc, kdim, i0, j0, mi, nj, ep);
+    };
+    let flops = 2.0 * m as f64 * n as f64 * kdim as f64;
+    if allow_threads && n_tiles > 1 && flops >= PAR_MIN_FLOPS && pool::pool_size() > 1 {
+        pool::parallel_for(n_tiles, tile);
+    } else {
+        for t in 0..n_tiles {
+            tile(t);
+        }
+    }
     c
 }
 
-pub fn available_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+/// `A @ B`, threaded over 2-D output tiles when the flop count pays.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    gemm(Layout::Nn, a, b, Ep::None, true)
+}
+
+/// `A @ B` pinned to the calling thread (reference / microbench baseline).
+pub fn matmul_st(a: &Matrix, b: &Matrix) -> Matrix {
+    gemm(Layout::Nn, a, b, Ep::None, false)
+}
+
+/// `A @ B^T` without materialising the transpose (`B` is `(n, k)`).
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    gemm(Layout::Nt, a, b, Ep::None, true)
+}
+
+/// `A^T @ B` without materialising the transpose (`A` is `(k, m)`).
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    gemm(Layout::Tn, a, b, Ep::None, true)
+}
+
+/// `A @ B + bias`, the bias broadcast over rows and fused into the tile
+/// epilogue (`bias` is the usual `(cols, 1)` parameter matrix).
+pub fn matmul_bias(a: &Matrix, b: &Matrix, bias: &Matrix) -> Matrix {
+    gemm(Layout::Nn, a, b, Ep::Bias(&bias.data), true)
+}
+
+/// `relu(A @ B + bias)` fused into the tile epilogue.
+pub fn matmul_bias_relu(a: &Matrix, b: &Matrix, bias: &Matrix) -> Matrix {
+    gemm(Layout::Nn, a, b, Ep::BiasRelu(&bias.data), true)
 }
 
 /// `A @ A` convenience.
@@ -130,28 +306,95 @@ pub fn square(a: &Matrix) -> Matrix {
     matmul(a, a)
 }
 
-/// `G @ G^T` (left gram) without materialising the transpose.
-pub fn gram_left(g: &Matrix) -> Matrix {
-    let (m, k) = g.shape();
-    let mut c = Matrix::zeros(m, m);
-    for i in 0..m {
-        let gi = &g.data[i * k..(i + 1) * k];
-        for j in i..m {
-            let gj = &g.data[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (x, y) in gi.iter().zip(gj.iter()) {
-                acc += x * y;
-            }
-            c.data[i * m + j] = acc;
-            c.data[j * m + i] = acc;
+/// Upper-triangle tile origins for an `n x n` symmetric output.
+fn sym_blocks(n: usize) -> Vec<(usize, usize)> {
+    let tiles = n.div_ceil(NC);
+    let mut blocks = Vec::with_capacity(tiles * (tiles + 1) / 2);
+    for ti in 0..tiles {
+        for tj in ti..tiles {
+            blocks.push((ti * NC, tj * NC));
         }
     }
+    blocks
+}
+
+fn run_sym(blocks: &[(usize, usize)], flops: f64, f: impl Fn(usize) + Sync) {
+    if blocks.len() > 1 && flops >= PAR_MIN_FLOPS && pool::pool_size() > 1 {
+        pool::parallel_for(blocks.len(), f);
+    } else {
+        for i in 0..blocks.len() {
+            f(i);
+        }
+    }
+}
+
+/// Mirror the computed upper part of block `(i0, j0)` into `(j0, i0)`.
+/// The transposed region belongs to the same task, so writes stay
+/// disjoint across the pool.
+fn mirror_block(cp: CPtr, n: usize, i0: usize, j0: usize, mi: usize, nj: usize) {
+    for i in 0..mi {
+        let jlo = if i0 == j0 { i + 1 } else { 0 };
+        for j in jlo..nj {
+            unsafe { *cp.0.add((j0 + j) * n + i0 + i) = *cp.0.add((i0 + i) * n + j0 + j) };
+        }
+    }
+}
+
+/// `G @ G^T` (left gram) — threaded symmetric rank-k, no transpose
+/// copy: upper-triangle tiles of row-dot-products, mirrored by the
+/// owning task. Sits on every Jorge/Shampoo preconditioner update.
+pub fn gram_left(g: &Matrix) -> Matrix {
+    let (m, kdim) = g.shape();
+    let mut c = Matrix::zeros(m, m);
+    let blocks = sym_blocks(m);
+    let cp = CPtr(c.data.as_mut_ptr());
+    let task = |bi: usize| {
+        let (i0, j0) = blocks[bi];
+        let (mi, nj) = (NC.min(m - i0), NC.min(m - j0));
+        for i in 0..mi {
+            let gi = &g.data[(i0 + i) * kdim..(i0 + i + 1) * kdim];
+            let jlo = if i0 == j0 { i } else { 0 };
+            let crow = unsafe { cp.row(i0 + i, j0, nj, m) };
+            for j in jlo..nj {
+                let gj = &g.data[(j0 + j) * kdim..(j0 + j + 1) * kdim];
+                crow[j] = dot(gi, gj);
+            }
+        }
+        mirror_block(cp, m, i0, j0, mi, nj);
+    };
+    run_sym(&blocks, m as f64 * m as f64 * kdim as f64, task);
     c
 }
 
-/// `G^T @ G` (right gram).
+/// `G^T @ G` (right gram) computed directly from `G`'s row-major layout
+/// — rank-1 row accumulation over upper-triangle tiles; no `g.t()`
+/// materialisation, threaded like [`gram_left`].
 pub fn gram_right(g: &Matrix) -> Matrix {
-    gram_left(&g.t())
+    let (kdim, n) = g.shape();
+    let mut c = Matrix::zeros(n, n);
+    let blocks = sym_blocks(n);
+    let cp = CPtr(c.data.as_mut_ptr());
+    let task = |bi: usize| {
+        let (i0, j0) = blocks[bi];
+        let (mi, nj) = (NC.min(n - i0), NC.min(n - j0));
+        for r in 0..kdim {
+            let grow = &g.data[r * n..(r + 1) * n];
+            for i in 0..mi {
+                let gi = grow[i0 + i];
+                if gi == 0.0 {
+                    continue;
+                }
+                let jlo = if i0 == j0 { i } else { 0 };
+                let crow = unsafe { cp.row(i0 + i, j0 + jlo, nj - jlo, n) };
+                for (cv, &bv) in crow.iter_mut().zip(&grow[j0 + jlo..j0 + nj]) {
+                    *cv += gi * bv;
+                }
+            }
+        }
+        mirror_block(cp, n, i0, j0, mi, nj);
+    };
+    run_sym(&blocks, n as f64 * n as f64 * kdim as f64, task);
+    c
 }
 
 #[cfg(test)]
@@ -174,10 +417,13 @@ mod tests {
         c
     }
 
+    const ODD_SHAPES: &[(usize, usize, usize)] =
+        &[(1, 1, 1), (3, 5, 2), (17, 9, 23), (64, 64, 64), (65, 63, 67), (5, 130, 3)];
+
     #[test]
     fn matches_naive_small() {
         let mut rng = Rng::new(0);
-        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 9, 23), (64, 64, 64), (65, 63, 67)] {
+        for &(m, k, n) in ODD_SHAPES {
             let a = Matrix::randn(m, k, 1.0, &mut rng);
             let b = Matrix::randn(k, n, 1.0, &mut rng);
             let got = matmul_st(&a, &b);
@@ -191,6 +437,63 @@ mod tests {
     }
 
     #[test]
+    fn nt_matches_explicit_transpose() {
+        let mut rng = Rng::new(10);
+        for &(m, k, n) in ODD_SHAPES {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let bt = Matrix::randn(n, k, 1.0, &mut rng);
+            let got = matmul_nt(&a, &bt);
+            let want = naive(&a, &bt.t());
+            assert!(
+                got.max_abs_diff(&want) < 1e-3,
+                "nt ({m},{k},{n}): {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn tn_matches_explicit_transpose() {
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in ODD_SHAPES {
+            let at = Matrix::randn(k, m, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let got = matmul_tn(&at, &b);
+            let want = naive(&at.t(), &b);
+            assert!(
+                got.max_abs_diff(&want) < 1e-3,
+                "tn ({m},{k},{n}): {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn fused_epilogues_match_unfused() {
+        let mut rng = Rng::new(12);
+        for &(m, k, n) in ODD_SHAPES {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let bias = Matrix::randn(n, 1, 1.0, &mut rng);
+            let plain = matmul_st(&a, &b);
+            let mut want_bias = plain.clone();
+            for i in 0..m {
+                for j in 0..n {
+                    want_bias.data[i * n + j] += bias.data[j];
+                }
+            }
+            let got_bias = matmul_bias(&a, &b, &bias);
+            assert!(got_bias.max_abs_diff(&want_bias) < 1e-5, "bias ({m},{k},{n})");
+            let mut want_relu = want_bias.clone();
+            for v in want_relu.data.iter_mut() {
+                *v = v.max(0.0);
+            }
+            let got_relu = matmul_bias_relu(&a, &b, &bias);
+            assert!(got_relu.max_abs_diff(&want_relu) < 1e-5, "relu ({m},{k},{n})");
+        }
+    }
+
+    #[test]
     fn threaded_matches_single_threaded() {
         let mut rng = Rng::new(1);
         let a = Matrix::randn(300, 200, 1.0, &mut rng);
@@ -198,6 +501,18 @@ mod tests {
         let st = matmul_st(&a, &b);
         let mt = matmul(&a, &b);
         assert!(st.max_abs_diff(&mt) < 1e-4);
+    }
+
+    #[test]
+    fn tall_skinny_threads_and_matches() {
+        // m = 8 < MC: the old row-band split ran this single-threaded;
+        // the 2-D tile grid plus flop gate threads it over N.
+        let mut rng = Rng::new(13);
+        let a = Matrix::randn(8, 300, 1.0, &mut rng);
+        let b = Matrix::randn(300, 600, 1.0, &mut rng);
+        let st = matmul_st(&a, &b);
+        let mt = matmul(&a, &b);
+        assert_eq!(st.max_abs_diff(&mt), 0.0, "tile order must be thread-invariant");
     }
 
     #[test]
@@ -220,6 +535,24 @@ mod tests {
     }
 
     #[test]
+    fn threaded_gram_matches_and_is_symmetric() {
+        // big enough to cross the parallel gate (m^2 k > 1e6, > 1 block)
+        let mut rng = Rng::new(14);
+        let g = Matrix::randn(150, 80, 1.0, &mut rng);
+        let l = gram_left(&g);
+        let r = gram_right(&g.t());
+        // G @ G^T computed two ways (dot-tiles vs rank-1 accumulation)
+        assert!(l.max_abs_diff(&matmul_st(&g, &g.t())) < 1e-3);
+        assert!(r.max_abs_diff(&l) < 1e-3);
+        for i in 0..l.rows {
+            assert!(l.at(i, i) >= 0.0, "diag {i}");
+            for j in 0..l.cols {
+                assert_eq!(l.at(i, j), l.at(j, i), "asym at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
     fn gram_is_symmetric_psd_diag() {
         let mut rng = Rng::new(4);
         let g = Matrix::randn(20, 9, 1.0, &mut rng);
@@ -238,5 +571,13 @@ mod tests {
         let a = Matrix::zeros(2, 3);
         let b = Matrix::zeros(4, 2);
         matmul_st(&a, &b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn nt_shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(4, 2);
+        matmul_nt(&a, &b);
     }
 }

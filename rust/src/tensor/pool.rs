@@ -1,0 +1,385 @@
+//! Persistent scoped worker pool — the threading substrate for the
+//! native compute path.
+//!
+//! The old GEMM spawned a fresh `std::thread::scope` per call, which put
+//! a thread-creation storm on every hot loop (one spawn per band per
+//! matmul per layer per step). This pool spawns `available_parallelism()
+//! - 1` workers once, parks them on a condvar, and hands out tasks by
+//! index: [`parallel_for`] publishes a job, the calling thread
+//! participates in draining it, and workers go back to sleep when the
+//! task counter runs dry. Dispatch cost is a couple of condvar wakes
+//! (microseconds) instead of thread spawns (hundreds of microseconds),
+//! which is what makes threading pay off for the paper-scale (≤ 1024)
+//! matrices this crate runs.
+//!
+//! Nesting: a task that itself calls [`parallel_for`] (e.g. a per-layer
+//! optimizer update whose GEMMs are threaded) runs the nested loop
+//! inline on its own thread — no deadlock, no oversubscription. A job
+//! submitted while another user thread's job is in flight runs inline
+//! rather than queueing behind it.
+//!
+//! `JORGE_THREADS=n` caps the pool (1 disables threading entirely).
+
+use std::any::Any;
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex, MutexGuard, OnceLock, PoisonError, TryLockError};
+
+/// Lifetime-erased handle to the closure of the job in flight. Only
+/// dereferenced between job publication and completion, during which
+/// [`parallel_for`] keeps the closure alive on its stack.
+#[derive(Clone, Copy)]
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+}
+
+unsafe impl Send for Job {}
+
+unsafe fn call_closure<F: Fn(usize) + Sync>(data: *const (), i: usize) {
+    (*(data as *const F))(i)
+}
+
+struct State {
+    job: Option<Job>,
+    n_tasks: usize,
+    /// Next unclaimed task index of the current job.
+    next: usize,
+    /// Tasks currently executing (claimed but not finished).
+    running: usize,
+    /// Bumped per job so sleeping workers can tell old jobs from new.
+    epoch: u64,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Signalled when a new job is published.
+    work: Condvar,
+    /// Signalled when the last running task of a job finishes.
+    done: Condvar,
+    /// First panic payload from a task of the current job; re-thrown by
+    /// the submitter so assert messages survive the pool boundary.
+    panic_payload: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+impl Shared {
+    fn lock(&self) -> MutexGuard<'_, State> {
+        // A panicking task poisons the mutex; the state itself stays
+        // consistent (bookkeeping runs in `TaskGuard::drop`), so keep going.
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+pub struct Pool {
+    shared: &'static Shared,
+    /// Number of background workers (threads beyond the caller).
+    workers: usize,
+    /// Serialises jobs from different user threads.
+    submit: Mutex<()>,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+thread_local! {
+    /// True while this thread is executing a pool task; nested
+    /// `parallel_for` calls then run inline.
+    static IN_TASK: Cell<bool> = const { Cell::new(false) };
+}
+
+fn env_threads() -> Option<usize> {
+    std::env::var("JORGE_THREADS").ok().and_then(|v| v.parse().ok())
+}
+
+fn hardware_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+impl Pool {
+    fn new() -> Pool {
+        let threads = env_threads().unwrap_or_else(hardware_threads).max(1);
+        let workers = threads - 1;
+        let shared: &'static Shared = Box::leak(Box::new(Shared {
+            state: Mutex::new(State { job: None, n_tasks: 0, next: 0, running: 0, epoch: 0 }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            panic_payload: Mutex::new(None),
+        }));
+        for wi in 0..workers {
+            std::thread::Builder::new()
+                .name(format!("jorge-pool-{wi}"))
+                .spawn(move || worker_loop(shared))
+                .expect("spawn pool worker");
+        }
+        Pool { shared, workers, submit: Mutex::new(()) }
+    }
+}
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(Pool::new)
+}
+
+/// Total threads the pool can bring to bear (workers + the caller).
+pub fn pool_size() -> usize {
+    pool().workers + 1
+}
+
+/// Force pool construction up front so the first hot-path call doesn't
+/// pay thread-spawn latency.
+pub fn warm_pool() {
+    let _ = pool();
+}
+
+/// Drain tasks of the current job until none are left to claim.
+/// Returns with the state lock released.
+fn drain(shared: &Shared, my_epoch: u64) {
+    loop {
+        let mut st = shared.lock();
+        if st.epoch != my_epoch || st.next >= st.n_tasks {
+            return;
+        }
+        let i = st.next;
+        st.next += 1;
+        st.running += 1;
+        let job = st.job.expect("claimed task without a job");
+        drop(st);
+
+        let guard = TaskGuard { shared };
+        IN_TASK.with(|f| f.set(true));
+        let result = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.data, i) }));
+        IN_TASK.with(|f| f.set(false));
+        if let Err(payload) = result {
+            let mut slot = shared.panic_payload.lock().unwrap_or_else(PoisonError::into_inner);
+            slot.get_or_insert(payload);
+        }
+        drop(guard);
+    }
+}
+
+/// Decrements `running` (and wakes the submitter when the job drains)
+/// even if the task body panics.
+struct TaskGuard<'a> {
+    shared: &'a Shared,
+}
+
+impl Drop for TaskGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.shared.lock();
+        st.running -= 1;
+        if st.running == 0 && st.next >= st.n_tasks {
+            self.shared.done.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: &'static Shared) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let my_epoch;
+        {
+            let mut st = shared.lock();
+            while st.job.is_none() || st.epoch == seen_epoch {
+                st = shared.work.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+            my_epoch = st.epoch;
+        }
+        seen_epoch = my_epoch;
+        drain(shared, my_epoch);
+    }
+}
+
+/// Run `f(0), f(1), …, f(n_tasks - 1)` across the pool, returning when
+/// all calls have finished. The calling thread participates. Tasks must
+/// only touch disjoint data (the usual output-tile contract).
+///
+/// Runs inline when the pool has no workers, the task count is trivial,
+/// the caller is itself a pool task (nested parallelism), or another
+/// thread's job currently occupies the pool.
+pub fn parallel_for<F: Fn(usize) + Sync>(n_tasks: usize, f: F) {
+    if n_tasks == 0 {
+        return;
+    }
+    let pool = pool();
+    if pool.workers == 0 || n_tasks == 1 || IN_TASK.with(|c| c.get()) {
+        for i in 0..n_tasks {
+            f(i);
+        }
+        return;
+    }
+
+    // Another thread already has a job in flight: running this one
+    // inline beats queueing behind the full drain of theirs. A poisoned
+    // lock (a prior job panicked mid-flight) is safe to reclaim — job
+    // state is reset below.
+    let _submit = match pool.submit.try_lock() {
+        Ok(guard) => guard,
+        Err(TryLockError::Poisoned(poisoned)) => poisoned.into_inner(),
+        Err(TryLockError::WouldBlock) => {
+            for i in 0..n_tasks {
+                f(i);
+            }
+            return;
+        }
+    };
+    let shared = pool.shared;
+    *shared.panic_payload.lock().unwrap_or_else(PoisonError::into_inner) = None;
+    let my_epoch;
+    {
+        let mut st = shared.lock();
+        st.job = Some(Job { data: &f as *const F as *const (), call: call_closure::<F> });
+        st.n_tasks = n_tasks;
+        st.next = 0;
+        st.running = 0;
+        st.epoch += 1;
+        my_epoch = st.epoch;
+        shared.work.notify_all();
+    }
+
+    drain(shared, my_epoch);
+
+    let mut st = shared.lock();
+    while st.running > 0 {
+        st = shared.done.wait(st).unwrap_or_else(PoisonError::into_inner);
+    }
+    st.job = None;
+    drop(st);
+    let payload = shared.panic_payload.lock().unwrap_or_else(PoisonError::into_inner).take();
+    if let Some(payload) = payload {
+        resume_unwind(payload);
+    }
+}
+
+/// Split `data` into `chunk_len`-sized pieces and run `f(i, chunk_i)`
+/// over them in parallel. `data.len()` must be a multiple of
+/// `chunk_len`. The safe face of the disjoint-write contract for
+/// batch-split kernels (im2col / col2im).
+pub fn parallel_chunks<F: Fn(usize, &mut [f32]) + Sync>(
+    data: &mut [f32],
+    chunk_len: usize,
+    f: F,
+) {
+    assert!(chunk_len > 0 && data.len() % chunk_len == 0, "parallel_chunks: uneven split");
+    let n = data.len() / chunk_len;
+    let base = SendPtr(data.as_mut_ptr());
+    parallel_for(n, |i| {
+        let chunk =
+            unsafe { std::slice::from_raw_parts_mut(base.0.add(i * chunk_len), chunk_len) };
+        f(i, chunk);
+    });
+}
+
+/// Zip two equal-length mutable slices and run `f(i, &mut a[i], &mut
+/// b[i])` in parallel — the shape of an independent per-layer optimizer
+/// step (params + state).
+pub fn parallel_zip_mut<A: Send, B: Send, F: Fn(usize, &mut A, &mut B) + Sync>(
+    xs: &mut [A],
+    ys: &mut [B],
+    f: F,
+) {
+    assert_eq!(xs.len(), ys.len(), "parallel_zip_mut: length mismatch");
+    let xp = SendPtr(xs.as_mut_ptr());
+    let yp = SendPtr(ys.as_mut_ptr());
+    parallel_for(xs.len(), |i| {
+        let x = unsafe { &mut *xp.0.add(i) };
+        let y = unsafe { &mut *yp.0.add(i) };
+        f(i, x, y);
+    });
+}
+
+/// Raw pointer that may cross threads; every user hands out disjoint
+/// regions per task index.
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<T> Copy for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        let n = 257;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn nested_calls_run_inline_without_deadlock() {
+        let total = AtomicUsize::new(0);
+        parallel_for(8, |_| {
+            parallel_for(8, |_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn sequential_jobs_reuse_the_pool() {
+        for round in 0..50 {
+            let sum = AtomicUsize::new(0);
+            parallel_for(round + 2, |i| {
+                sum.fetch_add(i + 1, Ordering::SeqCst);
+            });
+            let n = round + 2;
+            assert_eq!(sum.load(Ordering::SeqCst), n * (n + 1) / 2);
+        }
+    }
+
+    #[test]
+    fn chunks_are_disjoint_and_complete() {
+        let mut data = vec![0.0f32; 12 * 5];
+        parallel_chunks(&mut data, 5, |i, chunk| {
+            for v in chunk.iter_mut() {
+                *v += (i + 1) as f32;
+            }
+        });
+        for (pos, v) in data.iter().enumerate() {
+            assert_eq!(*v, (pos / 5 + 1) as f32, "pos {pos}");
+        }
+    }
+
+    #[test]
+    fn zip_mut_updates_both_sides() {
+        let mut a = vec![0u64; 33];
+        let mut b = vec![0u64; 33];
+        parallel_zip_mut(&mut a, &mut b, |i, x, y| {
+            *x = i as u64;
+            *y = 2 * i as u64;
+        });
+        for i in 0..33 {
+            assert_eq!(a[i], i as u64);
+            assert_eq!(b[i], 2 * i as u64);
+        }
+    }
+
+    #[test]
+    fn pool_size_is_positive() {
+        assert!(pool_size() >= 1);
+        warm_pool();
+    }
+
+    #[test]
+    #[should_panic(expected = "task 3 boom")]
+    fn task_panics_propagate_with_payload() {
+        parallel_for(8, |i| {
+            if i == 3 {
+                panic!("task {i} boom");
+            }
+        });
+    }
+}

@@ -6,9 +6,9 @@ use jorge::collectives::{ring_all_reduce, tree_all_reduce};
 use jorge::config::ScheduleKind;
 use jorge::optim::Schedule;
 use jorge::rngx::Rng;
-use jorge::tensor::{
-    dynamic_beta2, gram_left, inv_fourth_root_newton, jorge_update, matmul, Matrix,
-};
+use jorge::tensor::Matrix;
+use jorge::tensor::{dynamic_beta2, gram_left, gram_right, inv_fourth_root_newton, jorge_update};
+use jorge::tensor::{matmul, matmul_bias, matmul_bias_relu, matmul_nt, matmul_st, matmul_tn};
 
 fn cfg(cases: usize) -> Config {
     Config { cases, seed: 0x10C0_u64 ^ 0x9E3779B9, max_shrink_iters: 64 }
@@ -94,6 +94,104 @@ fn prop_newton_root_inverts_spd() {
         let err = prod.max_abs_diff(&Matrix::eye(n, 1.0));
         if err > 0.05 {
             return Err(format!("H^4 A != I (err {err})"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// GEMM kernels: transpose-free variants, fused epilogues, threaded grams
+// ---------------------------------------------------------------------------
+
+fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for kk in 0..k {
+                acc += a.at(i, kk) as f64 * b.at(kk, j) as f64;
+            }
+            c.data[i * n + j] = acc as f32;
+        }
+    }
+    c
+}
+
+#[test]
+fn prop_transpose_free_variants_match_naive() {
+    // A @ B via nn, nt (vs B^T), tn (vs A^T) all agree with the f64
+    // reference across random odd shapes
+    let gen = PairGen(MatrixGen { max_dim: 24, scale: 1.5 }, UsizeGen { lo: 1, hi: 24 });
+    check("gemm-variants", cfg(24), &gen, |(ca, n)| {
+        let a = ca.to_matrix();
+        let mut rng = Rng::new(ca.seed ^ 0xABCD);
+        let b = Matrix::randn(a.cols, *n, 1.0, &mut rng);
+        let want = naive_matmul(&a, &b);
+        let nn = matmul(&a, &b);
+        let st = matmul_st(&a, &b);
+        let nt = matmul_nt(&a, &b.t());
+        let tn = matmul_tn(&a.t(), &b);
+        for (name, got) in [("nn", nn), ("st", st), ("nt", nt), ("tn", tn)] {
+            let err = got.max_abs_diff(&want);
+            if err > 1e-3 {
+                return Err(format!("{name} ({},{},{n}): err {err}", a.rows, a.cols));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fused_epilogues_match_unfused() {
+    let gen = PairGen(MatrixGen { max_dim: 20, scale: 2.0 }, UsizeGen { lo: 1, hi: 20 });
+    check("gemm-epilogue", cfg(24), &gen, |(ca, n)| {
+        let a = ca.to_matrix();
+        let mut rng = Rng::new(ca.seed ^ 0x77);
+        let b = Matrix::randn(a.cols, *n, 1.0, &mut rng);
+        let bias = Matrix::randn(*n, 1, 1.0, &mut rng);
+        let base = matmul(&a, &b);
+        let fused = matmul_bias(&a, &b, &bias);
+        let relu = matmul_bias_relu(&a, &b, &bias);
+        for i in 0..base.rows {
+            for j in 0..*n {
+                let want = base.at(i, j) + bias.data[j];
+                if (fused.at(i, j) - want).abs() > 1e-4 {
+                    return Err(format!("bias ({i},{j})"));
+                }
+                if (relu.at(i, j) - want.max(0.0)).abs() > 1e-4 {
+                    return Err(format!("relu ({i},{j})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_threaded_grams_symmetric_psd_and_match() {
+    // dims above the parallel gate so the pooled path is exercised
+    let gen = UsizeGen { lo: 130, hi: 190 };
+    check("gram-threaded", cfg(4), &gen, |&m| {
+        let mut rng = Rng::new(m as u64);
+        let g = Matrix::randn(m, 80, 1.0, &mut rng);
+        let l = gram_left(&g);
+        let r = gram_right(&g.t());
+        if l.max_abs_diff(&matmul_st(&g, &g.t())) > 1e-3 {
+            return Err("gram_left != G G^T".into());
+        }
+        if r.max_abs_diff(&l) > 1e-3 {
+            return Err("gram_right(G^T) != gram_left(G)".into());
+        }
+        for i in 0..m {
+            if l.at(i, i) < 0.0 {
+                return Err(format!("negative diagonal at {i}"));
+            }
+            for j in 0..m {
+                if l.at(i, j) != l.at(j, i) || r.at(i, j) != r.at(j, i) {
+                    return Err(format!("asymmetry at ({i},{j})"));
+                }
+            }
         }
         Ok(())
     });
