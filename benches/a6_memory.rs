@@ -43,9 +43,9 @@ fn measured_mirrors() {
     );
     let net = models::resnet18().blocked(512);
     let shapes: Vec<(usize, usize)> = net.layers.iter().map(|l| (l.m, l.n)).collect();
-    let adam_floats = build("adamw", &shapes, Hyper::default()).unwrap().state_floats();
+    let adam_floats = build("adamw".parse().unwrap(), &shapes, Hyper::default()).state_floats();
     for opt in ["sgd", "adamw", "jorge", "shampoo"] {
-        let o = build(opt, &shapes, Hyper::default()).unwrap();
+        let o = build(opt.parse().unwrap(), &shapes, Hyper::default());
         table.row(&[
             opt.into(),
             o.state_floats().to_string(),

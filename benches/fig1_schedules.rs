@@ -16,7 +16,7 @@ fn main() -> anyhow::Result<()> {
         let mut series: Vec<(String, Vec<f64>)> = Vec::new();
         for kind in [ScheduleKind::Cosine, ScheduleKind::Poly, ScheduleKind::Step] {
             let mut cfg = base_config(model);
-            cfg.optimizer = "jorge".into();
+            cfg.optimizer = "jorge".parse().unwrap();
             cfg.weight_decay *= 10.0;
             cfg.precond_every = 4;
             cfg.schedule = kind;

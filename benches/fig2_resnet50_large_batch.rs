@@ -11,12 +11,18 @@
 //! Expected shape: Jorge ~ Shampoo in epochs; in time Jorge < dist-shampoo
 //! < SGD < serial Shampoo.
 
-use jorge::benchrun::{base_config, engine, fast, run, target_for, tune_for};
+use jorge::benchrun::{
+    base_config, bench_envelope, engine, fast, json_row, run, target_for, tune_for,
+    write_bench_json,
+};
 use jorge::benchx::Table;
 use jorge::collectives::CommCostModel;
+use jorge::jsonio::Json;
 use jorge::models;
 use jorge::optim::memory::OptKind;
-use jorge::perfmodel::{project_dist_shampoo_iteration, project_iteration, GpuModel};
+use jorge::perfmodel::{
+    project_dist_shampoo_iteration, project_iteration, project_sharded_iteration, GpuModel,
+};
 
 fn main() -> anyhow::Result<()> {
     let engine = engine()?;
@@ -53,6 +59,59 @@ fn main() -> anyhow::Result<()> {
     }
     left.print();
 
+    // middle panel: MEASURED owner-computes sharding vs the serial native
+    // apply at the same worker count — the real (not projected) step-time
+    // win, plus the sharding telemetry that proves refreshes were split
+    let mut mid = Table::new(
+        &format!("Fig 2-mid (measured, {workers} workers, native apply): preconditioner sharding"),
+        &["optimizer", "s/iter serial", "s/iter sharded", "owners", "ag floats", "comm ms"],
+    );
+    let mut sharded_rows: Vec<Json> = Vec::new();
+    for opt in ["shampoo", "jorge"] {
+        let mut serial_cfg = base_config("cnn");
+        tune_for(&mut serial_cfg, opt);
+        serial_cfg.workers = workers;
+        serial_cfg.native = workers > 1; // same apply path as the sharded run
+        serial_cfg.dataset_size *= workers;
+        serial_cfg.seed = 7;
+        let serial_r = run(serial_cfg, engine.clone())?;
+
+        let sharded_name = format!("{opt}_sharded");
+        let mut cfg = base_config("cnn");
+        tune_for(&mut cfg, &sharded_name);
+        cfg.workers = workers;
+        cfg.dataset_size *= workers;
+        cfg.seed = 7;
+        let r = run(cfg, engine.clone())?;
+        assert_eq!(
+            serial_r.step_losses, r.step_losses,
+            "{sharded_name} must be bitwise identical to serial {opt}"
+        );
+        let sh = r.shard.clone().unwrap_or_default();
+        let owners = sh.owned_layers.iter().filter(|ls| !ls.is_empty()).count();
+        mid.row(&[
+            opt.to_string(),
+            format!("{:.4}", serial_r.mean_iter_s),
+            format!("{:.4}", r.mean_iter_s),
+            owners.to_string(),
+            sh.allgather_floats.to_string(),
+            format!("{:.3}", sh.modeled_comm_s * 1e3),
+        ]);
+        sharded_rows.push(json_row(
+            opt,
+            &[
+                ("serial_s_iter", serial_r.mean_iter_s),
+                ("sharded_s_iter", r.mean_iter_s),
+                ("allgather_floats", sh.allgather_floats as f64),
+                ("modeled_comm_s", sh.modeled_comm_s),
+            ],
+        ));
+    }
+    mid.print();
+    let payload = bench_envelope("fig2_sharded", Json::Arr(sharded_rows));
+    let path = write_bench_json("fig2_sharded", &payload)?;
+    println!("wrote {path}");
+
     // right panel: projected time axis at paper scale (ResNet-50, 16 A100s)
     let gpu = GpuModel::a100();
     let comm = CommCostModel::nvlink_a100();
@@ -61,6 +120,7 @@ fn main() -> anyhow::Result<()> {
     let steps_per_epoch = 1_281_167.0 / 1024.0; // ImageNet / bs 1024
     let iter_s = |opt| project_iteration(&gpu, &comm, &net, opt, 50, anchor, 16).total();
     let dist_s = project_dist_shampoo_iteration(&gpu, &comm, &net, 50, anchor, 16).total();
+    let shard_s = |opt| project_sharded_iteration(&gpu, &comm, &net, opt, 50, anchor, 16).total();
 
     let target = target_for("cnn");
     let epochs_to = |name: &str| {
@@ -80,6 +140,8 @@ fn main() -> anyhow::Result<()> {
         ("jorge", epochs_to("jorge"), iter_s(OptKind::Jorge)),
         ("shampoo (serial)", epochs_to("shampoo"), iter_s(OptKind::Shampoo)),
         ("dist-shampoo", epochs_to("shampoo"), dist_s),
+        ("shampoo_sharded", epochs_to("shampoo"), shard_s(OptKind::Shampoo)),
+        ("jorge_sharded", epochs_to("jorge"), shard_s(OptKind::Jorge)),
     ];
     for (name, epochs, it) in entries.drain(..) {
         let minutes = epochs.map(|e| e * steps_per_epoch * it / 60.0);

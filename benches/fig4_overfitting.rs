@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
         let mut results = Vec::new();
         for kind in [alt, ScheduleKind::Step] {
             let mut cfg = base_config(model);
-            cfg.optimizer = "jorge".into();
+            cfg.optimizer = "jorge".parse().unwrap();
             cfg.weight_decay *= 10.0;
             cfg.precond_every = 4;
             cfg.schedule = kind;

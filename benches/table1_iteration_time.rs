@@ -85,7 +85,7 @@ fn measured_native_times() -> Vec<Json> {
                 .iter()
                 .map(|&(m, n)| Matrix::randn(m, n, 0.1, &mut rng))
                 .collect();
-            let mut opt = build(opt_name, &shapes, Hyper::default()).unwrap();
+            let mut opt = build(opt_name.parse().unwrap(), &shapes, Hyper::default());
             // steady state: one update step then amortised skips; measure
             // the 50-step cycle mean
             let mut step_i = 0usize;

@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
 
     let cfg = TrainConfig {
         model: "transformer".into(),
-        optimizer: "jorge".into(),
+        optimizer: "jorge".parse().unwrap(),
         epochs,
         steps_per_epoch,
         lr: 0.02,

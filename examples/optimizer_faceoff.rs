@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
 
     for opt in ["sgd", "adamw", "shampoo", "jorge"] {
         let mut cfg = base.clone();
-        cfg.optimizer = opt.into();
+        cfg.optimizer = opt.parse().unwrap();
         match opt {
             "sgd" => cfg.schedule = ScheduleKind::Step,
             "adamw" => {
@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
             }
             "jorge" => {
                 cfg = TrainConfig::bootstrap_jorge_from_sgd(&base, 0.9);
-                cfg.optimizer = "jorge".into();
+                cfg.optimizer = "jorge".parse().unwrap();
                 cfg.precond_every = 4;
             }
             _ => unreachable!(),

@@ -16,7 +16,7 @@ fn main() -> anyhow::Result<()> {
     // 1. The "well-tuned SGD baseline" for the synthetic MLP benchmark.
     let mut sgd_cfg = TrainConfig {
         model: "mlp".into(),
-        optimizer: "sgd".into(),
+        optimizer: "sgd".parse().unwrap(),
         epochs: 10,
         steps_per_epoch: 40,
         lr: 0.01,

@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
     for kind in schedules {
         let cfg = TrainConfig {
             model: "segnet".into(),
-            optimizer: "jorge".into(),
+            optimizer: "jorge".parse().unwrap(),
             epochs,
             steps_per_epoch: 30,
             lr: 0.1,            // the tuned SGD lr for the seg task

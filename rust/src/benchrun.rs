@@ -137,7 +137,7 @@ pub fn base_config(model: &str) -> TrainConfig {
 /// Apply the per-optimizer hyperparameter policy (§4 + Tables 5-7).
 pub fn tune_for(cfg: &mut TrainConfig, opt: &str) {
     use crate::config::ScheduleKind;
-    cfg.optimizer = opt.into();
+    cfg.optimizer = opt.parse().expect("tune_for: unknown optimizer");
     match opt {
         "sgd" => cfg.schedule = ScheduleKind::Step,
         "adamw" => {
@@ -145,12 +145,12 @@ pub fn tune_for(cfg: &mut TrainConfig, opt: &str) {
             cfg.lr = 1e-3;
             cfg.weight_decay = 1e-2;
         }
-        "shampoo" => {
+        "shampoo" | "shampoo_sharded" => {
             // paper: same lr/wd/schedule as SGD + grafting
             cfg.schedule = ScheduleKind::Step;
             cfg.precond_every = 4;
         }
-        "jorge" => {
+        "jorge" | "jorge_sharded" => {
             // single-shot bootstrap: lr inherited (grafting), wd x10,
             // step decay at 1/3 and 2/3
             cfg.schedule = ScheduleKind::Step;

@@ -92,6 +92,73 @@ pub fn tree_all_reduce(buffers: &mut [Vec<f32>]) {
     }
 }
 
+/// Ragged ring all-gather: rank `r` contributes `chunks[r]` and every
+/// rank ends with the concatenation of all chunks in rank order (the
+/// sharded-preconditioner exchange: each owner contributes the
+/// preconditioners it refreshed). n-1 forwarding steps; at step `s`,
+/// rank `r` forwards chunk `(r + n - s) % n` — the one it received the
+/// previous step — to rank `r + 1`.
+pub fn ring_all_gather(chunks: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let n = chunks.len();
+    let mut offsets = Vec::with_capacity(n + 1);
+    let mut total = 0usize;
+    offsets.push(0);
+    for c in chunks {
+        total += c.len();
+        offsets.push(total);
+    }
+    let mut out: Vec<Vec<f32>> = (0..n).map(|_| vec![0.0; total]).collect();
+    for (r, c) in chunks.iter().enumerate() {
+        out[r][offsets[r]..offsets[r + 1]].copy_from_slice(c);
+    }
+    if n <= 1 {
+        return out;
+    }
+    for s in 0..n - 1 {
+        for r in 0..n {
+            let dst = (r + 1) % n;
+            let c = (r + n - s) % n;
+            let (lo, hi) = (offsets[c], offsets[c + 1]);
+            if lo >= hi {
+                continue;
+            }
+            let (a, b) = two_mut(&mut out, r, dst);
+            b[lo..hi].copy_from_slice(&a[lo..hi]);
+        }
+    }
+    out
+}
+
+/// Binomial-tree broadcast from `root`: after ceil(log2 n) rounds every
+/// buffer equals `buffers[root]`.
+pub fn tree_broadcast(buffers: &mut [Vec<f32>], root: usize) {
+    let n = buffers.len();
+    if n <= 1 {
+        return;
+    }
+    assert!(root < n, "broadcast root {root} out of range");
+    let len = buffers[root].len();
+    for b in buffers.iter() {
+        assert_eq!(b.len(), len, "ragged broadcast buffers");
+    }
+    // relabel so the root is virtual rank 0, then the standard doubling
+    // schedule: each round, ranks < stride send to rank + stride
+    let mut stride = 1;
+    while stride < n {
+        for q in 0..stride {
+            let p = q + stride;
+            if p >= n {
+                break;
+            }
+            let src = (q + root) % n;
+            let dst = (p + root) % n;
+            let (a, b) = two_mut(buffers, src, dst);
+            b.copy_from_slice(a);
+        }
+        stride *= 2;
+    }
+}
+
 /// Average instead of sum (DDP gradient semantics).
 pub fn ring_all_reduce_mean(buffers: &mut [Vec<f32>]) {
     let n = buffers.len() as f32;
@@ -151,8 +218,30 @@ impl CommCostModel {
         if n <= 1 {
             return 0.0;
         }
-        (n - 1) as f64 * self.alpha
-            + ((n - 1) as f64 / n as f64) * bytes as f64 / self.beta
+        (n - 1) as f64 * self.alpha + ((n - 1) as f64 / n as f64) * bytes as f64 / self.beta
+    }
+
+    /// Ragged ring all-gather ([`ring_all_gather`]): n-1 forwarding
+    /// steps, each paced by the largest chunk on the wire. For uniform
+    /// chunks this reduces exactly to [`all_gather_time`](Self::all_gather_time)
+    /// of the total payload.
+    pub fn all_gather_ragged_time(&self, chunk_bytes: &[usize]) -> f64 {
+        let n = chunk_bytes.len();
+        if n <= 1 {
+            return 0.0;
+        }
+        let max_chunk = chunk_bytes.iter().copied().max().unwrap_or(0);
+        (n - 1) as f64 * (self.alpha + max_chunk as f64 / self.beta)
+    }
+
+    /// Binomial-tree broadcast ([`tree_broadcast`]): ceil(log2 n) rounds
+    /// of the full payload.
+    pub fn broadcast_time(&self, bytes: usize, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let rounds = ((n - 1).ilog2() + 1) as f64;
+        rounds * (self.alpha + bytes as f64 / self.beta)
     }
 
     /// Point-to-point send.
@@ -233,6 +322,71 @@ mod tests {
     fn empty_buffers_ok() {
         let mut bufs = vec![vec![], vec![]];
         ring_all_reduce(&mut bufs);
+    }
+
+    #[test]
+    fn all_gather_assembles_ragged_chunks() {
+        // varied chunk sizes, including an empty contribution
+        for &n in &[2usize, 3, 4, 7] {
+            let mut rng = Rng::new(40 + n as u64);
+            let chunks: Vec<Vec<f32>> = (0..n)
+                .map(|r| {
+                    let len = if r == 1 { 0 } else { 3 * r + 1 };
+                    (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+                })
+                .collect();
+            let want: Vec<f32> = chunks.iter().flatten().copied().collect();
+            let out = ring_all_gather(&chunks);
+            assert_eq!(out.len(), n);
+            for (r, b) in out.iter().enumerate() {
+                assert_eq!(b, &want, "n={n} rank={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_single_rank_returns_own_chunk() {
+        let out = ring_all_gather(&[vec![1.0, 2.0, 3.0]]);
+        assert_eq!(out, vec![vec![1.0, 2.0, 3.0]]);
+        assert!(ring_all_gather(&[]).is_empty());
+    }
+
+    #[test]
+    fn all_gather_cost_accounting() {
+        let m = CommCostModel::nvlink_a100();
+        // uniform ragged chunks cost exactly the uniform all-gather
+        for &n in &[2usize, 3, 4, 7] {
+            let b = 1 << 20;
+            let ragged = m.all_gather_ragged_time(&vec![b; n]);
+            let uniform = m.all_gather_time(n * b, n);
+            assert!((ragged - uniform).abs() < 1e-12 * uniform, "n={n}: {ragged} vs {uniform}");
+        }
+        // the largest chunk paces every step
+        let skewed = m.all_gather_ragged_time(&[1 << 20, 8 << 20, 1 << 20]);
+        let flat = m.all_gather_ragged_time(&[8 << 20, 8 << 20, 8 << 20]);
+        assert_eq!(skewed, flat);
+        // degenerate cases are free
+        assert_eq!(m.all_gather_ragged_time(&[1 << 20]), 0.0);
+        assert_eq!(m.all_gather_ragged_time(&[]), 0.0);
+        // broadcast: log2 rounds
+        let b1 = m.broadcast_time(1 << 20, 2);
+        let b2 = m.broadcast_time(1 << 20, 8);
+        assert!((b2 - 3.0 * b1).abs() < 1e-12, "{b1} {b2}");
+        assert_eq!(m.broadcast_time(1 << 20, 1), 0.0);
+    }
+
+    #[test]
+    fn broadcast_from_any_root() {
+        for &n in &[2usize, 3, 5, 8] {
+            for root in [0, n - 1, n / 2] {
+                let mut bufs: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; 6]).collect();
+                let want = bufs[root].clone();
+                tree_broadcast(&mut bufs, root);
+                for (r, b) in bufs.iter().enumerate() {
+                    assert_eq!(b, &want, "n={n} root={root} rank={r}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! with strings, ints, floats, bools and flat arrays, plus `#` comments.
 //! CLI flags (see `cli.rs`) override file values via `set_override`.
 
+use crate::optim::OptimizerKind;
 use std::collections::BTreeMap;
 
 #[derive(Clone, Debug, PartialEq)]
@@ -230,12 +231,44 @@ impl ScheduleKind {
     }
 }
 
+/// Owner-assignment policy for sharded preconditioner refreshes
+/// (`shampoo_sharded` / `jorge_sharded`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// Greedy longest-processing-time over per-layer refresh FLOPs —
+    /// deterministic and balanced (default).
+    #[default]
+    Flops,
+    /// Deal preconditioned layers round-robin in layer order.
+    RoundRobin,
+}
+
+impl ShardPolicy {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "flops" => Ok(Self::Flops),
+            "round_robin" => Ok(Self::RoundRobin),
+            other => Err(format!(
+                "unknown shard policy {other:?} (choose flops | round_robin)"
+            )),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Flops => "flops",
+            Self::RoundRobin => "round_robin",
+        }
+    }
+}
+
 /// Everything a training run needs. Defaults follow §4's single-shot
 /// bootstrapping rules applied to the synthetic benchmarks.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
     pub model: String,
-    pub optimizer: String,
+    pub optimizer: OptimizerKind,
+    /// Owner assignment for sharded optimizers; ignored otherwise.
+    pub shard_policy: ShardPolicy,
     pub epochs: usize,
     pub steps_per_epoch: usize,
     pub lr: f64,
@@ -268,7 +301,8 @@ impl Default for TrainConfig {
     fn default() -> Self {
         TrainConfig {
             model: "mlp".into(),
-            optimizer: "jorge".into(),
+            optimizer: OptimizerKind::JORGE,
+            shard_policy: ShardPolicy::Flops,
             epochs: 12,
             steps_per_epoch: 50,
             lr: 0.1,
@@ -303,9 +337,14 @@ impl TrainConfig {
                 .collect::<Result<Vec<_>, _>>()?,
             _ => d.decay_at.clone(),
         };
+        let optimizer =
+            t.str_or("train.optimizer", &d.optimizer.to_string()).parse::<OptimizerKind>()?;
+        let shard_policy =
+            ShardPolicy::parse(&t.str_or("train.shard_policy", d.shard_policy.name()))?;
         let cfg = TrainConfig {
             model: t.str_or("train.model", &d.model),
-            optimizer: t.str_or("train.optimizer", &d.optimizer),
+            optimizer,
+            shard_policy,
             epochs: t.usize_or("train.epochs", d.epochs),
             steps_per_epoch: t.usize_or("train.steps_per_epoch", d.steps_per_epoch),
             lr: t.f64_or("train.lr", d.lr),
@@ -332,12 +371,8 @@ impl TrainConfig {
 
     pub fn validate(&self) -> Result<(), String> {
         const MODELS: &[&str] = &["mlp", "cnn", "segnet", "transformer"];
-        const OPTS: &[&str] = &["sgd", "adamw", "shampoo", "jorge", "shampoo_sharded"];
         if !MODELS.contains(&self.model.as_str()) {
             return Err(format!("unknown model {:?} (choose {MODELS:?})", self.model));
-        }
-        if !OPTS.contains(&self.optimizer.as_str()) {
-            return Err(format!("unknown optimizer {:?} (choose {OPTS:?})", self.optimizer));
         }
         let backends = crate::runtime::backend::BACKEND_CHOICES;
         if !backends.contains(&self.backend.as_str()) {
@@ -360,6 +395,21 @@ impl TrainConfig {
                 return Err("decay_at fractions must be in [0,1]".into());
             }
         }
+        // Combinations the coordinator would silently ignore are errors;
+        // the one documented downgrade (sharded optimizer, workers == 1)
+        // is allowed and logged by the trainer instead.
+        if self.native && self.workers == 1 {
+            return Err("native = true has no effect with workers = 1 (the single-worker \
+                 path already runs the fused native step); drop it or set workers > 1"
+                .into());
+        }
+        if self.shard_policy != ShardPolicy::Flops && !self.optimizer.sharded {
+            return Err(format!(
+                "shard_policy = {} only applies to sharded optimizers ({} is not sharded)",
+                self.shard_policy.name(),
+                self.optimizer
+            ));
+        }
         Ok(())
     }
 
@@ -368,7 +418,7 @@ impl TrainConfig {
     /// schedule forced to step decay at 1/3 and 2/3 of the budget.
     pub fn bootstrap_jorge_from_sgd(sgd: &TrainConfig, sgd_momentum: f64) -> TrainConfig {
         let mut j = sgd.clone();
-        j.optimizer = "jorge".into();
+        j.optimizer = OptimizerKind::JORGE;
         j.weight_decay = sgd.weight_decay / (1.0 - sgd_momentum);
         j.schedule = ScheduleKind::Step;
         j.decay_at = vec![1.0 / 3.0, 2.0 / 3.0];
@@ -418,10 +468,21 @@ artifacts = "artifacts"
         let t = Toml::parse(SAMPLE).unwrap();
         let c = TrainConfig::from_toml(&t).unwrap();
         assert_eq!(c.model, "cnn");
-        assert_eq!(c.optimizer, "jorge");
+        assert_eq!(c.optimizer, OptimizerKind::JORGE);
         assert_eq!(c.workers, 4);
         assert_eq!(c.precond_every, 4);
         assert_eq!(c.schedule, ScheduleKind::Step);
+        assert_eq!(c.shard_policy, ShardPolicy::Flops);
+    }
+
+    #[test]
+    fn sharded_optimizers_parse_from_toml() {
+        let mut t = Toml::parse(SAMPLE).unwrap();
+        t.set_override("train.optimizer", "jorge_sharded").unwrap();
+        t.set_override("train.shard_policy", "round_robin").unwrap();
+        let c = TrainConfig::from_toml(&t).unwrap();
+        assert_eq!(c.optimizer, OptimizerKind::JORGE_SHARDED);
+        assert_eq!(c.shard_policy, ShardPolicy::RoundRobin);
     }
 
     #[test]
@@ -453,6 +514,40 @@ artifacts = "artifacts"
         let mut t3 = Toml::parse(SAMPLE).unwrap();
         t3.set_override("train.workers", "100").unwrap();
         assert!(TrainConfig::from_toml(&t3).is_err());
+
+        // first-order optimizers cannot shard preconditioner work
+        let mut t4 = Toml::parse(SAMPLE).unwrap();
+        t4.set_override("train.optimizer", "sgd_sharded").unwrap();
+        assert!(TrainConfig::from_toml(&t4).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_silently_ignored_combinations() {
+        // native = true is a no-op at workers = 1 — reject, don't ignore
+        let mut t = Toml::parse(SAMPLE).unwrap();
+        t.set_override("train.native", "true").unwrap();
+        t.set_override("train.workers", "1").unwrap();
+        let err = TrainConfig::from_toml(&t).unwrap_err();
+        assert!(err.contains("native"), "{err}");
+
+        // ...but it is meaningful with workers > 1
+        let mut t2 = Toml::parse(SAMPLE).unwrap();
+        t2.set_override("train.native", "true").unwrap();
+        assert!(TrainConfig::from_toml(&t2).is_ok());
+
+        // a non-default shard policy without a sharded optimizer would be
+        // silently ignored — reject
+        let mut t3 = Toml::parse(SAMPLE).unwrap();
+        t3.set_override("train.shard_policy", "round_robin").unwrap();
+        let err = TrainConfig::from_toml(&t3).unwrap_err();
+        assert!(err.contains("shard_policy"), "{err}");
+
+        // sharded optimizer at workers = 1 stays valid (trainer downgrades
+        // with a logged note)
+        let mut t4 = Toml::parse(SAMPLE).unwrap();
+        t4.set_override("train.optimizer", "shampoo_sharded").unwrap();
+        t4.set_override("train.workers", "1").unwrap();
+        assert!(TrainConfig::from_toml(&t4).is_ok());
     }
 
     #[test]
@@ -472,11 +567,11 @@ artifacts = "artifacts"
     #[test]
     fn bootstrap_rule_matches_paper() {
         let mut sgd = TrainConfig::default();
-        sgd.optimizer = "sgd".into();
+        sgd.optimizer = OptimizerKind::SGD;
         sgd.weight_decay = 1e-4;
         sgd.schedule = ScheduleKind::Cosine;
         let j = TrainConfig::bootstrap_jorge_from_sgd(&sgd, 0.9);
-        assert_eq!(j.optimizer, "jorge");
+        assert_eq!(j.optimizer, OptimizerKind::JORGE);
         assert!((j.weight_decay - 1e-3).abs() < 1e-12); // 10x
         assert_eq!(j.schedule, ScheduleKind::Step);
         assert_eq!(j.lr, sgd.lr); // grafting carries SGD's lr

@@ -4,4 +4,4 @@
 pub mod checkpoint;
 pub mod trainer;
 
-pub use trainer::{EpochRecord, RunResult, Trainer};
+pub use trainer::{assign_owners, EpochRecord, RunResult, ShardReport, Trainer};

@@ -12,12 +12,22 @@
 //!   ring all-reduce over shared memory, and the leader applies the
 //!   optimizer via the `apply_*` executable (or the native mirror with
 //!   `--native`).
+//!
+//! The **sharded** variants (`shampoo_sharded` / `jorge_sharded`) extend
+//! the data-parallel mode with owner-computes preconditioner sharding
+//! (dist-Shampoo, Anil et al. 2020): after the gradient all-reduce, each
+//! worker refreshes only the preconditioners of the layers it owns
+//! (assignment balanced by refresh FLOPs, see [`assign_owners`]), the
+//! refreshed preconditioners are all-gathered through `collectives`, and
+//! every worker applies the identical update. Refresh + all-gather +
+//! apply runs the same per-layer float ops as the serial fused step, so
+//! trajectories are bitwise identical at any worker count.
 
-use crate::collectives::ring_all_reduce_mean;
-use crate::config::TrainConfig;
+use crate::collectives::{ring_all_gather, ring_all_reduce_mean, CommCostModel};
+use crate::config::{ShardPolicy, TrainConfig};
 use crate::data::{for_model, Dataset, Sharder};
 use crate::metricsio::{CsvWriter, Stopwatch, Summary};
-use crate::optim::{self, Hyper, Optimizer, Schedule, StepCtx};
+use crate::optim::{self, Hyper, Optimizer, OptimizerKind, Schedule, StepCtx};
 use crate::rngx::Rng;
 use crate::runtime::{Dtype, ExecBackend, ExecStep, HostTensor, Manifest, Role};
 use crate::tensor::Matrix;
@@ -50,6 +60,81 @@ pub struct RunResult {
     pub mean_iter_s: f64,
     pub final_val_metric: f64,
     pub best_val_metric: f64,
+    /// Sharding telemetry; `None` for serial optimizers.
+    pub shard: Option<ShardReport>,
+}
+
+/// What the sharded step path actually did, for benches and tests:
+/// which layers each worker owned, how many refreshes it ran, and the
+/// all-gather traffic charged to the comm cost model.
+#[derive(Clone, Debug, Default)]
+pub struct ShardReport {
+    pub workers: usize,
+    /// Layer indices owned by each worker (preconditioned layers only).
+    pub owned_layers: Vec<Vec<usize>>,
+    /// Per-worker count of preconditioner refreshes performed.
+    pub refresh_events: Vec<usize>,
+    /// Number of preconditioner all-gathers (one per update step).
+    pub allgather_calls: usize,
+    /// Total floats moved through preconditioner all-gathers.
+    pub allgather_floats: usize,
+    /// A100 cost-model time for that all-gather traffic.
+    pub modeled_comm_s: f64,
+}
+
+/// Deterministic owner-computes assignment: `costs[l]` is the refresh
+/// cost of layer `l` (0 = no preconditioner, stays unowned). `Flops`
+/// runs greedy longest-processing-time: heaviest layer first onto the
+/// least-loaded worker, ties broken by lower layer index then lower
+/// worker id — deterministic for a fixed inventory, independent of step
+/// order or thread scheduling.
+pub fn assign_owners(costs: &[f64], workers: usize, policy: ShardPolicy) -> Vec<Option<usize>> {
+    let workers = workers.max(1);
+    let mut owner = vec![None; costs.len()];
+    match policy {
+        ShardPolicy::RoundRobin => {
+            let mut next = 0usize;
+            for (li, &c) in costs.iter().enumerate() {
+                if c > 0.0 {
+                    owner[li] = Some(next % workers);
+                    next += 1;
+                }
+            }
+        }
+        ShardPolicy::Flops => {
+            let mut order: Vec<usize> = (0..costs.len()).filter(|&i| costs[i] > 0.0).collect();
+            order.sort_by(|&a, &b| {
+                costs[b]
+                    .partial_cmp(&costs[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            let mut load = vec![0.0f64; workers];
+            for li in order {
+                let w = (0..workers)
+                    .min_by(|&a, &b| {
+                        load[a]
+                            .partial_cmp(&load[b])
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(a.cmp(&b))
+                    })
+                    .unwrap();
+                owner[li] = Some(w);
+                load[w] += costs[li];
+            }
+        }
+    }
+    owner
+}
+
+/// Live sharding bookkeeping (telemetry mirrors [`ShardReport`]).
+struct ShardState {
+    owned: Vec<Vec<usize>>,
+    refresh_layer_events: Vec<usize>,
+    allgather_calls: usize,
+    allgather_floats: usize,
+    modeled_comm_s: f64,
+    comm: CommCostModel,
 }
 
 impl RunResult {
@@ -76,6 +161,17 @@ impl RunResult {
 
 const EVAL_BATCHES: usize = 4;
 
+/// 2-D collapse of host tensors for the native optimizer mirrors.
+fn to_matrices(tensors: &[HostTensor]) -> Vec<Matrix> {
+    tensors
+        .iter()
+        .map(|t| {
+            let sh = t.shape();
+            Matrix::from_vec(sh[0], sh.get(1).copied().unwrap_or(1), t.as_f32().unwrap().to_vec())
+        })
+        .collect()
+}
+
 pub struct Trainer {
     pub cfg: TrainConfig,
     engine: Arc<dyn ExecBackend>,
@@ -92,6 +188,10 @@ pub struct Trainer {
     pub params: Vec<HostTensor>,
     pub opt_state: Vec<HostTensor>,
     native_opt: Option<Box<dyn Optimizer>>,
+    /// Effective optimizer kind: `cfg.optimizer`, downgraded to its
+    /// serial base when there is a single worker (nothing to shard).
+    kind: OptimizerKind,
+    shard: Option<ShardState>,
     n_params: usize,
     global_step: usize,
 }
@@ -99,21 +199,27 @@ pub struct Trainer {
 impl Trainer {
     pub fn new(cfg: TrainConfig, engine: Arc<dyn ExecBackend>) -> Result<Trainer> {
         cfg.validate().map_err(|e| anyhow!(e))?;
-        // dist-shampoo shares shampoo's math; sharding only changes the
-        // projected wall-clock (perfmodel), not the trajectory.
-        let opt = if cfg.optimizer == "shampoo_sharded" { "shampoo" } else { &cfg.optimizer };
-        let has_skip = matches!(opt, "shampoo" | "jorge");
+        let mut kind = cfg.optimizer;
+        if kind.sharded && cfg.workers == 1 {
+            eprintln!(
+                "[trainer] note: {kind} with workers = 1 has nothing to shard; \
+                 running the serial {} path",
+                kind.serial()
+            );
+            kind = kind.serial();
+        }
+        let has_skip = kind.has_skip();
 
-        let train_full = engine.load(&Manifest::train_name(&cfg.model, opt, true))?;
+        let train_full = engine.load(&Manifest::train_name(&cfg.model, kind, true))?;
         let train_skip = if has_skip {
-            Some(engine.load(&Manifest::train_name(&cfg.model, opt, false))?)
+            Some(engine.load(&Manifest::train_name(&cfg.model, kind, false))?)
         } else {
             None
         };
         let grad = engine.load(&format!("grad_{}", cfg.model))?;
-        let apply_full = engine.load(&Manifest::apply_name(&cfg.model, opt, true))?;
+        let apply_full = engine.load(&Manifest::apply_name(&cfg.model, kind, true))?;
         let apply_skip = if has_skip {
-            Some(engine.load(&Manifest::apply_name(&cfg.model, opt, false))?)
+            Some(engine.load(&Manifest::apply_name(&cfg.model, kind, false))?)
         } else {
             None
         };
@@ -134,7 +240,9 @@ impl Trainer {
         }
         let n_params = params.len();
 
-        let native_opt = if cfg.native {
+        // the sharded path splits refresh from apply, which the fused
+        // apply artifacts cannot do — it always drives the native mirror
+        let native_opt = if cfg.native || kind.sharded {
             let shapes: Vec<(usize, usize)> = train_full
                 .spec()
                 .inputs
@@ -142,7 +250,30 @@ impl Trainer {
                 .filter(|s| s.role == Role::Param)
                 .map(|s| (s.shape[0], s.shape.get(1).copied().unwrap_or(1)))
                 .collect();
-            Some(optim::build(opt, &shapes, Hyper::default()).map_err(|e| anyhow!(e))?)
+            Some(optim::build(kind, &shapes, Hyper::default()))
+        } else {
+            None
+        };
+
+        let shard = if kind.sharded {
+            let native = native_opt.as_ref().unwrap();
+            let costs: Vec<f64> =
+                (0..native.n_layers()).map(|l| native.refresh_flops(l)).collect();
+            let owner = assign_owners(&costs, cfg.workers, cfg.shard_policy);
+            let mut owned = vec![Vec::new(); cfg.workers];
+            for (li, o) in owner.iter().enumerate() {
+                if let Some(w) = *o {
+                    owned[w].push(li);
+                }
+            }
+            Some(ShardState {
+                owned,
+                refresh_layer_events: vec![0; cfg.workers],
+                allgather_calls: 0,
+                allgather_floats: 0,
+                modeled_comm_s: 0.0,
+                comm: CommCostModel::nvlink_a100(),
+            })
         } else {
             None
         };
@@ -174,8 +305,22 @@ impl Trainer {
             params,
             opt_state,
             native_opt,
+            kind,
+            shard,
             n_params,
             global_step: 0,
+        })
+    }
+
+    /// Sharding telemetry for this trainer (`None` for serial kinds).
+    pub fn shard_report(&self) -> Option<ShardReport> {
+        self.shard.as_ref().map(|s| ShardReport {
+            workers: self.cfg.workers,
+            owned_layers: s.owned.clone(),
+            refresh_events: s.refresh_layer_events.clone(),
+            allgather_calls: s.allgather_calls,
+            allgather_floats: s.allgather_floats,
+            modeled_comm_s: s.modeled_comm_s,
         })
     }
 
@@ -287,29 +432,72 @@ impl Trainer {
             off += n;
         }
 
-        self.apply_reduced(reduced, lr)?;
+        if self.shard.is_some() {
+            self.sharded_apply(reduced, lr)?;
+        } else {
+            self.apply_reduced(reduced, lr)?;
+        }
         Ok((loss_sum / workers as f64, metric_sum / workers as f64))
+    }
+
+    /// Sharded optimizer application (owner-computes): every worker
+    /// refreshes only the layers it owns, the refreshed preconditioners
+    /// travel a real ring all-gather, then the update is applied with
+    /// the gathered state. The per-layer float ops equal the serial
+    /// fused step's exactly, so the trajectory is bitwise identical.
+    fn sharded_apply(&mut self, grads: Vec<HostTensor>, lr: f64) -> Result<()> {
+        let update = self.precond_update_now();
+        let wd = self.cfg.weight_decay as f32;
+        let native = self.native_opt.as_mut().expect("sharded mode forces the native mirror");
+        let shard = self.shard.as_mut().expect("sharded_apply without shard state");
+
+        let mut mats = to_matrices(&self.params);
+        let gmats = to_matrices(&grads);
+
+        // owner-computes refresh; Shampoo also advances its stat EMAs
+        // here on skip steps, so this runs every step
+        for w in 0..shard.owned.len() {
+            native.refresh_layers(&shard.owned[w], &gmats, update);
+            if update {
+                shard.refresh_layer_events[w] += shard.owned[w].len();
+            }
+        }
+
+        if update {
+            // owner w contributes the preconditioners it refreshed
+            let chunks: Vec<Vec<f32>> =
+                shard.owned.iter().map(|ls| native.export_preconditioners(ls)).collect();
+            let chunk_bytes: Vec<usize> = chunks.iter().map(|c| 4 * c.len()).collect();
+            let gathered = ring_all_gather(&chunks);
+            shard.allgather_calls += 1;
+            shard.allgather_floats += gathered.last().map_or(0, |b| b.len());
+            shard.modeled_comm_s += shard.comm.all_gather_ragged_time(&chunk_bytes);
+            // continue from the last rank's assembled buffer, so the
+            // state the run depends on has genuinely been around the ring
+            if let Some(buf) = gathered.last() {
+                let order: Vec<usize> = shard.owned.concat();
+                let used = native.import_preconditioners(&order, buf);
+                debug_assert_eq!(used, buf.len(), "all-gather payload mismatch");
+            }
+        }
+
+        native.apply_update(
+            &mut mats,
+            &gmats,
+            StepCtx { lr: lr as f32, weight_decay: wd, update_precond: false },
+        );
+        for (p, m) in self.params.iter_mut().zip(mats) {
+            *p.as_f32_mut().unwrap() = m.data;
+        }
+        Ok(())
     }
 
     fn apply_reduced(&mut self, grads: Vec<HostTensor>, lr: f64) -> Result<()> {
         let update = self.precond_update_now();
         if let Some(native) = &mut self.native_opt {
             // native mirror path
-            let mut mats: Vec<Matrix> = self
-                .params
-                .iter()
-                .map(|p| {
-                    let sh = p.shape();
-                    Matrix::from_vec(sh[0], sh.get(1).copied().unwrap_or(1), p.as_f32().unwrap().to_vec())
-                })
-                .collect();
-            let gmats: Vec<Matrix> = grads
-                .iter()
-                .map(|g| {
-                    let sh = g.shape();
-                    Matrix::from_vec(sh[0], sh.get(1).copied().unwrap_or(1), g.as_f32().unwrap().to_vec())
-                })
-                .collect();
+            let mut mats = to_matrices(&self.params);
+            let gmats = to_matrices(&grads);
             native.step(
                 &mut mats,
                 &gmats,
@@ -372,7 +560,7 @@ impl Trainer {
 
         let mut result = RunResult {
             model: self.cfg.model.clone(),
-            optimizer: self.cfg.optimizer.clone(),
+            optimizer: self.kind.to_string(),
             ..Default::default()
         };
         let sw = Stopwatch::new();
@@ -432,7 +620,7 @@ impl Trainer {
             if epoch % self.cfg.eval_every_epochs == 0 || epoch + 1 == self.cfg.epochs {
                 eprintln!(
                     "[{} {}] epoch {epoch:>3} lr {:.4} loss {:.4} val {:.4} ({:.1}s)",
-                    self.cfg.model, self.cfg.optimizer, rec.lr, rec.train_loss, rec.val_metric, rec.wall_s
+                    self.cfg.model, self.kind, rec.lr, rec.train_loss, rec.val_metric, rec.wall_s
                 );
             }
             result.best_val_metric = result.best_val_metric.max(val_metric);
@@ -450,6 +638,7 @@ impl Trainer {
         result.total_time_s = sw.total();
         result.mean_iter_s = iter_times.mean();
         result.final_val_metric = result.epochs.last().map(|e| e.val_metric).unwrap_or(0.0);
+        result.shard = self.shard_report();
         Ok(result)
     }
 

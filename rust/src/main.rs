@@ -7,23 +7,29 @@
 //!   perf-model     print projected A100 iteration times (Table 1 scale)
 //!   memory-report  optimizer state accounting (App. A.6)
 //!   inspect        list artifacts in the manifest
+//!   bench-diff     compare two BENCH_*.json files (CI perf drift check)
 
 use anyhow::{anyhow, Result};
 use jorge::benchx::Table;
 use jorge::cli::{flag, switch, Args, FlagSpec};
 use jorge::collectives::CommCostModel;
-use jorge::config::{Toml, TrainConfig};
+use jorge::config::{ShardPolicy, Toml, TrainConfig};
 use jorge::coordinator::Trainer;
+use jorge::jsonio::Json;
 use jorge::models;
 use jorge::optim::memory::{ratio_vs_adam, state_bytes, OptKind};
-use jorge::perfmodel::{project_dist_shampoo_iteration, project_iteration, GpuModel};
+use jorge::perfmodel::{
+    project_dist_shampoo_iteration, project_iteration, project_sharded_iteration, GpuModel,
+};
 use jorge::runtime::backend_for;
+use std::collections::BTreeMap;
 
 fn flag_spec() -> Vec<FlagSpec> {
     vec![
         flag("config", "path to a TOML run config"),
         flag("model", "mlp | cnn | segnet | transformer"),
-        flag("optimizer", "sgd | adamw | shampoo | jorge"),
+        flag("optimizer", "sgd | adamw | shampoo | jorge | shampoo_sharded | jorge_sharded"),
+        flag("shard-policy", "flops | round_robin (owner assignment, sharded optimizers)"),
         flag("epochs", "training epochs"),
         flag("steps-per-epoch", "steps per epoch"),
         flag("lr", "base learning rate"),
@@ -39,7 +45,9 @@ fn flag_spec() -> Vec<FlagSpec> {
         flag("out", "output directory for CSV metrics"),
         flag("checkpoint", "checkpoint path to save (train) / load (eval)"),
         flag("max-steps", "hard cap on optimizer steps"),
+        flag("tolerance", "bench-diff: relative drift threshold (default 0.15)"),
         switch("native", "apply optimizer via native mirrors (workers > 1)"),
+        switch("strict", "bench-diff: exit nonzero on drift instead of warning"),
         switch("help", "print help"),
     ]
 }
@@ -51,6 +59,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("perf-model", "projected A100 iteration times (Table 1 scale)"),
     ("memory-report", "optimizer state accounting (App. A.6)"),
     ("inspect", "list artifacts in the manifest"),
+    ("bench-diff", "compare two BENCH_*.json files (warn-only perf drift)"),
 ];
 
 fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<()> {
@@ -58,7 +67,10 @@ fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<()> {
         cfg.model = v.into();
     }
     if let Some(v) = args.get("optimizer") {
-        cfg.optimizer = v.into();
+        cfg.optimizer = v.parse().map_err(|e: String| anyhow!(e))?;
+    }
+    if let Some(v) = args.get("shard-policy") {
+        cfg.shard_policy = ShardPolicy::parse(v).map_err(|e| anyhow!(e))?;
     }
     if let Some(v) = args.get_usize("epochs").map_err(|e| anyhow!(e))? {
         cfg.epochs = v;
@@ -152,6 +164,23 @@ fn cmd_train(args: &Args) -> Result<()> {
         result.total_time_s,
         result.epochs_to_target,
     );
+    if let Some(sh) = &result.shard {
+        let owners: Vec<String> = sh
+            .owned_layers
+            .iter()
+            .enumerate()
+            .map(|(w, ls)| format!("w{w}:{ls:?}"))
+            .collect();
+        println!(
+            "shard: workers={} owners=[{}] refreshes={:?} allgathers={} floats={} modeled_comm={:.3}ms",
+            sh.workers,
+            owners.join(" "),
+            sh.refresh_events,
+            sh.allgather_calls,
+            sh.allgather_floats,
+            sh.modeled_comm_s * 1e3,
+        );
+    }
     Ok(())
 }
 
@@ -190,7 +219,7 @@ fn cmd_bench_iter(_args: &Args) -> Result<()> {
                 .iter()
                 .map(|&(m, n)| Matrix::randn(m, n, 0.1, &mut rng))
                 .collect();
-            let mut opt = build(opt_name, &shapes, Hyper::default()).unwrap();
+            let mut opt = build(opt_name.parse().unwrap(), &shapes, Hyper::default());
             let mut step_i = 0usize;
             let r = jorge::benchx::bench_n(opt_name, 3, || {
                 let ctx = StepCtx {
@@ -241,6 +270,16 @@ fn cmd_perf_model(_args: &Args) -> Result<()> {
             format!("{dist:.3}"),
             format!("{:.2}x", dist / sgd),
         ]);
+        for opt in [OptKind::Shampoo, OptKind::Jorge] {
+            let t = project_sharded_iteration(&gpu, &comm, &net, opt, 50, anchor, gpus).total();
+            table.row(&[
+                net_name.into(),
+                gpus.to_string(),
+                format!("{}_sharded", opt.name()),
+                format!("{t:.3}"),
+                format!("{:.2}x", t / sgd),
+            ]);
+        }
     }
     table.print();
     Ok(())
@@ -268,6 +307,77 @@ fn cmd_memory_report(_args: &Args) -> Result<()> {
         }
     }
     table.print();
+    Ok(())
+}
+
+/// Collect every numeric leaf as (path, value). Array elements are keyed
+/// by their `"name"` field when present (the `json_row` convention), so
+/// row reordering between runs doesn't produce false drift.
+fn flatten_nums(j: &Json, prefix: &str, out: &mut Vec<(String, f64)>) {
+    match j {
+        Json::Num(n) => out.push((prefix.to_string(), *n)),
+        Json::Arr(a) => {
+            for (i, v) in a.iter().enumerate() {
+                let key = v
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .map(String::from)
+                    .unwrap_or_else(|| i.to_string());
+                flatten_nums(v, &format!("{prefix}/{key}"), out);
+            }
+        }
+        Json::Obj(m) => {
+            for (k, v) in m {
+                flatten_nums(v, &format!("{prefix}/{k}"), out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Diff two `BENCH_*.json` files metric-by-metric. Perf on shared CI
+/// runners is noisy and not every metric improves downward, so this is
+/// advisory: drift beyond the tolerance prints GitHub `::warning::`
+/// annotations and the command still exits 0 (unless `--strict`).
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    let (base_path, cur_path) = match args.positional.as_slice() {
+        [b, c] => (b, c),
+        _ => return Err(anyhow!("usage: jorge bench-diff <baseline.json> <current.json>")),
+    };
+    let tol = args.get_f64("tolerance").map_err(|e| anyhow!(e))?.unwrap_or(0.15);
+    let base = Json::parse(&std::fs::read_to_string(base_path)?).map_err(|e| anyhow!(e))?;
+    let cur = Json::parse(&std::fs::read_to_string(cur_path)?).map_err(|e| anyhow!(e))?;
+    let mut base_leaves = Vec::new();
+    let mut cur_leaves = Vec::new();
+    flatten_nums(&base, "", &mut base_leaves);
+    flatten_nums(&cur, "", &mut cur_leaves);
+    let baseline: BTreeMap<String, f64> = base_leaves.into_iter().collect();
+
+    let mut compared = 0usize;
+    let mut drifted = 0usize;
+    for (key, now) in &cur_leaves {
+        let Some(&then) = baseline.get(key) else { continue };
+        compared += 1;
+        if then.abs() < 1e-12 {
+            continue;
+        }
+        let rel = (now - then) / then.abs();
+        if rel.abs() > tol {
+            drifted += 1;
+            println!(
+                "::warning::bench drift {key}: {then:.6} -> {now:.6} ({:+.1}%)",
+                rel * 100.0
+            );
+        }
+    }
+    println!(
+        "bench-diff: {compared} comparable metrics, {drifted} drifted beyond ±{:.0}% \
+         ({base_path} vs {cur_path})",
+        tol * 100.0
+    );
+    if drifted > 0 && args.has("strict") {
+        return Err(anyhow!("{drifted} metrics drifted beyond tolerance (--strict)"));
+    }
     Ok(())
 }
 
@@ -313,6 +423,7 @@ fn main() {
         "perf-model" => cmd_perf_model(&args),
         "memory-report" => cmd_memory_report(&args),
         "inspect" => cmd_inspect(&args),
+        "bench-diff" => cmd_bench_diff(&args),
         other => Err(anyhow!("unknown subcommand {other:?} (try --help)")),
     };
     if let Err(e) = result {

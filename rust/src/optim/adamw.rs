@@ -1,10 +1,10 @@
 //! AdamW with decoupled weight decay (mirrors `optim_jax.make_adamw`).
 
-use super::{Hyper, Optimizer, StepCtx};
+use super::{AdamWParams, Hyper, Optimizer, StepCtx};
 use crate::tensor::Matrix;
 
 pub struct AdamW {
-    hyper: Hyper,
+    p: AdamWParams,
     exp_avg: Vec<Matrix>,
     exp_avg_sq: Vec<Matrix>,
     t: u64,
@@ -12,8 +12,12 @@ pub struct AdamW {
 
 impl AdamW {
     pub fn new(shapes: &[(usize, usize)], hyper: Hyper) -> Self {
+        Self::with_params(shapes, (&hyper).into())
+    }
+
+    pub fn with_params(shapes: &[(usize, usize)], p: AdamWParams) -> Self {
         AdamW {
-            hyper,
+            p,
             exp_avg: shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect(),
             exp_avg_sq: shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect(),
             t: 0,
@@ -28,7 +32,7 @@ impl Optimizer for AdamW {
 
     fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], ctx: StepCtx) {
         self.t += 1;
-        let (b1, b2, eps) = (self.hyper.adam_beta1, self.hyper.adam_beta2, self.hyper.adam_eps);
+        let (b1, b2, eps) = (self.p.beta1, self.p.beta2, self.p.eps);
         let bc1 = 1.0 - b1.powi(self.t as i32);
         let bc2 = 1.0 - b2.powi(self.t as i32);
         for (((p, g), m), v) in params
@@ -55,6 +59,10 @@ impl Optimizer for AdamW {
 
     fn state_mut(&mut self) -> Vec<&mut Matrix> {
         self.exp_avg.iter_mut().chain(self.exp_avg_sq.iter_mut()).collect()
+    }
+
+    fn n_layers(&self) -> usize {
+        self.exp_avg.len()
     }
 
     fn step_count(&self) -> u64 {

@@ -5,8 +5,17 @@
 //! the inverse-free truncated-binomial rule, preconditioning `L^ G R^`,
 //! grafted momentum update with decoupled weight decay. 1-D layers
 //! (biases/gains) take the grafted SGD update directly.
+//!
+//! The per-layer step factors into [`refresh_layer`] (gram + inverse-free
+//! preconditioner refresh — the shardable owner-computes half; a no-op on
+//! skip steps, Jorge keeps no extra statistics) and [`apply_layer`]
+//! (preconditioned grafted update). The fused [`Optimizer::step`] runs
+//! both back to back, so refresh-then-apply through the trait's split
+//! protocol is bitwise identical to the serial step.
 
-use super::{for_each_layer, grafted_update, max_dim, Hyper, INNER_PAR_DIM, Optimizer, StepCtx};
+use super::{
+    for_each_layer, grafted_update, max_dim, Hyper, JorgeParams, Optimizer, StepCtx, INNER_PAR_DIM,
+};
 use crate::tensor::{gram_left, gram_right, jorge_update, matmul, Matrix};
 
 struct LayerState {
@@ -18,13 +27,17 @@ struct LayerState {
 }
 
 pub struct Jorge {
-    hyper: Hyper,
+    p: JorgeParams,
     layers: Vec<LayerState>,
 }
 
 impl Jorge {
     pub fn new(shapes: &[(usize, usize)], hyper: Hyper) -> Self {
-        let scale = hyper.precond_eps.powf(-0.25);
+        Self::with_params(shapes, (&hyper).into())
+    }
+
+    pub fn with_params(shapes: &[(usize, usize)], p: JorgeParams) -> Self {
+        let scale = p.eps.powf(-0.25);
         let layers = shapes
             .iter()
             .map(|&(m, n)| {
@@ -37,12 +50,39 @@ impl Jorge {
                 }
             })
             .collect();
-        Jorge { hyper, layers }
+        Jorge { p, layers }
     }
 
     /// Expose a preconditioner for tests/analysis.
     pub fn left_preconditioner(&self, layer: usize) -> Option<&Matrix> {
         self.layers[layer].l_hat.as_ref()
+    }
+}
+
+/// Owner-computes half: inverse-free truncated-binomial refresh of both
+/// preconditioner estimates. Jorge accumulates no separate statistics,
+/// so skip steps do nothing here.
+fn refresh_layer(st: &mut LayerState, g: &Matrix, update: bool) {
+    if !update {
+        return;
+    }
+    if let (Some(l_hat), Some(r_hat)) = (&mut st.l_hat, &mut st.r_hat) {
+        *l_hat = jorge_update(l_hat, &gram_left(g));
+        *r_hat = jorge_update(r_hat, &gram_right(g));
+    }
+}
+
+/// Apply half: precondition with the current estimates and take the
+/// grafted update (decoupled weight decay). Never refreshes.
+fn apply_layer(p: JorgeParams, st: &mut LayerState, param: &mut Matrix, g: &Matrix, ctx: StepCtx) {
+    match (&st.l_hat, &st.r_hat) {
+        (Some(l_hat), Some(r_hat)) => {
+            let gtilde = matmul(&matmul(l_hat, g), r_hat);
+            grafted_update(param, g, &gtilde, &mut st.mom, &mut st.gmom, ctx, p.graft, true);
+        }
+        _ => {
+            grafted_update(param, g, g, &mut st.mom, &mut st.gmom, ctx, p.graft, true);
+        }
     }
 }
 
@@ -58,22 +98,11 @@ impl Optimizer for Jorge {
         // across the worker pool; GEMMs inside a task run inline. On
         // refresh steps dominated by one large preconditioner, stay
         // serial so that layer's GEMMs get the pool instead.
-        let hyper = self.hyper;
-        let body = |li: usize, p: &mut Matrix, st: &mut LayerState| {
+        let p = self.p;
+        let body = |li: usize, param: &mut Matrix, st: &mut LayerState| {
             let g = &grads[li];
-            match (&mut st.l_hat, &mut st.r_hat) {
-                (Some(l_hat), Some(r_hat)) => {
-                    if ctx.update_precond {
-                        *l_hat = jorge_update(l_hat, &gram_left(g));
-                        *r_hat = jorge_update(r_hat, &gram_right(g));
-                    }
-                    let gtilde = matmul(&matmul(l_hat, g), r_hat);
-                    grafted_update(p, g, &gtilde, &mut st.mom, &mut st.gmom, ctx, hyper, true);
-                }
-                _ => {
-                    grafted_update(p, g, g, &mut st.mom, &mut st.gmom, ctx, hyper, true);
-                }
-            }
+            refresh_layer(st, g, ctx.update_precond);
+            apply_layer(p, st, param, g, ctx);
         };
         let dims = self.layers.iter().flat_map(|s| [s.l_hat.as_ref(), s.r_hat.as_ref()]);
         let serial = ctx.update_precond && max_dim(dims) >= INNER_PAR_DIM;
@@ -105,6 +134,61 @@ impl Optimizer for Jorge {
             out.push(&mut s.gmom);
         }
         out
+    }
+
+    fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    fn refresh_flops(&self, layer: usize) -> f64 {
+        let st = &self.layers[layer];
+        let (Some(l), Some(r)) = (&st.l_hat, &st.r_hat) else { return 0.0 };
+        let (m, n) = (l.rows as f64, r.rows as f64);
+        let mn = st.mom.data.len() as f64; // m*n
+        // grams (2 m^2 n + 2 n^2 m) + ~5 square GEMMs per side for the
+        // truncated-binomial update
+        2.0 * m * mn + 2.0 * n * mn + 10.0 * (m * m * m + n * n * n)
+    }
+
+    fn refresh_layers(&mut self, layers: &[usize], grads: &[Matrix], update_precond: bool) {
+        for &li in layers {
+            refresh_layer(&mut self.layers[li], &grads[li], update_precond);
+        }
+    }
+
+    fn apply_update(&mut self, params: &mut [Matrix], grads: &[Matrix], ctx: StepCtx) {
+        assert_eq!(params.len(), self.layers.len());
+        let p = self.p;
+        let body = |li: usize, param: &mut Matrix, st: &mut LayerState| {
+            apply_layer(p, st, param, &grads[li], ctx);
+        };
+        for_each_layer(params, &mut self.layers, false, body);
+    }
+
+    fn export_preconditioners(&self, layers: &[usize]) -> Vec<f32> {
+        let mut out = Vec::new();
+        for &li in layers {
+            let st = &self.layers[li];
+            if let (Some(l), Some(r)) = (&st.l_hat, &st.r_hat) {
+                out.extend_from_slice(&l.data);
+                out.extend_from_slice(&r.data);
+            }
+        }
+        out
+    }
+
+    fn import_preconditioners(&mut self, layers: &[usize], data: &[f32]) -> usize {
+        let mut off = 0;
+        for &li in layers {
+            let st = &mut self.layers[li];
+            if let (Some(l), Some(r)) = (&mut st.l_hat, &mut st.r_hat) {
+                l.data.copy_from_slice(&data[off..off + l.data.len()]);
+                off += l.data.len();
+                r.data.copy_from_slice(&data[off..off + r.data.len()]);
+                off += r.data.len();
+            }
+        }
+        off
     }
 }
 

@@ -7,33 +7,9 @@
 
 use crate::models::NetworkInventory;
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum OptKind {
-    Sgd,
-    AdamW,
-    Shampoo,
-    Jorge,
-}
-
-impl OptKind {
-    pub fn parse(s: &str) -> Option<Self> {
-        match s {
-            "sgd" => Some(Self::Sgd),
-            "adamw" | "adam" => Some(Self::AdamW),
-            "shampoo" => Some(Self::Shampoo),
-            "jorge" => Some(Self::Jorge),
-            _ => None,
-        }
-    }
-    pub fn name(&self) -> &'static str {
-        match self {
-            Self::Sgd => "sgd",
-            Self::AdamW => "adamw",
-            Self::Shampoo => "shampoo",
-            Self::Jorge => "jorge",
-        }
-    }
-}
+/// Memory accounting keys on the algorithm alone — sharding moves
+/// refresh work between workers, not state between optimizers.
+pub use crate::optim::OptAlgo as OptKind;
 
 /// Optimizer state floats for `net`, with/without grafting for the
 /// second-order methods.

@@ -8,7 +8,10 @@
 //!    mix over the paper's real layer inventories (`models`), where the
 //!    HLO artifacts (fixed shapes) cannot;
 //! 3. **the `--native` coordinator path** — data-parallel runs apply the
-//!    optimizer natively after the gradient all-reduce.
+//!    optimizer natively after the gradient all-reduce, and the sharded
+//!    variants (`shampoo_sharded` / `jorge_sharded`) partition the
+//!    preconditioner refreshes across workers through the split
+//!    refresh/apply protocol on [`Optimizer`].
 //!
 //! The semantics mirror `python/compile/optim_jax.py` exactly, including
 //! the grafted weight update (App. A.2), dynamic beta2 (App. A.1),
@@ -28,8 +31,144 @@ pub use sgd::Sgd;
 pub use shampoo::Shampoo;
 
 use crate::tensor::Matrix;
+use std::fmt;
+use std::str::FromStr;
+
+// ---------------------------------------------------------------------------
+// Typed optimizer selection
+// ---------------------------------------------------------------------------
+
+/// The optimizer algorithm family — pure math, no execution-mode bits.
+/// This is what artifact names, memory accounting and the perf model key
+/// on (re-exported as `memory::OptKind` for those callers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OptAlgo {
+    Sgd,
+    AdamW,
+    Shampoo,
+    Jorge,
+}
+
+impl OptAlgo {
+    /// Canonical name; also the artifact-name component.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Sgd => "sgd",
+            Self::AdamW => "adamw",
+            Self::Shampoo => "shampoo",
+            Self::Jorge => "jorge",
+        }
+    }
+
+    /// Parse a bare algorithm name (`adam` accepted as an alias).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sgd" => Some(Self::Sgd),
+            "adamw" | "adam" => Some(Self::AdamW),
+            "shampoo" => Some(Self::Shampoo),
+            "jorge" => Some(Self::Jorge),
+            _ => None,
+        }
+    }
+
+    /// Second-order methods keep per-layer preconditioners, so they have
+    /// `_skip` executable variants and shardable refresh work.
+    pub fn second_order(&self) -> bool {
+        matches!(self, Self::Shampoo | Self::Jorge)
+    }
+}
+
+/// Typed optimizer selection: the algorithm plus whether preconditioner
+/// refresh work is sharded across data-parallel workers (dist-Shampoo
+/// style owner-computes; see `coordinator::trainer`). Sharding changes
+/// *where* refreshes run, never the math — trajectories are bitwise
+/// identical to the serial algorithm at any worker count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct OptimizerKind {
+    pub algo: OptAlgo,
+    pub sharded: bool,
+}
+
+impl OptimizerKind {
+    pub const SGD: Self = OptimizerKind { algo: OptAlgo::Sgd, sharded: false };
+    pub const ADAMW: Self = OptimizerKind { algo: OptAlgo::AdamW, sharded: false };
+    pub const SHAMPOO: Self = OptimizerKind { algo: OptAlgo::Shampoo, sharded: false };
+    pub const JORGE: Self = OptimizerKind { algo: OptAlgo::Jorge, sharded: false };
+    pub const SHAMPOO_SHARDED: Self = OptimizerKind { algo: OptAlgo::Shampoo, sharded: true };
+    pub const JORGE_SHARDED: Self = OptimizerKind { algo: OptAlgo::Jorge, sharded: true };
+
+    /// Every accepted kind, for help strings and validation errors.
+    pub const ALL: [Self; 6] = [
+        Self::SGD,
+        Self::ADAMW,
+        Self::SHAMPOO,
+        Self::JORGE,
+        Self::SHAMPOO_SHARDED,
+        Self::JORGE_SHARDED,
+    ];
+
+    /// The same algorithm without sharding.
+    pub fn serial(self) -> Self {
+        OptimizerKind { sharded: false, ..self }
+    }
+
+    /// Artifact/manifest name component. Sharding never changes the math,
+    /// so sharded kinds load the same executables as their serial base.
+    pub fn base_name(self) -> &'static str {
+        self.algo.name()
+    }
+
+    /// Whether `train_*_skip` / `apply_*_skip` executables exist.
+    pub fn has_skip(self) -> bool {
+        self.algo.second_order()
+    }
+
+    /// `"sgd | adamw | ... | jorge_sharded"` for CLI help and errors.
+    pub fn choices() -> String {
+        Self::ALL.iter().map(|k| k.to_string()).collect::<Vec<_>>().join(" | ")
+    }
+}
+
+impl FromStr for OptimizerKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        let (base, sharded) = match s.strip_suffix("_sharded") {
+            Some(b) => (b, true),
+            None => (s, false),
+        };
+        let algo = OptAlgo::parse(base).ok_or_else(|| {
+            format!("unknown optimizer {s:?} (choose {})", Self::choices())
+        })?;
+        if sharded && !algo.second_order() {
+            return Err(format!(
+                "{s:?}: only the second-order optimizers (shampoo, jorge) shard \
+                 preconditioner work"
+            ));
+        }
+        Ok(OptimizerKind { algo, sharded })
+    }
+}
+
+impl fmt::Display for OptimizerKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.algo.name())?;
+        if self.sharded {
+            f.write_str("_sharded")?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hyperparameters: flat wire format + typed per-optimizer views
+// ---------------------------------------------------------------------------
 
 /// Hyperparameters shared with the artifacts (manifest `hyper` section).
+/// This is the flat *wire format*; the optimizers themselves hold the
+/// typed views below ([`SgdParams`], [`AdamWParams`], [`ShampooParams`],
+/// [`JorgeParams`]), and `From<&Hyper>` conversions keep configs and the
+/// SGD-to-Jorge bootstrap rule working unchanged.
 #[derive(Clone, Copy, Debug)]
 pub struct Hyper {
     pub beta1: f32,
@@ -54,6 +193,160 @@ impl Default for Hyper {
             adam_beta2: 0.999,
             adam_eps: 1e-8,
         }
+    }
+}
+
+impl Hyper {
+    /// Assemble a `Hyper` from the typed per-optimizer param structs.
+    pub fn builder() -> HyperBuilder {
+        HyperBuilder { h: Hyper::default() }
+    }
+}
+
+/// Builder assembling the flat [`Hyper`] wire format from typed params.
+/// The grafting knobs (`beta1`, `sgd_momentum`) and `precond_eps` are
+/// shared between Shampoo and Jorge in the wire format, so when both are
+/// set the last setter wins for those fields.
+#[derive(Clone, Copy, Debug)]
+pub struct HyperBuilder {
+    h: Hyper,
+}
+
+impl HyperBuilder {
+    pub fn sgd(mut self, p: SgdParams) -> Self {
+        self.h.sgd_momentum = p.momentum;
+        self
+    }
+
+    pub fn adamw(mut self, p: AdamWParams) -> Self {
+        self.h.adam_beta1 = p.beta1;
+        self.h.adam_beta2 = p.beta2;
+        self.h.adam_eps = p.eps;
+        self
+    }
+
+    pub fn shampoo(mut self, p: ShampooParams) -> Self {
+        self.h.beta1 = p.graft.beta1;
+        self.h.sgd_momentum = p.graft.sgd_momentum;
+        self.h.shampoo_beta2 = p.beta2;
+        self.h.precond_eps = p.eps;
+        self.h.newton_iters = p.newton_iters;
+        self
+    }
+
+    pub fn jorge(mut self, p: JorgeParams) -> Self {
+        self.h.beta1 = p.graft.beta1;
+        self.h.sgd_momentum = p.graft.sgd_momentum;
+        self.h.precond_eps = p.eps;
+        self
+    }
+
+    pub fn build(self) -> Hyper {
+        self.h
+    }
+}
+
+/// Grafting knobs for the shared weight update (App. A.2, Algorithm 3):
+/// direction momentum rate + heavy-ball magnitude momentum rate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GraftParams {
+    pub beta1: f32,
+    pub sgd_momentum: f32,
+}
+
+/// Heavy-ball SGD.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SgdParams {
+    pub momentum: f32,
+}
+
+/// AdamW with decoupled weight decay.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdamWParams {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+/// Shampoo: gram-statistic EMA + inverse fourth roots.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShampooParams {
+    pub graft: GraftParams,
+    /// Gram-statistic EMA rate (Alg. 1).
+    pub beta2: f32,
+    pub eps: f32,
+    pub newton_iters: usize,
+}
+
+/// Jorge: inverse-free truncated-binomial preconditioner refresh.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JorgeParams {
+    pub graft: GraftParams,
+    pub eps: f32,
+}
+
+impl From<&Hyper> for GraftParams {
+    fn from(h: &Hyper) -> Self {
+        GraftParams { beta1: h.beta1, sgd_momentum: h.sgd_momentum }
+    }
+}
+
+impl From<&Hyper> for SgdParams {
+    fn from(h: &Hyper) -> Self {
+        SgdParams { momentum: h.sgd_momentum }
+    }
+}
+
+impl From<&Hyper> for AdamWParams {
+    fn from(h: &Hyper) -> Self {
+        AdamWParams { beta1: h.adam_beta1, beta2: h.adam_beta2, eps: h.adam_eps }
+    }
+}
+
+impl From<&Hyper> for ShampooParams {
+    fn from(h: &Hyper) -> Self {
+        ShampooParams {
+            graft: h.into(),
+            beta2: h.shampoo_beta2,
+            eps: h.precond_eps,
+            newton_iters: h.newton_iters,
+        }
+    }
+}
+
+impl From<&Hyper> for JorgeParams {
+    fn from(h: &Hyper) -> Self {
+        JorgeParams { graft: h.into(), eps: h.precond_eps }
+    }
+}
+
+impl Default for SgdParams {
+    fn default() -> Self {
+        (&Hyper::default()).into()
+    }
+}
+
+impl Default for AdamWParams {
+    fn default() -> Self {
+        (&Hyper::default()).into()
+    }
+}
+
+impl Default for ShampooParams {
+    fn default() -> Self {
+        (&Hyper::default()).into()
+    }
+}
+
+impl Default for JorgeParams {
+    fn default() -> Self {
+        (&Hyper::default()).into()
+    }
+}
+
+impl Default for GraftParams {
+    fn default() -> Self {
+        (&Hyper::default()).into()
     }
 }
 
@@ -100,6 +393,14 @@ pub struct StepCtx {
 }
 
 /// Common interface over the four optimizers.
+///
+/// Beyond the fused [`step`](Optimizer::step), second-order optimizers
+/// implement the split refresh/apply protocol that the sharded
+/// coordinator path uses: `refresh_layers(all layers)` followed by
+/// `apply_update` must be bitwise identical to `step`, because per-layer
+/// work is independent and each half runs float-for-float the same ops
+/// the fused step would. First-order optimizers have no refresh work and
+/// inherit the no-op defaults.
 pub trait Optimizer: Send {
     fn name(&self) -> &'static str;
 
@@ -122,20 +423,53 @@ pub trait Optimizer: Send {
 
     /// Restore the step counter (no-op for counter-free optimizers).
     fn set_step_count(&mut self, _t: u64) {}
+
+    /// Number of per-layer slots (== the `params.len()` passed to `step`).
+    fn n_layers(&self) -> usize;
+
+    /// FLOPs of one preconditioner refresh for `layer`; 0 when the layer
+    /// carries no preconditioner. Drives the owner-computes assignment's
+    /// load balancing in the sharded coordinator path.
+    fn refresh_flops(&self, _layer: usize) -> f64 {
+        0.0
+    }
+
+    /// Owner-computes half of a step, restricted to `layers`: accumulate
+    /// gram statistics (every call, where the algorithm does) and, when
+    /// `update_precond`, refresh those layers' preconditioners.
+    fn refresh_layers(&mut self, _layers: &[usize], _grads: &[Matrix], _update_precond: bool) {}
+
+    /// Apply half of a step: the parameter update using the current
+    /// preconditioners, never refreshing or re-accumulating statistics.
+    /// The default covers first-order optimizers, where the whole step
+    /// *is* the apply.
+    fn apply_update(&mut self, params: &mut [Matrix], grads: &[Matrix], ctx: StepCtx) {
+        self.step(params, grads, StepCtx { update_precond: false, ..ctx });
+    }
+
+    /// Flat-serialise the preconditioners of `layers`, in the given
+    /// order — the all-gather payload. Empty for first-order optimizers
+    /// and for layers without preconditioners.
+    fn export_preconditioners(&self, _layers: &[usize]) -> Vec<f32> {
+        Vec::new()
+    }
+
+    /// Inverse of [`export_preconditioners`](Optimizer::export_preconditioners);
+    /// returns the number of floats consumed from `data`.
+    fn import_preconditioners(&mut self, _layers: &[usize], _data: &[f32]) -> usize {
+        0
+    }
 }
 
-/// Construct an optimizer by name for a given parameter inventory.
-pub fn build(
-    name: &str,
-    shapes: &[(usize, usize)],
-    hyper: Hyper,
-) -> Result<Box<dyn Optimizer>, String> {
-    match name {
-        "sgd" => Ok(Box::new(Sgd::new(shapes, hyper))),
-        "adamw" => Ok(Box::new(AdamW::new(shapes, hyper))),
-        "shampoo" => Ok(Box::new(Shampoo::new(shapes, hyper))),
-        "jorge" => Ok(Box::new(Jorge::new(shapes, hyper))),
-        other => Err(format!("unknown optimizer {other:?}")),
+/// Construct an optimizer for a parameter inventory. The `sharded` flag
+/// on `kind` selects the coordinator's execution mode, not different
+/// math, so it does not change the state built here.
+pub fn build(kind: OptimizerKind, shapes: &[(usize, usize)], hyper: Hyper) -> Box<dyn Optimizer> {
+    match kind.algo {
+        OptAlgo::Sgd => Box::new(Sgd::new(shapes, hyper)),
+        OptAlgo::AdamW => Box::new(AdamW::new(shapes, hyper)),
+        OptAlgo::Shampoo => Box::new(Shampoo::new(shapes, hyper)),
+        OptAlgo::Jorge => Box::new(Jorge::new(shapes, hyper)),
     }
 }
 
@@ -151,7 +485,7 @@ pub(crate) fn grafted_update(
     mom: &mut Matrix,
     gmom: &mut Matrix,
     ctx: StepCtx,
-    hyper: Hyper,
+    graft: GraftParams,
     decoupled: bool,
 ) {
     // g_sgd = g (+ wd * p when coupled)
@@ -161,8 +495,8 @@ pub(crate) fn grafted_update(
     let n = p.data.len();
     for i in 0..n {
         let gs = if decoupled { g.data[i] } else { g.data[i] + ctx.weight_decay * p.data[i] };
-        mom.data[i] = hyper.beta1 * mom.data[i] + (1.0 - hyper.beta1) * gtilde.data[i];
-        gmom.data[i] = hyper.sgd_momentum * gmom.data[i] + gs;
+        mom.data[i] = graft.beta1 * mom.data[i] + (1.0 - graft.beta1) * gtilde.data[i];
+        gmom.data[i] = graft.sgd_momentum * gmom.data[i] + gs;
     }
     let gnorm = gmom.frobenius() as f32;
     let mnorm = (mom.frobenius() as f32).max(1e-16);
@@ -178,13 +512,68 @@ mod tests {
     use super::*;
 
     #[test]
-    fn build_all_by_name() {
+    fn build_all_kinds() {
         let shapes = [(8, 4), (4, 1)];
-        for name in ["sgd", "adamw", "shampoo", "jorge"] {
-            let o = build(name, &shapes, Hyper::default()).unwrap();
-            assert_eq!(o.name(), name);
+        for kind in OptimizerKind::ALL {
+            let o = build(kind, &shapes, Hyper::default());
+            assert_eq!(o.name(), kind.base_name());
+            assert_eq!(o.n_layers(), 2);
         }
-        assert!(build("nope", &shapes, Hyper::default()).is_err());
+    }
+
+    #[test]
+    fn kind_parses_and_displays_round_trip() {
+        for kind in OptimizerKind::ALL {
+            let s = kind.to_string();
+            assert_eq!(s.parse::<OptimizerKind>().unwrap(), kind, "{s}");
+        }
+        assert_eq!("adam".parse::<OptimizerKind>().unwrap(), OptimizerKind::ADAMW);
+        assert!("nope".parse::<OptimizerKind>().is_err());
+        // first-order methods have no preconditioners to shard
+        assert!("sgd_sharded".parse::<OptimizerKind>().is_err());
+        assert!("adamw_sharded".parse::<OptimizerKind>().is_err());
+        assert_eq!(OptimizerKind::JORGE_SHARDED.serial(), OptimizerKind::JORGE);
+        assert_eq!(OptimizerKind::JORGE_SHARDED.base_name(), "jorge");
+        assert!(OptimizerKind::choices().contains("jorge_sharded"));
+    }
+
+    #[test]
+    fn hyper_builder_matches_flat_defaults() {
+        let h = Hyper::builder()
+            .sgd(SgdParams::default())
+            .adamw(AdamWParams::default())
+            .shampoo(ShampooParams::default())
+            .jorge(JorgeParams::default())
+            .build();
+        let d = Hyper::default();
+        assert_eq!(h.beta1, d.beta1);
+        assert_eq!(h.sgd_momentum, d.sgd_momentum);
+        assert_eq!(h.shampoo_beta2, d.shampoo_beta2);
+        assert_eq!(h.precond_eps, d.precond_eps);
+        assert_eq!(h.newton_iters, d.newton_iters);
+        assert_eq!(h.adam_beta1, d.adam_beta1);
+        assert_eq!(h.adam_beta2, d.adam_beta2);
+        assert_eq!(h.adam_eps, d.adam_eps);
+    }
+
+    #[test]
+    fn hyper_builder_routes_typed_params() {
+        let h = Hyper::builder()
+            .adamw(AdamWParams { beta1: 0.8, beta2: 0.95, eps: 1e-7 })
+            .jorge(JorgeParams {
+                graft: GraftParams { beta1: 0.85, sgd_momentum: 0.8 },
+                eps: 1e-5,
+            })
+            .build();
+        assert_eq!(h.adam_beta1, 0.8);
+        assert_eq!(h.adam_beta2, 0.95);
+        assert_eq!(h.adam_eps, 1e-7);
+        assert_eq!(h.beta1, 0.85);
+        assert_eq!(h.sgd_momentum, 0.8);
+        assert_eq!(h.precond_eps, 1e-5);
+        // round-trips back through the typed views
+        assert_eq!(JorgeParams::from(&h).graft.beta1, 0.85);
+        assert_eq!(AdamWParams::from(&h).beta2, 0.95);
     }
 
     #[test]
@@ -197,7 +586,7 @@ mod tests {
         let mut mom = Matrix::zeros(6, 4);
         let mut gmom = Matrix::zeros(6, 4);
         let ctx = StepCtx { lr: 0.05, weight_decay: 0.0, update_precond: true };
-        grafted_update(&mut p, &g, &gtilde, &mut mom, &mut gmom, ctx, Hyper::default(), true);
+        grafted_update(&mut p, &g, &gtilde, &mut mom, &mut gmom, ctx, GraftParams::default(), true);
         let step_norm = p.sub(&p0).frobenius();
         let want = 0.05 * g.frobenius();
         assert!(
@@ -215,12 +604,66 @@ mod tests {
         let mut mom = Matrix::zeros(5, 3);
         let mut gmom = Matrix::zeros(5, 3);
         let ctx = StepCtx { lr: 1.0, weight_decay: 0.0, update_precond: true };
-        grafted_update(&mut p, &g, &gtilde, &mut mom, &mut gmom, ctx, Hyper::default(), true);
+        grafted_update(&mut p, &g, &gtilde, &mut mom, &mut gmom, ctx, GraftParams::default(), true);
         // p = -c * gtilde for some c > 0
         let c = -p.data[0] / gtilde.data[0];
         assert!(c > 0.0);
         for i in 0..p.data.len() {
             assert!((p.data[i] + c * gtilde.data[i]).abs() < 1e-5 * c.max(1.0));
+        }
+    }
+
+    #[test]
+    fn split_refresh_apply_matches_fused_step_bitwise() {
+        // The contract the sharded coordinator path rests on:
+        // refresh_layers(all) + apply_update == step, float for float.
+        let shapes = [(6usize, 4usize), (4, 1), (5, 3)];
+        let all: Vec<usize> = (0..shapes.len()).collect();
+        for kind in [OptimizerKind::SHAMPOO, OptimizerKind::JORGE] {
+            let mut fused = build(kind, &shapes, Hyper::default());
+            let mut split = build(kind, &shapes, Hyper::default());
+            let mut rng = crate::rngx::Rng::new(11);
+            let mut p_a: Vec<Matrix> =
+                shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 1.0, &mut rng)).collect();
+            let mut p_b = p_a.clone();
+            let mut grng = crate::rngx::Rng::new(12);
+            for step in 0..6 {
+                let grads: Vec<Matrix> =
+                    shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.3, &mut grng)).collect();
+                let ctx = StepCtx {
+                    lr: 0.05,
+                    weight_decay: 1e-3,
+                    update_precond: step % 2 == 0,
+                };
+                fused.step(&mut p_a, &grads, ctx);
+                split.refresh_layers(&all, &grads, ctx.update_precond);
+                split.apply_update(&mut p_b, &grads, ctx);
+                for (a, b) in p_a.iter().zip(&p_b) {
+                    assert_eq!(a.data, b.data, "{kind} step {step} diverged");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn preconditioner_export_import_round_trips() {
+        let shapes = [(6usize, 4usize), (4, 1), (5, 3)];
+        for kind in [OptimizerKind::SHAMPOO, OptimizerKind::JORGE] {
+            let mut opt = build(kind, &shapes, Hyper::default());
+            let mut rng = crate::rngx::Rng::new(3);
+            let grads: Vec<Matrix> =
+                shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 0.3, &mut rng)).collect();
+            opt.refresh_layers(&[0, 1, 2], &grads, true);
+            let blob = opt.export_preconditioners(&[0, 2]);
+            assert!(!blob.is_empty(), "{kind}");
+            // bias layer (index 1) contributes nothing
+            assert!(opt.export_preconditioners(&[1]).is_empty(), "{kind}");
+            let used = opt.import_preconditioners(&[0, 2], &blob);
+            assert_eq!(used, blob.len(), "{kind}");
+            assert_eq!(opt.export_preconditioners(&[0, 2]), blob, "{kind}");
+            // refresh cost: preconditioned layers > 0, bias layer == 0
+            assert!(opt.refresh_flops(0) > 0.0, "{kind}");
+            assert_eq!(opt.refresh_flops(1), 0.0, "{kind}");
         }
     }
 }

@@ -1,18 +1,22 @@
 //! Heavy-ball SGD with coupled L2 weight decay — the torchvision baseline
 //! (mirrors `optim_jax.make_sgd`).
 
-use super::{Hyper, Optimizer, StepCtx};
+use super::{Hyper, Optimizer, SgdParams, StepCtx};
 use crate::tensor::Matrix;
 
 pub struct Sgd {
-    hyper: Hyper,
+    p: SgdParams,
     momentum: Vec<Matrix>,
 }
 
 impl Sgd {
     pub fn new(shapes: &[(usize, usize)], hyper: Hyper) -> Self {
+        Self::with_params(shapes, (&hyper).into())
+    }
+
+    pub fn with_params(shapes: &[(usize, usize)], p: SgdParams) -> Self {
         Sgd {
-            hyper,
+            p,
             momentum: shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect(),
         }
     }
@@ -29,7 +33,7 @@ impl Optimizer for Sgd {
         for ((p, g), mom) in params.iter_mut().zip(grads).zip(&mut self.momentum) {
             for i in 0..p.data.len() {
                 let gi = g.data[i] + ctx.weight_decay * p.data[i]; // coupled L2
-                mom.data[i] = self.hyper.sgd_momentum * mom.data[i] + gi;
+                mom.data[i] = self.p.momentum * mom.data[i] + gi;
                 p.data[i] -= ctx.lr * mom.data[i];
             }
         }
@@ -41,6 +45,10 @@ impl Optimizer for Sgd {
 
     fn state_mut(&mut self) -> Vec<&mut Matrix> {
         self.momentum.iter_mut().collect()
+    }
+
+    fn n_layers(&self) -> usize {
+        self.momentum.len()
     }
 }
 

@@ -6,8 +6,17 @@
 //! Newton iteration (default — matches the HLO artifact) or the exact
 //! Jacobi eigensolver (`RootMethod::Eigh`, the cuSOLVER-style baseline
 //! costed in Table 1).
+//!
+//! The per-layer step factors into [`refresh_layer`] (stat EMAs + root
+//! recompute — the shardable owner-computes half) and [`apply_layer`]
+//! (preconditioned grafted update). The fused [`Optimizer::step`] runs
+//! both back to back, so refresh-then-apply through the trait's split
+//! protocol is bitwise identical to the serial step.
 
-use super::{for_each_layer, grafted_update, max_dim, Hyper, INNER_PAR_DIM, Optimizer, StepCtx};
+use super::{
+    for_each_layer, grafted_update, max_dim, Hyper, Optimizer, ShampooParams, StepCtx,
+    INNER_PAR_DIM,
+};
 use crate::tensor::{gram_left, gram_right, inv_fourth_root_eigh, inv_fourth_root_newton};
 use crate::tensor::{matmul, Matrix};
 
@@ -27,18 +36,26 @@ struct LayerState {
 }
 
 pub struct Shampoo {
-    hyper: Hyper,
+    p: ShampooParams,
     pub root_method: RootMethod,
     layers: Vec<LayerState>,
 }
 
 impl Shampoo {
     pub fn new(shapes: &[(usize, usize)], hyper: Hyper) -> Self {
-        Self::with_root(shapes, hyper, RootMethod::Newton)
+        Self::with_params(shapes, (&hyper).into(), RootMethod::Newton)
     }
 
     pub fn with_root(shapes: &[(usize, usize)], hyper: Hyper, root_method: RootMethod) -> Self {
-        let eps = hyper.precond_eps;
+        Self::with_params(shapes, (&hyper).into(), root_method)
+    }
+
+    pub fn with_params(
+        shapes: &[(usize, usize)],
+        p: ShampooParams,
+        root_method: RootMethod,
+    ) -> Self {
+        let eps = p.eps;
         let pscale = eps.powf(-0.25);
         let layers = shapes
             .iter()
@@ -54,14 +71,57 @@ impl Shampoo {
                 }
             })
             .collect();
-        Shampoo { hyper, root_method, layers }
+        Shampoo { p, root_method, layers }
     }
 }
 
-fn root_of(method: RootMethod, hyper: Hyper, a: &Matrix) -> Matrix {
+fn root_of(method: RootMethod, p: ShampooParams, a: &Matrix) -> Matrix {
     match method {
-        RootMethod::Newton => inv_fourth_root_newton(a, hyper.newton_iters, hyper.precond_eps),
-        RootMethod::Eigh => inv_fourth_root_eigh(a, hyper.precond_eps),
+        RootMethod::Newton => inv_fourth_root_newton(a, p.newton_iters, p.eps),
+        RootMethod::Eigh => inv_fourth_root_eigh(a, p.eps),
+    }
+}
+
+/// Owner-computes half: EMA both gram stats (every step, Alg. 1 lines
+/// 5-8), then recompute the inverse fourth roots on update steps.
+fn refresh_layer(
+    p: ShampooParams,
+    method: RootMethod,
+    st: &mut LayerState,
+    g: &Matrix,
+    update: bool,
+) {
+    let Some(lstat) = st.lstat.as_mut() else { return };
+    let b2 = p.beta2;
+    let gl = gram_left(g);
+    for i in 0..lstat.data.len() {
+        lstat.data[i] = b2 * lstat.data[i] + (1.0 - b2) * gl.data[i];
+    }
+    let rstat = st.rstat.as_mut().unwrap();
+    let gr = gram_right(g);
+    for i in 0..rstat.data.len() {
+        rstat.data[i] = b2 * rstat.data[i] + (1.0 - b2) * gr.data[i];
+    }
+    if update {
+        st.pl = Some(root_of(method, p, st.lstat.as_ref().unwrap()));
+        st.pr = Some(root_of(method, p, st.rstat.as_ref().unwrap()));
+    }
+}
+
+/// Apply half: precondition with the current roots and take the grafted
+/// update (coupled L2). Never touches stats or roots.
+fn apply_layer(
+    p: ShampooParams,
+    st: &mut LayerState,
+    param: &mut Matrix,
+    g: &Matrix,
+    ctx: StepCtx,
+) {
+    if st.pl.is_some() {
+        let gtilde = matmul(&matmul(st.pl.as_ref().unwrap(), g), st.pr.as_ref().unwrap());
+        grafted_update(param, g, &gtilde, &mut st.mom, &mut st.gmom, ctx, p.graft, false);
+    } else {
+        grafted_update(param, g, g, &mut st.mom, &mut st.gmom, ctx, p.graft, false);
     }
 }
 
@@ -77,33 +137,12 @@ impl Optimizer for Shampoo {
         // The expensive roots dominate on `update_precond` steps; when
         // one large stat dominates those, stay serial so its root's
         // GEMMs get the pool instead (inner beats outer there).
-        let hyper = self.hyper;
+        let p = self.p;
         let method = self.root_method;
-        let b2 = hyper.shampoo_beta2;
-        let body = |li: usize, p: &mut Matrix, st: &mut LayerState| {
+        let body = |li: usize, param: &mut Matrix, st: &mut LayerState| {
             let g = &grads[li];
-            if st.lstat.is_some() {
-                // EMA stats every step (Alg. 1 lines 5-8)
-                let lstat = st.lstat.as_mut().unwrap();
-                let gl = gram_left(g);
-                for i in 0..lstat.data.len() {
-                    lstat.data[i] = b2 * lstat.data[i] + (1.0 - b2) * gl.data[i];
-                }
-                let rstat = st.rstat.as_mut().unwrap();
-                let gr = gram_right(g);
-                for i in 0..rstat.data.len() {
-                    rstat.data[i] = b2 * rstat.data[i] + (1.0 - b2) * gr.data[i];
-                }
-                if ctx.update_precond {
-                    st.pl = Some(root_of(method, hyper, st.lstat.as_ref().unwrap()));
-                    st.pr = Some(root_of(method, hyper, st.rstat.as_ref().unwrap()));
-                }
-                let gtilde =
-                    matmul(&matmul(st.pl.as_ref().unwrap(), g), st.pr.as_ref().unwrap());
-                grafted_update(p, g, &gtilde, &mut st.mom, &mut st.gmom, ctx, hyper, false);
-            } else {
-                grafted_update(p, g, g, &mut st.mom, &mut st.gmom, ctx, hyper, false);
-            }
+            refresh_layer(p, method, st, g, ctx.update_precond);
+            apply_layer(p, st, param, g, ctx);
         };
         let dims = self.layers.iter().flat_map(|s| [s.lstat.as_ref(), s.rstat.as_ref()]);
         let serial = ctx.update_precond && max_dim(dims) >= INNER_PAR_DIM;
@@ -137,6 +176,62 @@ impl Optimizer for Shampoo {
         }
         out
     }
+
+    fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    fn refresh_flops(&self, layer: usize) -> f64 {
+        let st = &self.layers[layer];
+        let (Some(l), Some(r)) = (&st.lstat, &st.rstat) else { return 0.0 };
+        let (m, n) = (l.rows as f64, r.rows as f64);
+        let mn = st.mom.data.len() as f64; // m*n
+        // grams (2 m^2 n + 2 n^2 m) + Newton roots (~8 GEMMs/iter per side)
+        2.0 * m * mn + 2.0 * n * mn + 8.0 * self.p.newton_iters as f64 * (m * m * m + n * n * n)
+    }
+
+    fn refresh_layers(&mut self, layers: &[usize], grads: &[Matrix], update_precond: bool) {
+        let p = self.p;
+        let method = self.root_method;
+        for &li in layers {
+            refresh_layer(p, method, &mut self.layers[li], &grads[li], update_precond);
+        }
+    }
+
+    fn apply_update(&mut self, params: &mut [Matrix], grads: &[Matrix], ctx: StepCtx) {
+        assert_eq!(params.len(), self.layers.len());
+        let p = self.p;
+        let body = |li: usize, param: &mut Matrix, st: &mut LayerState| {
+            apply_layer(p, st, param, &grads[li], ctx);
+        };
+        for_each_layer(params, &mut self.layers, false, body);
+    }
+
+    fn export_preconditioners(&self, layers: &[usize]) -> Vec<f32> {
+        let mut out = Vec::new();
+        for &li in layers {
+            let st = &self.layers[li];
+            if let (Some(pl), Some(pr)) = (&st.pl, &st.pr) {
+                out.extend_from_slice(&pl.data);
+                out.extend_from_slice(&pr.data);
+            }
+        }
+        out
+    }
+
+    fn import_preconditioners(&mut self, layers: &[usize], data: &[f32]) -> usize {
+        let mut off = 0;
+        for &li in layers {
+            let st = &mut self.layers[li];
+            if let (Some(pl), Some(pr)) = (&mut st.pl, &mut st.pr) {
+                pl.data.copy_from_slice(&data[off..off + pl.data.len()]);
+                off += pl.data.len();
+                pr.data.copy_from_slice(&data[off..off + pr.data.len()]);
+                off += pr.data.len();
+            }
+        }
+        off
+    }
 }
 
 #[cfg(test)]
@@ -161,6 +256,20 @@ mod tests {
         assert_eq!(opt.layers[0].pl.as_ref().unwrap(), &pl0); // stale
         opt.step(&mut p, &g, ctx(0.1, 0.0, true));
         assert!(opt.layers[0].pl.as_ref().unwrap().max_abs_diff(&pl0) > 0.0);
+    }
+
+    #[test]
+    fn refresh_accumulates_stats_on_skip_steps_too() {
+        // the sharded path calls refresh_layers every step; Shampoo's
+        // stat EMA must advance even when roots are not recomputed
+        let mut rng = Rng::new(7);
+        let g = vec![Matrix::randn(6, 4, 0.5, &mut rng)];
+        let mut opt = Shampoo::new(&[(6, 4)], Hyper::default());
+        let s0 = opt.layers[0].lstat.clone().unwrap();
+        let pl0 = opt.layers[0].pl.clone().unwrap();
+        opt.refresh_layers(&[0], &g, false);
+        assert!(opt.layers[0].lstat.as_ref().unwrap().max_abs_diff(&s0) > 0.0);
+        assert_eq!(opt.layers[0].pl.as_ref().unwrap(), &pl0);
     }
 
     #[test]

@@ -187,6 +187,65 @@ pub fn project_dist_shampoo_iteration(
     IterProjection { fwd_bwd_s: fwd_bwd_anchor_s, optimizer_s: opt_t, comm_s }
 }
 
+/// Projection of the coordinator's own sharded scheme
+/// (`shampoo_sharded` / `jorge_sharded`): preconditioner refresh work is
+/// owner-computes across `gpus` (FLOP-balanced, so ~1/gpus each), the
+/// refreshed preconditioners are all-gathered, and every worker runs the
+/// preconditioning GEMMs + elementwise apply on its own replica.
+/// `opt` must be a second-order kind.
+pub fn project_sharded_iteration(
+    gpu: &GpuModel,
+    comm: &CommCostModel,
+    net: &NetworkInventory,
+    opt: OptKind,
+    precond_every: usize,
+    fwd_bwd_anchor_s: f64,
+    gpus: usize,
+) -> IterProjection {
+    assert!(
+        matches!(opt, OptKind::Shampoo | OptKind::Jorge),
+        "sharded projection is for second-order optimizers, got {}",
+        opt.name()
+    );
+    let every = precond_every.max(1) as f64;
+    let shards = gpus.max(1) as f64;
+    let pcount = net.param_count();
+    let mut opt_t = gpu.elementwise_time(3 * pcount); // mom/gmom/params
+    let mut refresh_t = 0.0; // owner-computes: divided by gpus
+    let mut gather_bytes = 0usize;
+    for l in &net.layers {
+        if !l.preconditioned() {
+            continue;
+        }
+        let (m, n) = (l.m, l.n);
+        // preconditioning every step, on every replica: (LG)R
+        opt_t += gpu.gemm_time(m, m, n) + gpu.gemm_time(m, n, n);
+        match opt {
+            OptKind::Shampoo => {
+                // stats EMA runs on the owner every step
+                refresh_t += (gpu.gemm_time(m, n, m)
+                    + gpu.gemm_time(n, m, n)
+                    + gpu.elementwise_time(m * m + n * n))
+                    * every;
+                refresh_t += gpu.syevd_time(m) + gpu.syevd_time(n);
+            }
+            OptKind::Jorge => {
+                // grams + truncated-binomial update, only on update steps
+                refresh_t += gpu.gemm_time(m, n, m) + 5.0 * gpu.gemm_time(m, m, m)
+                    + gpu.elementwise_time(m * m);
+                refresh_t += gpu.gemm_time(n, m, n) + 5.0 * gpu.gemm_time(n, n, n)
+                    + gpu.elementwise_time(n * n);
+            }
+            _ => unreachable!(),
+        }
+        gather_bytes += 4 * (m * m + n * n);
+    }
+    opt_t += refresh_t / shards / every;
+    let comm_s = comm.ring_all_reduce_time(4 * pcount, gpus)
+        + comm.all_gather_time(gather_bytes, gpus) / every;
+    IterProjection { fwd_bwd_s: fwd_bwd_anchor_s, optimizer_s: opt_t, comm_s }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -251,6 +310,36 @@ mod tests {
         let jorge = project_iteration(&g, &c, &net, OptKind::Jorge, 50, 0.085, 16).total();
         assert!(dist < serial);
         assert!(jorge <= dist * 1.02, "jorge {jorge} vs dist {dist}");
+    }
+
+    #[test]
+    fn sharded_shampoo_faster_than_serial_but_pays_gather_traffic() {
+        let (g, c) = table1_setup();
+        let net = resnet50().blocked(1024);
+        let serial = project_iteration(&g, &c, &net, OptKind::Shampoo, 50, 0.085, 16);
+        let sharded = project_sharded_iteration(&g, &c, &net, OptKind::Shampoo, 50, 0.085, 16);
+        assert!(sharded.total() < serial.total(), "{} !< {}", sharded.total(), serial.total());
+        // the all-gather of refreshed roots is charged on top of the
+        // gradient all-reduce
+        assert!(sharded.comm_s > serial.comm_s, "{} !> {}", sharded.comm_s, serial.comm_s);
+    }
+
+    #[test]
+    fn sharded_jorge_cuts_refresh_cost_and_pays_gather_traffic() {
+        let (g, c) = table1_setup();
+        let net = resnet50().blocked(1024);
+        let serial = project_iteration(&g, &c, &net, OptKind::Jorge, 50, 0.085, 16);
+        let sharded = project_sharded_iteration(&g, &c, &net, OptKind::Jorge, 50, 0.085, 16);
+        assert!(sharded.optimizer_s < serial.optimizer_s);
+        assert!(sharded.comm_s > serial.comm_s);
+    }
+
+    #[test]
+    #[should_panic(expected = "second-order")]
+    fn sharded_projection_rejects_first_order() {
+        let (g, c) = table1_setup();
+        let net = resnet50().blocked(1024);
+        project_sharded_iteration(&g, &c, &net, OptKind::Sgd, 50, 0.085, 16);
     }
 
     #[test]

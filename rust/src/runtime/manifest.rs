@@ -1,6 +1,7 @@
 //! Typed view of `artifacts/manifest.json` (written by `aot.py`).
 
 use crate::jsonio::Json;
+use crate::optim::OptimizerKind;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -251,19 +252,23 @@ impl Manifest {
     }
 
     /// Train artifact name for (model, optimizer, update_precond).
-    pub fn train_name(model: &str, opt: &str, update_precond: bool) -> String {
-        if update_precond || !matches!(opt, "shampoo" | "jorge") {
-            format!("train_{model}_{opt}")
+    /// Sharded variants reuse the serial artifacts — sharding changes who
+    /// refreshes, not what the kernel computes.
+    pub fn train_name(model: &str, opt: OptimizerKind, update_precond: bool) -> String {
+        let base = opt.base_name();
+        if update_precond || !opt.has_skip() {
+            format!("train_{model}_{base}")
         } else {
-            format!("train_{model}_{opt}_skip")
+            format!("train_{model}_{base}_skip")
         }
     }
 
-    pub fn apply_name(model: &str, opt: &str, update_precond: bool) -> String {
-        if update_precond || !matches!(opt, "shampoo" | "jorge") {
-            format!("apply_{model}_{opt}")
+    pub fn apply_name(model: &str, opt: OptimizerKind, update_precond: bool) -> String {
+        let base = opt.base_name();
+        if update_precond || !opt.has_skip() {
+            format!("apply_{model}_{base}")
         } else {
-            format!("apply_{model}_{opt}_skip")
+            format!("apply_{model}_{base}_skip")
         }
     }
 }
@@ -305,10 +310,22 @@ mod tests {
 
     #[test]
     fn train_and_apply_names() {
-        assert_eq!(Manifest::train_name("mlp", "sgd", false), "train_mlp_sgd");
-        assert_eq!(Manifest::train_name("mlp", "jorge", true), "train_mlp_jorge");
-        assert_eq!(Manifest::train_name("mlp", "jorge", false), "train_mlp_jorge_skip");
-        assert_eq!(Manifest::apply_name("cnn", "shampoo", false), "apply_cnn_shampoo_skip");
+        assert_eq!(Manifest::train_name("mlp", OptimizerKind::SGD, false), "train_mlp_sgd");
+        assert_eq!(Manifest::train_name("mlp", OptimizerKind::JORGE, true), "train_mlp_jorge");
+        assert_eq!(Manifest::train_name("mlp", OptimizerKind::JORGE, false), "train_mlp_jorge_skip");
+        assert_eq!(
+            Manifest::apply_name("cnn", OptimizerKind::SHAMPOO, false),
+            "apply_cnn_shampoo_skip"
+        );
+        // Sharded kinds map onto the serial artifact set.
+        assert_eq!(
+            Manifest::train_name("mlp", OptimizerKind::JORGE_SHARDED, false),
+            "train_mlp_jorge_skip"
+        );
+        assert_eq!(
+            Manifest::apply_name("mlp", OptimizerKind::SHAMPOO_SHARDED, true),
+            "apply_mlp_shampoo"
+        );
     }
 
     #[test]

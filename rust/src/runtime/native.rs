@@ -262,7 +262,8 @@ fn apply_optimizer(
     update_precond: bool,
 ) -> Result<Vec<HostTensor>> {
     let shapes: Vec<(usize, usize)> = params.iter().map(|p| (p.rows, p.cols)).collect();
-    let mut opt = optim::build(opt_name, &shapes, hyper).map_err(|e| anyhow!(e))?;
+    let kind: optim::OptimizerKind = opt_name.parse().map_err(|e: String| anyhow!(e))?;
+    let mut opt = optim::build(kind, &shapes, hyper);
     let has_counter = opt_name == "adamw";
     let nslots = state_in.len() - usize::from(has_counter);
     {
@@ -702,7 +703,7 @@ mod tests {
     fn adamw_counter_round_trips() {
         // two apply steps through the stateless interface must equal two
         // steps of a live AdamW mirror (bias correction depends on t).
-        use crate::optim::{build, Optimizer};
+        use crate::optim::{build, Optimizer, OptimizerKind};
         let b = backend();
         let step = b.load("apply_mlp_adamw").unwrap();
         let spec = step.spec().clone();
@@ -725,7 +726,7 @@ mod tests {
             .filter(|s| s.role == Role::Param)
             .map(|s| (s.shape[0], s.shape.get(1).copied().unwrap_or(1)))
             .collect();
-        let mut mirror = build("adamw", &shapes, Hyper::default()).unwrap();
+        let mut mirror = build(OptimizerKind::ADAMW, &shapes, Hyper::default());
         let mut mirror_params: Vec<Matrix> = inputs
             .iter()
             .zip(&spec.inputs)

@@ -62,7 +62,7 @@ fn check_apply_matches_mirror(eng: &dyn ExecBackend, opt_name: &str, steps: usiz
         .map(|(m, s)| HostTensor::from_f32(s.shape.clone(), m.data.clone()))
         .collect();
 
-    let mut mirror = build(opt_name, &shapes, Hyper::default()).unwrap();
+    let mut mirror = build(opt_name.parse().unwrap(), &shapes, Hyper::default());
     let mut mirror_params = params0.clone();
 
     let mut grad_rng = Rng::new(99);

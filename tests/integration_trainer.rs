@@ -18,7 +18,7 @@ fn backend() -> Arc<dyn ExecBackend> {
 fn tiny_cfg(opt: &str, workers: usize) -> TrainConfig {
     TrainConfig {
         model: "mlp".into(),
-        optimizer: opt.into(),
+        optimizer: opt.parse().unwrap(),
         epochs: 2,
         steps_per_epoch: 8,
         lr: 0.01,

@@ -294,7 +294,7 @@ fn prop_all_optimizers_keep_params_finite() {
     check("optims-finite", cfg(24), &gen, |&(m, n)| {
         let shapes = [(m, n), (n.max(1), 1)];
         for opt_name in ["sgd", "adamw", "shampoo", "jorge"] {
-            let mut opt = build(opt_name, &shapes, Hyper::default()).unwrap();
+            let mut opt = build(opt_name.parse().unwrap(), &shapes, Hyper::default());
             let mut rng = Rng::new((m * 100 + n) as u64);
             let mut params: Vec<Matrix> = shapes
                 .iter()
@@ -331,7 +331,7 @@ fn prop_grafting_magnitude_equals_sgd_on_first_step() {
         let params0: Vec<Matrix> = vec![Matrix::randn(m, n, 1.0, &mut rng)];
         let grads: Vec<Matrix> = vec![Matrix::randn(m, n, 0.2, &mut rng)];
         for opt_name in ["shampoo", "jorge"] {
-            let mut opt = build(opt_name, &shapes, Hyper::default()).unwrap();
+            let mut opt = build(opt_name.parse().unwrap(), &shapes, Hyper::default());
             let mut params = params0.clone();
             opt.step(
                 &mut params,

@@ -1,0 +1,127 @@
+//! Sharded-optimizer coordinator tests: the trajectory contract (bitwise
+//! identity to the serial optimizers at any worker count), the
+//! owner-computes partition, and the all-gather telemetry.
+
+use jorge::config::{ScheduleKind, ShardPolicy, TrainConfig};
+use jorge::coordinator::{assign_owners, Trainer};
+use jorge::runtime::{ExecBackend, NativeBackend};
+use std::sync::Arc;
+
+fn backend() -> Arc<dyn ExecBackend> {
+    Arc::new(NativeBackend::new())
+}
+
+fn cfg(opt: &str, workers: usize) -> TrainConfig {
+    TrainConfig {
+        model: "mlp".into(),
+        optimizer: opt.parse().unwrap(),
+        epochs: 2,
+        steps_per_epoch: 6,
+        lr: 0.01,
+        weight_decay: 1e-4,
+        schedule: ScheduleKind::Constant,
+        precond_every: 2,
+        seed: 91,
+        workers,
+        dataset_size: 64 * 6 * workers.max(1) * 2,
+        eval_every_epochs: 1000,
+        backend: "native".into(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn sharded_is_bitwise_identical_to_serial() {
+    // Sharding moves refresh work between workers, never the math: for
+    // every worker count the sharded run must land on exactly the floats
+    // the serial optimizer produces.
+    let eng = backend();
+    for opt in ["shampoo", "jorge"] {
+        for workers in [1usize, 2, 4, 7] {
+            let mut serial = cfg(opt, workers);
+            serial.native = workers > 1; // same apply path as the sharded run
+            let rs = Trainer::new(serial, eng.clone()).unwrap().run().unwrap();
+            let rx = Trainer::new(cfg(&format!("{opt}_sharded"), workers), eng.clone())
+                .unwrap()
+                .run()
+                .unwrap();
+            assert_eq!(rs.step_losses, rx.step_losses, "{opt} x{workers} losses diverged");
+            for (a, b) in rs.epochs.iter().zip(&rx.epochs) {
+                assert_eq!(
+                    a.val_metric.to_bits(),
+                    b.val_metric.to_bits(),
+                    "{opt} x{workers} val diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn refreshes_are_partitioned_across_workers() {
+    let eng = backend();
+    let r = Trainer::new(cfg("jorge_sharded", 4), eng).unwrap().run().unwrap();
+    let sh = r.shard.expect("sharded run must produce a ShardReport");
+    assert_eq!(sh.workers, 4);
+    assert_eq!(sh.owned_layers.len(), 4);
+
+    // mlp has exactly 3 preconditioned layers (the weight matrices);
+    // biases carry no preconditioner and stay unowned
+    let total_owned: usize = sh.owned_layers.iter().map(|l| l.len()).sum();
+    assert_eq!(total_owned, 3);
+    // each worker owns a strict subset, spread over >= 2 workers
+    assert!(sh.owned_layers.iter().all(|l| l.len() < total_owned));
+    assert!(sh.owned_layers.iter().filter(|l| !l.is_empty()).count() >= 2);
+    // ownership is disjoint
+    let mut all = sh.owned_layers.concat();
+    all.sort_unstable();
+    all.dedup();
+    assert_eq!(all.len(), total_owned);
+
+    // 12 steps at precond_every = 2 => 6 update steps; one all-gather
+    // each, and every preconditioned layer refreshed exactly once per
+    let update_steps = (0..r.step_losses.len()).filter(|s| s % 2 == 0).count();
+    assert_eq!(sh.allgather_calls, update_steps);
+    assert_eq!(sh.refresh_events.iter().sum::<usize>(), total_owned * update_steps);
+    assert!(sh.allgather_floats > 0);
+    assert!(sh.modeled_comm_s > 0.0, "all-gather traffic must be charged to the cost model");
+}
+
+#[test]
+fn workers_one_downgrades_to_serial() {
+    // nothing to shard on a single worker: the trainer logs a note and
+    // runs the serial base optimizer
+    let eng = backend();
+    let r = Trainer::new(cfg("shampoo_sharded", 1), eng.clone()).unwrap().run().unwrap();
+    assert!(r.shard.is_none());
+    assert_eq!(r.optimizer, "shampoo");
+    // serial kinds never report sharding telemetry
+    let r2 = Trainer::new(cfg("jorge", 2), eng).unwrap().run().unwrap();
+    assert!(r2.shard.is_none());
+}
+
+#[test]
+fn shard_policy_changes_ownership_not_trajectory() {
+    let eng = backend();
+    let r1 = Trainer::new(cfg("jorge_sharded", 2), eng.clone()).unwrap().run().unwrap();
+    let mut c = cfg("jorge_sharded", 2);
+    c.shard_policy = ShardPolicy::RoundRobin;
+    let r2 = Trainer::new(c, eng).unwrap().run().unwrap();
+    assert_eq!(r1.step_losses, r2.step_losses);
+}
+
+#[test]
+fn owner_assignment_is_balanced_and_deterministic() {
+    let costs = [8.0, 0.0, 5.0, 4.0, 3.0];
+    let a = assign_owners(&costs, 2, ShardPolicy::Flops);
+    assert_eq!(a, assign_owners(&costs, 2, ShardPolicy::Flops));
+    // LPT trace: 8 -> w0; 5 -> w1; 4 -> w1 (load 5 < 8); 3 -> w0
+    assert_eq!(a, vec![Some(0), None, Some(1), Some(1), Some(0)]);
+    // round-robin deals preconditioned layers in index order
+    let rr = assign_owners(&costs, 3, ShardPolicy::RoundRobin);
+    assert_eq!(rr, vec![Some(0), None, Some(1), Some(2), Some(0)]);
+    // a single worker owns every preconditioned layer
+    let one = assign_owners(&costs, 1, ShardPolicy::Flops);
+    assert!(one.iter().enumerate().all(|(i, o)| (costs[i] == 0.0) == o.is_none()));
+    assert!(one.iter().flatten().all(|&w| w == 0));
+}
