@@ -1,4 +1,4 @@
-//! Simulated multi-GPU collectives (substrate).
+//! Simulated multi-GPU collectives (substrate) with fault injection.
 //!
 //! The paper's distributed comparison (Fig. 2: serial Shampoo vs
 //! Distributed Shampoo vs per-GPU Jorge) needs gradient all-reduce and
@@ -6,21 +6,106 @@
 //! the *algorithms* are the real ring/tree schedules, and a latency/
 //! bandwidth cost model reports what each collective would cost on the
 //! paper's testbed (NVLink-connected A100s).
+//!
+//! Entry points return a typed [`CollectiveError`] instead of asserting,
+//! and a deterministic seeded [`FaultPlan`] (env/CLI-configurable) can
+//! drop a worker, delay it (straggler, with modeled retry/backoff), or
+//! corrupt its buffer at a chosen training step. Faults are strictly
+//! opt-in: with no plan the collectives are byte-for-byte the plain
+//! schedules.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
+use std::fmt;
+
+use crate::rngx::Rng;
+
+// ---------------------------------------------------------------------------
+// Typed errors
+// ---------------------------------------------------------------------------
+
+/// Which collective a fault targets (and where an error surfaced).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultOp {
+    /// The per-step gradient ring all-reduce.
+    GradReduce,
+    /// The sharded-preconditioner ring all-gather.
+    PrecondGather,
+}
+
+impl fmt::Display for FaultOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultOp::GradReduce => write!(f, "grad"),
+            FaultOp::PrecondGather => write!(f, "precond"),
+        }
+    }
+}
+
+/// Typed failure modes of the collectives substrate. Implements
+/// `std::error::Error`, so `?` lifts it into `anyhow::Result` at the
+/// coordinator layer.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CollectiveError {
+    /// Buffers that must be uniform length were ragged.
+    Ragged { op: &'static str, lens: Vec<usize> },
+    /// Broadcast root outside the worker set.
+    RootOutOfRange { root: usize, world: usize },
+    /// A worker left the collective (injected drop); the rank is dead
+    /// for the rest of the run and survivors must re-form the ring.
+    WorkerDropped { rank: usize, step: usize, op: FaultOp },
+    /// A straggler exhausted the retry budget; treated like a drop.
+    Timeout { rank: usize, step: usize, op: FaultOp, attempts: u32 },
+}
+
+impl fmt::Display for CollectiveError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CollectiveError::Ragged { op, lens } => {
+                write!(f, "ragged {op} buffers: lens {lens:?}")
+            }
+            CollectiveError::RootOutOfRange { root, world } => {
+                write!(f, "broadcast root {root} out of range for world size {world}")
+            }
+            CollectiveError::WorkerDropped { rank, step, op } => {
+                write!(f, "worker r{rank} dropped during {op} collective at step {step}")
+            }
+            CollectiveError::Timeout { rank, step, op, attempts } => {
+                write!(
+                    f,
+                    "worker r{rank} timed out during {op} collective at step {step} \
+                     after {attempts} attempts"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for CollectiveError {}
+
+fn check_uniform(buffers: &[Vec<f32>], op: &'static str) -> Result<usize, CollectiveError> {
+    let len = buffers.first().map_or(0, Vec::len);
+    if buffers.iter().any(|b| b.len() != len) {
+        return Err(CollectiveError::Ragged {
+            op,
+            lens: buffers.iter().map(Vec::len).collect(),
+        });
+    }
+    Ok(len)
+}
+
+// ---------------------------------------------------------------------------
+// Core schedules
+// ---------------------------------------------------------------------------
 
 /// In-place sum-all-reduce over per-worker buffers, ring algorithm:
 /// 2(N-1) chunk steps — reduce-scatter then all-gather. All buffers end
-/// with the elementwise sum.
-pub fn ring_all_reduce(buffers: &mut [Vec<f32>]) {
+/// with the elementwise sum. Empty worker sets and single ranks are
+/// no-ops; ragged buffers are a typed error (buffers untouched).
+pub fn ring_all_reduce(buffers: &mut [Vec<f32>]) -> Result<(), CollectiveError> {
     let n = buffers.len();
-    if n <= 1 {
-        return;
-    }
-    let len = buffers[0].len();
-    for b in buffers.iter() {
-        assert_eq!(b.len(), len, "ragged all-reduce buffers");
-    }
-    if len == 0 {
-        return;
+    let len = check_uniform(buffers, "all-reduce")?;
+    if n <= 1 || len == 0 {
+        return Ok(());
     }
     // chunk boundaries (n chunks, last absorbs remainder)
     let chunk = len.div_ceil(n);
@@ -60,17 +145,15 @@ pub fn ring_all_reduce(buffers: &mut [Vec<f32>]) {
             b[lo..hi].copy_from_slice(&a[lo..hi]);
         }
     }
+    Ok(())
 }
 
 /// Recursive-halving tree all-reduce (log2 N rounds + broadcast).
-pub fn tree_all_reduce(buffers: &mut [Vec<f32>]) {
+pub fn tree_all_reduce(buffers: &mut [Vec<f32>]) -> Result<(), CollectiveError> {
     let n = buffers.len();
+    let len = check_uniform(buffers, "all-reduce")?;
     if n <= 1 {
-        return;
-    }
-    let len = buffers[0].len();
-    for b in buffers.iter() {
-        assert_eq!(b.len(), len, "ragged all-reduce buffers");
+        return Ok(());
     }
     // reduce up the tree to rank 0
     let mut stride = 1;
@@ -90,6 +173,7 @@ pub fn tree_all_reduce(buffers: &mut [Vec<f32>]) {
     for b in buffers.iter_mut().skip(1) {
         b.copy_from_slice(&root);
     }
+    Ok(())
 }
 
 /// Ragged ring all-gather: rank `r` contributes `chunks[r]` and every
@@ -97,7 +181,9 @@ pub fn tree_all_reduce(buffers: &mut [Vec<f32>]) {
 /// sharded-preconditioner exchange: each owner contributes the
 /// preconditioners it refreshed). n-1 forwarding steps; at step `s`,
 /// rank `r` forwards chunk `(r + n - s) % n` — the one it received the
-/// previous step — to rank `r + 1`.
+/// previous step — to rank `r + 1`. Ragged chunks are the point, so
+/// this collective has no failure mode of its own; faults are injected
+/// through [`FaultSession::all_gather`].
 pub fn ring_all_gather(chunks: &[Vec<f32>]) -> Vec<Vec<f32>> {
     let n = chunks.len();
     let mut offsets = Vec::with_capacity(n + 1);
@@ -131,16 +217,18 @@ pub fn ring_all_gather(chunks: &[Vec<f32>]) -> Vec<Vec<f32>> {
 
 /// Binomial-tree broadcast from `root`: after ceil(log2 n) rounds every
 /// buffer equals `buffers[root]`.
-pub fn tree_broadcast(buffers: &mut [Vec<f32>], root: usize) {
+pub fn tree_broadcast(buffers: &mut [Vec<f32>], root: usize) -> Result<(), CollectiveError> {
     let n = buffers.len();
     if n <= 1 {
-        return;
+        if root >= n.max(1) {
+            return Err(CollectiveError::RootOutOfRange { root, world: n });
+        }
+        return Ok(());
     }
-    assert!(root < n, "broadcast root {root} out of range");
-    let len = buffers[root].len();
-    for b in buffers.iter() {
-        assert_eq!(b.len(), len, "ragged broadcast buffers");
+    if root >= n {
+        return Err(CollectiveError::RootOutOfRange { root, world: n });
     }
+    check_uniform(buffers, "broadcast")?;
     // relabel so the root is virtual rank 0, then the standard doubling
     // schedule: each round, ranks < stride send to rank + stride
     let mut stride = 1;
@@ -157,27 +245,387 @@ pub fn tree_broadcast(buffers: &mut [Vec<f32>], root: usize) {
         }
         stride *= 2;
     }
+    Ok(())
 }
 
 /// Average instead of sum (DDP gradient semantics).
-pub fn ring_all_reduce_mean(buffers: &mut [Vec<f32>]) {
+pub fn ring_all_reduce_mean(buffers: &mut [Vec<f32>]) -> Result<(), CollectiveError> {
     let n = buffers.len() as f32;
-    ring_all_reduce(buffers);
+    ring_all_reduce(buffers)?;
     for b in buffers.iter_mut() {
         for v in b.iter_mut() {
             *v /= n;
         }
     }
+    Ok(())
 }
 
 fn two_mut(buffers: &mut [Vec<f32>], i: usize, j: usize) -> (&[f32], &mut [f32]) {
-    assert_ne!(i, j);
+    debug_assert_ne!(i, j);
     if i < j {
         let (a, b) = buffers.split_at_mut(j);
         (&a[i], &mut b[0])
     } else {
         let (a, b) = buffers.split_at_mut(i);
         (&b[0], &mut a[j]) // (src=i, dst=j)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection
+// ---------------------------------------------------------------------------
+
+/// What an injected fault does to its target rank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The rank leaves the job permanently.
+    Drop,
+    /// Straggler: the collective is retried `attempts` times (modeled
+    /// exponential backoff) before succeeding — or timing out if the
+    /// retry budget is exhausted.
+    Delay { attempts: u32 },
+    /// The rank's contribution is poisoned with NaNs at seeded
+    /// positions before the collective runs (silent data corruption —
+    /// the numerical guardrails downstream must catch it).
+    Corrupt,
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultKind::Drop => write!(f, "drop"),
+            FaultKind::Delay { attempts } => write!(f, "delay(x{attempts})"),
+            FaultKind::Corrupt => write!(f, "corrupt"),
+        }
+    }
+}
+
+/// One scheduled fault: at global training step `step`, rank `rank`
+/// misbehaves during collective `op`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub step: usize,
+    pub rank: usize,
+    pub op: FaultOp,
+    pub kind: FaultKind,
+}
+
+/// A deterministic, seeded schedule of fault events.
+///
+/// Spec grammar (events separated by `;` or `,`):
+///
+/// ```text
+/// kind@step:rank[:op][:xN]
+/// kind = drop | delay | corrupt
+/// rank = r3 or 3
+/// op   = grad (default) | precond
+/// xN   = delay retry count (delay only, default x1)
+/// ```
+///
+/// e.g. `drop@3:r1:precond`, `delay@5:r0:grad:x2`, `corrupt@2:r1`.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse a fault spec; `Err` carries a human-readable reason.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, String> {
+        let mut events = Vec::new();
+        for raw in spec.split([';', ',']) {
+            let tok = raw.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let (kind_s, rest) = tok
+                .split_once('@')
+                .ok_or_else(|| format!("fault `{tok}`: expected kind@step:rank[:op][:xN]"))?;
+            let mut parts = rest.split(':');
+            let step: usize = parts
+                .next()
+                .ok_or_else(|| format!("fault `{tok}`: missing step"))?
+                .trim()
+                .parse()
+                .map_err(|_| format!("fault `{tok}`: bad step"))?;
+            let rank_s = parts.next().ok_or_else(|| format!("fault `{tok}`: missing rank"))?;
+            let rank: usize = rank_s
+                .trim()
+                .trim_start_matches('r')
+                .parse()
+                .map_err(|_| format!("fault `{tok}`: bad rank `{rank_s}`"))?;
+            let mut op = FaultOp::GradReduce;
+            let mut attempts: u32 = 1;
+            for extra in parts {
+                let extra = extra.trim();
+                match extra {
+                    "grad" => op = FaultOp::GradReduce,
+                    "precond" => op = FaultOp::PrecondGather,
+                    _ if extra.starts_with('x') => {
+                        attempts = extra[1..]
+                            .parse()
+                            .map_err(|_| format!("fault `{tok}`: bad retry count `{extra}`"))?;
+                    }
+                    _ => return Err(format!("fault `{tok}`: unknown field `{extra}`")),
+                }
+            }
+            let kind = match kind_s.trim() {
+                "drop" => FaultKind::Drop,
+                "delay" => FaultKind::Delay { attempts },
+                "corrupt" => FaultKind::Corrupt,
+                other => return Err(format!("fault `{tok}`: unknown kind `{other}`")),
+            };
+            events.push(FaultEvent { step, rank, op, kind });
+        }
+        Ok(FaultPlan { events, seed })
+    }
+
+    /// Read `JORGE_FAULTS` / `JORGE_FAULT_SEED` from the environment.
+    /// Returns `Ok(None)` when unset or empty.
+    pub fn from_env() -> Result<Option<FaultPlan>, String> {
+        let spec = match std::env::var("JORGE_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => s,
+            _ => return Ok(None),
+        };
+        let seed = std::env::var("JORGE_FAULT_SEED")
+            .ok()
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap_or(0);
+        FaultPlan::parse(&spec, seed).map(Some)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Retry/backoff policy for straggler recovery. Backoff is *modeled*
+/// (accounted in seconds, never slept): the simulated collectives run
+/// in-process, so injected delays charge the cost model instead of
+/// wall clock.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    pub max_attempts: u32,
+    pub base_backoff_s: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 3, base_backoff_s: 50e-6 }
+    }
+}
+
+impl RetryPolicy {
+    /// Modeled backoff before retry attempt `i` (0-based): base * 2^i.
+    pub fn backoff_s(&self, attempt: u32) -> f64 {
+        self.base_backoff_s * f64::from(1u32 << attempt.min(20))
+    }
+}
+
+/// What the session actually did about a fault (for telemetry).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultRecord {
+    pub step: usize,
+    pub rank: usize,
+    pub op: FaultOp,
+    pub kind: FaultKind,
+    /// e.g. "dropped", "recovered after 2 retries", "corrupted 8 values"
+    pub action: String,
+}
+
+/// Stateful fault injector wrapping the collectives for one training
+/// run. Owns the plan, the retry policy, per-rank liveness, and the
+/// telemetry log. Deterministic: identical plan + seed ⇒ identical
+/// injected bits and identical recovery sequence.
+#[derive(Debug)]
+pub struct FaultSession {
+    plan: FaultPlan,
+    policy: RetryPolicy,
+    rng: Rng,
+    fired: Vec<bool>,
+    alive: Vec<bool>,
+    records: Vec<FaultRecord>,
+    retries: usize,
+    modeled_backoff_s: f64,
+}
+
+impl FaultSession {
+    pub fn new(plan: FaultPlan, world: usize) -> FaultSession {
+        let rng = Rng::new(plan.seed ^ 0x6a6f_7267_655f_6674); // "jorge_ft"
+        let fired = vec![false; plan.events.len()];
+        FaultSession {
+            plan,
+            policy: RetryPolicy::default(),
+            rng,
+            fired,
+            alive: vec![true; world],
+            records: Vec::new(),
+            retries: 0,
+            modeled_backoff_s: 0.0,
+        }
+    }
+
+    pub fn with_policy(mut self, policy: RetryPolicy) -> FaultSession {
+        self.policy = policy;
+        self
+    }
+
+    pub fn is_alive(&self, rank: usize) -> bool {
+        self.alive.get(rank).copied().unwrap_or(false)
+    }
+
+    pub fn mark_dead(&mut self, rank: usize) {
+        if let Some(a) = self.alive.get_mut(rank) {
+            *a = false;
+        }
+    }
+
+    pub fn live_ranks(&self) -> Vec<usize> {
+        (0..self.alive.len()).filter(|&r| self.alive[r]).collect()
+    }
+
+    pub fn records(&self) -> &[FaultRecord] {
+        &self.records
+    }
+
+    pub fn retries(&self) -> usize {
+        self.retries
+    }
+
+    pub fn modeled_backoff_s(&self) -> f64 {
+        self.modeled_backoff_s
+    }
+
+    /// Next unfired event matching (step, op) whose target is in
+    /// `ranks`, preferring drops so callers see membership changes
+    /// before payload corruption.
+    fn take_event(&mut self, step: usize, op: FaultOp, ranks: &[usize]) -> Option<usize> {
+        let mut pick: Option<usize> = None;
+        for (i, ev) in self.plan.events.iter().enumerate() {
+            if self.fired[i] || ev.step != step || ev.op != op || !ranks.contains(&ev.rank) {
+                continue;
+            }
+            let is_drop = matches!(ev.kind, FaultKind::Drop);
+            match pick {
+                None => pick = Some(i),
+                Some(j) => {
+                    let picked_drop = matches!(self.plan.events[j].kind, FaultKind::Drop);
+                    if is_drop && !picked_drop {
+                        pick = Some(i);
+                    }
+                }
+            }
+        }
+        if let Some(i) = pick {
+            self.fired[i] = true;
+        }
+        pick
+    }
+
+    /// Apply every fault scheduled for (step, op) to `buffers` (one per
+    /// entry of `ranks`, in the same order). Returns `Err` on a drop or
+    /// timeout — buffers are then untouched for drops, and the caller
+    /// must remove the dead rank and retry with the survivors.
+    fn inject(
+        &mut self,
+        step: usize,
+        op: FaultOp,
+        buffers: &mut [Vec<f32>],
+        ranks: &[usize],
+    ) -> Result<(), CollectiveError> {
+        debug_assert_eq!(buffers.len(), ranks.len());
+        while let Some(i) = self.take_event(step, op, ranks) {
+            let ev = self.plan.events[i];
+            match ev.kind {
+                FaultKind::Drop => {
+                    self.mark_dead(ev.rank);
+                    self.records.push(FaultRecord {
+                        step,
+                        rank: ev.rank,
+                        op,
+                        kind: ev.kind,
+                        action: "dropped; survivors re-form the ring".to_string(),
+                    });
+                    return Err(CollectiveError::WorkerDropped { rank: ev.rank, step, op });
+                }
+                FaultKind::Delay { attempts } => {
+                    if attempts >= self.policy.max_attempts {
+                        self.mark_dead(ev.rank);
+                        self.records.push(FaultRecord {
+                            step,
+                            rank: ev.rank,
+                            op,
+                            kind: ev.kind,
+                            action: format!(
+                                "timed out after {} attempts; treated as dropped",
+                                self.policy.max_attempts
+                            ),
+                        });
+                        return Err(CollectiveError::Timeout {
+                            rank: ev.rank,
+                            step,
+                            op,
+                            attempts: self.policy.max_attempts,
+                        });
+                    }
+                    for a in 0..attempts {
+                        self.retries += 1;
+                        self.modeled_backoff_s += self.policy.backoff_s(a);
+                    }
+                    self.records.push(FaultRecord {
+                        step,
+                        rank: ev.rank,
+                        op,
+                        kind: ev.kind,
+                        action: format!("recovered after {attempts} retries"),
+                    });
+                }
+                FaultKind::Corrupt => {
+                    let slot = ranks.iter().position(|&r| r == ev.rank);
+                    let poisoned = slot.map_or(0, |s| {
+                        let buf = &mut buffers[s];
+                        let n = buf.len().min(8);
+                        for _ in 0..n {
+                            let j = self.rng.below(buf.len() as u64) as usize;
+                            buf[j] = f32::NAN;
+                        }
+                        n
+                    });
+                    self.records.push(FaultRecord {
+                        step,
+                        rank: ev.rank,
+                        op,
+                        kind: ev.kind,
+                        action: format!("poisoned {poisoned} values with NaN"),
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Fault-aware gradient all-reduce-mean over the live ranks.
+    /// `ranks[i]` is the original rank owning `buffers[i]`.
+    pub fn all_reduce_mean(
+        &mut self,
+        step: usize,
+        buffers: &mut [Vec<f32>],
+        ranks: &[usize],
+    ) -> Result<(), CollectiveError> {
+        self.inject(step, FaultOp::GradReduce, buffers, ranks)?;
+        ring_all_reduce_mean(buffers)
+    }
+
+    /// Fault-aware ragged all-gather over the live ranks. `ranks[i]`
+    /// owns `chunks[i]`.
+    pub fn all_gather(
+        &mut self,
+        step: usize,
+        chunks: &mut [Vec<f32>],
+        ranks: &[usize],
+    ) -> Result<Vec<Vec<f32>>, CollectiveError> {
+        self.inject(step, FaultOp::PrecondGather, chunks, ranks)?;
+        Ok(ring_all_gather(chunks))
     }
 }
 
@@ -251,6 +699,7 @@ impl CommCostModel {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::rngx::Rng;
@@ -273,7 +722,7 @@ mod tests {
     fn ring_matches_sequential_sum() {
         for &(n, len) in &[(2usize, 10usize), (3, 7), (4, 100), (5, 1), (8, 1000), (7, 13)] {
             let (mut bufs, want) = make_buffers(n, len, n as u64);
-            ring_all_reduce(&mut bufs);
+            ring_all_reduce(&mut bufs).unwrap();
             for (r, b) in bufs.iter().enumerate() {
                 for i in 0..len {
                     assert!(
@@ -291,7 +740,7 @@ mod tests {
     fn tree_matches_sequential_sum() {
         for &(n, len) in &[(2usize, 16usize), (3, 5), (6, 64), (8, 128)] {
             let (mut bufs, want) = make_buffers(n, len, 100 + n as u64);
-            tree_all_reduce(&mut bufs);
+            tree_all_reduce(&mut bufs).unwrap();
             for b in &bufs {
                 for i in 0..len {
                     assert!((b[i] - want[i]).abs() < 1e-3 * want[i].abs().max(1.0));
@@ -303,7 +752,7 @@ mod tests {
     #[test]
     fn mean_divides_by_n() {
         let (mut bufs, want) = make_buffers(4, 32, 9);
-        ring_all_reduce_mean(&mut bufs);
+        ring_all_reduce_mean(&mut bufs).unwrap();
         for b in &bufs {
             for i in 0..32 {
                 assert!((b[i] - want[i] / 4.0).abs() < 1e-4);
@@ -314,14 +763,55 @@ mod tests {
     #[test]
     fn single_rank_is_noop() {
         let mut bufs = vec![vec![1.0f32, 2.0]];
-        ring_all_reduce(&mut bufs);
+        ring_all_reduce(&mut bufs).unwrap();
         assert_eq!(bufs[0], vec![1.0, 2.0]);
     }
 
     #[test]
-    fn empty_buffers_ok() {
+    fn empty_world_and_zero_length_ok() {
+        let mut empty: Vec<Vec<f32>> = vec![];
+        ring_all_reduce(&mut empty).unwrap();
+        tree_all_reduce(&mut empty).unwrap();
         let mut bufs = vec![vec![], vec![]];
-        ring_all_reduce(&mut bufs);
+        ring_all_reduce(&mut bufs).unwrap();
+        tree_all_reduce(&mut bufs).unwrap();
+        ring_all_reduce_mean(&mut bufs).unwrap();
+    }
+
+    #[test]
+    fn ragged_buffers_are_typed_errors() {
+        let mut bufs = vec![vec![1.0f32, 2.0], vec![3.0f32]];
+        let before = bufs.clone();
+        match ring_all_reduce(&mut bufs) {
+            Err(CollectiveError::Ragged { op, lens }) => {
+                assert_eq!(op, "all-reduce");
+                assert_eq!(lens, vec![2, 1]);
+            }
+            other => panic!("expected Ragged, got {other:?}"),
+        }
+        // buffers untouched on error
+        assert_eq!(bufs, before);
+        assert!(matches!(
+            tree_all_reduce(&mut bufs),
+            Err(CollectiveError::Ragged { .. })
+        ));
+        assert!(matches!(
+            tree_broadcast(&mut bufs, 0),
+            Err(CollectiveError::Ragged { .. })
+        ));
+    }
+
+    #[test]
+    fn broadcast_root_out_of_range_is_typed_error() {
+        let mut bufs = vec![vec![1.0f32], vec![2.0f32]];
+        match tree_broadcast(&mut bufs, 5) {
+            Err(CollectiveError::RootOutOfRange { root, world }) => {
+                assert_eq!((root, world), (5, 2));
+            }
+            other => panic!("expected RootOutOfRange, got {other:?}"),
+        }
+        let err = CollectiveError::RootOutOfRange { root: 5, world: 2 };
+        assert!(err.to_string().contains("root 5"));
     }
 
     #[test]
@@ -349,6 +839,161 @@ mod tests {
         let out = ring_all_gather(&[vec![1.0, 2.0, 3.0]]);
         assert_eq!(out, vec![vec![1.0, 2.0, 3.0]]);
         assert!(ring_all_gather(&[]).is_empty());
+    }
+
+    #[test]
+    fn fault_plan_parses_grammar() {
+        let plan =
+            FaultPlan::parse("drop@3:r1:precond; delay@5:r0:grad:x2, corrupt@2:1", 7).unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(
+            plan.events,
+            vec![
+                FaultEvent {
+                    step: 3,
+                    rank: 1,
+                    op: FaultOp::PrecondGather,
+                    kind: FaultKind::Drop
+                },
+                FaultEvent {
+                    step: 5,
+                    rank: 0,
+                    op: FaultOp::GradReduce,
+                    kind: FaultKind::Delay { attempts: 2 }
+                },
+                FaultEvent {
+                    step: 2,
+                    rank: 1,
+                    op: FaultOp::GradReduce,
+                    kind: FaultKind::Corrupt
+                },
+            ]
+        );
+        assert!(FaultPlan::parse("", 0).unwrap().is_empty());
+        assert!(FaultPlan::parse("explode@1:r0", 0).is_err());
+        assert!(FaultPlan::parse("drop@x:r0", 0).is_err());
+        assert!(FaultPlan::parse("drop@1:r0:sideways", 0).is_err());
+    }
+
+    #[test]
+    fn session_drop_errors_then_survivors_reduce() {
+        let plan = FaultPlan::parse("drop@2:r1", 0).unwrap();
+        let mut sess = FaultSession::new(plan, 3);
+        let (mut bufs, want) = make_buffers(3, 16, 5);
+        // steps without a scheduled fault behave exactly like the plain path
+        sess.all_reduce_mean(0, &mut bufs, &[0, 1, 2]).unwrap();
+        for b in &bufs {
+            for i in 0..16 {
+                assert!((b[i] - want[i] / 3.0).abs() < 1e-4);
+            }
+        }
+        // step 2: rank 1 drops; the call reports it and buffers are intact
+        let (mut bufs, _) = make_buffers(3, 16, 6);
+        let before = bufs.clone();
+        match sess.all_reduce_mean(2, &mut bufs, &[0, 1, 2]) {
+            Err(CollectiveError::WorkerDropped { rank: 1, step: 2, op: FaultOp::GradReduce }) => {}
+            other => panic!("expected drop, got {other:?}"),
+        }
+        assert_eq!(bufs, before);
+        assert!(!sess.is_alive(1));
+        assert_eq!(sess.live_ranks(), vec![0, 2]);
+        // survivors retry with the dead rank removed and succeed
+        let mut survivors = vec![bufs[0].clone(), bufs[2].clone()];
+        sess.all_reduce_mean(2, &mut survivors, &[0, 2]).unwrap();
+        let mut want2 = vec![0.0f32; 16];
+        for b in [&before[0], &before[2]] {
+            for (w, v) in want2.iter_mut().zip(b) {
+                *w += v;
+            }
+        }
+        for b in &survivors {
+            for i in 0..16 {
+                assert!((b[i] - want2[i] / 2.0).abs() < 1e-4);
+            }
+        }
+        assert_eq!(sess.records().len(), 1);
+    }
+
+    #[test]
+    fn session_delay_accounts_retries_and_preserves_result() {
+        let plan = FaultPlan::parse("delay@1:r0:grad:x2", 0).unwrap();
+        let mut sess = FaultSession::new(plan, 2);
+        let (mut bufs, want) = make_buffers(2, 8, 11);
+        sess.all_reduce_mean(1, &mut bufs, &[0, 1]).unwrap();
+        for b in &bufs {
+            for i in 0..8 {
+                assert!((b[i] - want[i] / 2.0).abs() < 1e-4);
+            }
+        }
+        assert_eq!(sess.retries(), 2);
+        assert!(sess.modeled_backoff_s() > 0.0);
+        assert!(sess.is_alive(0));
+    }
+
+    #[test]
+    fn session_delay_beyond_budget_times_out() {
+        let plan = FaultPlan::parse("delay@0:r1:grad:x9", 0).unwrap();
+        let mut sess = FaultSession::new(plan, 2);
+        let (mut bufs, _) = make_buffers(2, 8, 12);
+        match sess.all_reduce_mean(0, &mut bufs, &[0, 1]) {
+            Err(CollectiveError::Timeout { rank: 1, step: 0, attempts, .. }) => {
+                assert_eq!(attempts, RetryPolicy::default().max_attempts);
+            }
+            other => panic!("expected timeout, got {other:?}"),
+        }
+        assert!(!sess.is_alive(1));
+    }
+
+    #[test]
+    fn session_corrupt_is_deterministic_and_targeted() {
+        let run = |seed| {
+            let plan = FaultPlan::parse("corrupt@1:r1", seed).unwrap();
+            let mut sess = FaultSession::new(plan, 2);
+            let mut bufs = vec![vec![1.0f32; 32], vec![1.0f32; 32]];
+            // corruption happens before the reduce, so NaN spreads — by design
+            sess.all_reduce_mean(1, &mut bufs, &[0, 1]).unwrap();
+            bufs
+        };
+        let a = run(3);
+        let b = run(3);
+        let c = run(4);
+        assert_eq!(a, b, "same seed must corrupt the same bits");
+        assert!(a[0].iter().any(|v| v.is_nan()), "corruption must propagate through the sum");
+        // different seed picks (almost surely) different positions
+        let nan_at = |bufs: &[Vec<f32>]| -> Vec<usize> {
+            bufs[0].iter().enumerate().filter(|(_, v)| v.is_nan()).map(|(i, _)| i).collect()
+        };
+        assert_ne!(nan_at(&a), nan_at(&c));
+    }
+
+    #[test]
+    fn session_gather_drop_then_survivor_gather() {
+        let plan = FaultPlan::parse("drop@4:r1:precond", 0).unwrap();
+        let mut sess = FaultSession::new(plan, 3);
+        let mut chunks = vec![vec![1.0f32], vec![2.0f32, 2.5], vec![3.0f32]];
+        match sess.all_gather(4, &mut chunks, &[0, 1, 2]) {
+            Err(CollectiveError::WorkerDropped {
+                rank: 1,
+                step: 4,
+                op: FaultOp::PrecondGather,
+            }) => {}
+            other => panic!("expected gather drop, got {other:?}"),
+        }
+        let mut survivors = vec![chunks[0].clone(), chunks[2].clone()];
+        let out = sess.all_gather(4, &mut survivors, &[0, 2]).unwrap();
+        assert_eq!(out, vec![vec![1.0, 3.0], vec![1.0, 3.0]]);
+    }
+
+    #[test]
+    fn no_plan_is_bitwise_plain_path() {
+        let mut sess = FaultSession::new(FaultPlan::default(), 4);
+        let (mut a, _) = make_buffers(4, 64, 21);
+        let mut b = a.clone();
+        sess.all_reduce_mean(0, &mut a, &[0, 1, 2, 3]).unwrap();
+        ring_all_reduce_mean(&mut b).unwrap();
+        assert_eq!(a, b);
+        assert!(sess.records().is_empty());
+        assert_eq!(sess.retries(), 0);
     }
 
     #[test]
@@ -381,7 +1026,7 @@ mod tests {
             for root in [0, n - 1, n / 2] {
                 let mut bufs: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; 6]).collect();
                 let want = bufs[root].clone();
-                tree_broadcast(&mut bufs, root);
+                tree_broadcast(&mut bufs, root).unwrap();
                 for (r, b) in bufs.iter().enumerate() {
                     assert_eq!(b, &want, "n={n} root={root} rank={r}");
                 }

@@ -295,6 +295,21 @@ pub struct TrainConfig {
     pub backend: String,
     pub log_every: usize,
     pub max_steps: usize,
+    /// Fault-injection plan for the collectives substrate, in
+    /// `FaultPlan::parse` grammar (`kind@step:rank[:op][:xN]`, `;`- or
+    /// `,`-separated). Empty = no injection. `JORGE_FAULTS` in the
+    /// environment is the fallback when this is empty.
+    pub faults: String,
+    /// Seed for the fault plan's deterministic corruption positions.
+    pub fault_seed: u64,
+    /// Write a crash-safe checkpoint every N optimizer steps (0 = off).
+    pub checkpoint_every: usize,
+    /// Directory for cadence checkpoints / auto-resume discovery;
+    /// empty = a run-keyed default under `out_dir`.
+    pub checkpoint_dir: String,
+    /// Resume mode: "" (fresh), "auto" (newest valid checkpoint in
+    /// `checkpoint_dir`, skipping corrupt files), or an explicit path.
+    pub resume: String,
 }
 
 impl Default for TrainConfig {
@@ -322,6 +337,11 @@ impl Default for TrainConfig {
             backend: "auto".into(),
             log_every: 10,
             max_steps: usize::MAX,
+            faults: String::new(),
+            fault_seed: 0,
+            checkpoint_every: 0,
+            checkpoint_dir: String::new(),
+            resume: String::new(),
         }
     }
 }
@@ -364,6 +384,11 @@ impl TrainConfig {
             backend: t.str_or("train.backend", &d.backend),
             log_every: t.usize_or("train.log_every", d.log_every),
             max_steps: t.usize_or("train.max_steps", d.max_steps),
+            faults: t.str_or("train.faults", &d.faults),
+            fault_seed: t.usize_or("train.fault_seed", d.fault_seed as usize) as u64,
+            checkpoint_every: t.usize_or("train.checkpoint_every", d.checkpoint_every),
+            checkpoint_dir: t.str_or("paths.checkpoints", &d.checkpoint_dir),
+            resume: t.str_or("train.resume", &d.resume),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -409,6 +434,17 @@ impl TrainConfig {
                 self.shard_policy.name(),
                 self.optimizer
             ));
+        }
+        if !self.faults.is_empty() {
+            // faults only bite where collectives run; a silently inert
+            // plan is an error like the other ignored combinations
+            if self.workers == 1 {
+                return Err(
+                    "faults only apply to the collectives path; set workers > 1".into()
+                );
+            }
+            crate::collectives::FaultPlan::parse(&self.faults, self.fault_seed)
+                .map_err(|e| format!("faults: {e}"))?;
         }
         Ok(())
     }
@@ -548,6 +584,38 @@ artifacts = "artifacts"
         t4.set_override("train.optimizer", "shampoo_sharded").unwrap();
         t4.set_override("train.workers", "1").unwrap();
         assert!(TrainConfig::from_toml(&t4).is_ok());
+    }
+
+    #[test]
+    fn fault_and_checkpoint_fields_parse() {
+        let mut t = Toml::parse(SAMPLE).unwrap();
+        t.set_override("train.faults", "\"drop@3:1:precond\"").unwrap();
+        t.set_override("train.fault_seed", "9").unwrap();
+        t.set_override("train.checkpoint_every", "5").unwrap();
+        t.set_override("train.resume", "\"auto\"").unwrap();
+        t.set_override("paths.checkpoints", "\"/tmp/ck\"").unwrap();
+        let c = TrainConfig::from_toml(&t).unwrap();
+        assert_eq!(c.faults, "drop@3:1:precond");
+        assert_eq!(c.fault_seed, 9);
+        assert_eq!(c.checkpoint_every, 5);
+        assert_eq!(c.resume, "auto");
+        assert_eq!(c.checkpoint_dir, "/tmp/ck");
+    }
+
+    #[test]
+    fn fault_validation_rejects_bad_plans() {
+        // malformed plan grammar is a config error, not a runtime one
+        let mut t = Toml::parse(SAMPLE).unwrap();
+        t.set_override("train.faults", "\"explode@x\"").unwrap();
+        let err = TrainConfig::from_toml(&t).unwrap_err();
+        assert!(err.contains("faults"), "{err}");
+
+        // a plan with no collectives to bite on is silently inert — reject
+        let mut t2 = Toml::parse(SAMPLE).unwrap();
+        t2.set_override("train.faults", "\"drop@3:1\"").unwrap();
+        t2.set_override("train.workers", "1").unwrap();
+        let err = TrainConfig::from_toml(&t2).unwrap_err();
+        assert!(err.contains("workers"), "{err}");
     }
 
     #[test]

@@ -1,132 +1,372 @@
-//! Binary checkpoint format for params + optimizer state.
+//! Crash-safe binary checkpoint format for params + optimizer state.
 //!
-//! Layout: magic "JORGECKPT\x01", u32 tensor count, then per tensor:
-//! u32 name_len, name bytes, u8 dtype (0=f32, 1=i32), u32 ndims,
-//! u64 dims..., raw little-endian data. Round-trips exactly.
+//! Layout (version 2): magic `"JORGECKPT"`, version byte `0x02`, u32
+//! tensor count, then per tensor: u32 name_len, name bytes, u8 dtype
+//! (0=f32, 1=i32), u32 ndims, u64 dims..., raw little-endian data; the
+//! file ends with a CRC32 (IEEE) trailer over every preceding byte.
+//! Version-1 files (`"JORGECKPT\x01"`, no trailer) still load.
+//!
+//! Saves are atomic: the bytes are written to `<path>.tmp`, fsynced,
+//! then renamed over the destination — a crash mid-save leaves either
+//! the old checkpoint or a `.tmp` leftover that discovery ignores,
+//! never a half-written file under the real name. Loads are fully
+//! bounds-checked against the actual file size before any allocation,
+//! and corruption (truncation, bit flips, unknown dtypes) surfaces as a
+//! typed [`CkptError`] instead of a panic or garbage tensors.
 
 use crate::runtime::HostTensor;
-use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
 
-const MAGIC: &[u8; 10] = b"JORGECKPT\x01";
+const MAGIC: &[u8; 9] = b"JORGECKPT";
+const VERSION: u8 = 2;
 
-pub fn save(
-    path: impl AsRef<Path>,
-    tensors: &[(String, &HostTensor)],
-) -> std::io::Result<()> {
-    if let Some(parent) = path.as_ref().parent() {
-        std::fs::create_dir_all(parent)?;
+const MAX_TENSORS: usize = 1_000_000;
+const MAX_NAME_LEN: usize = 4096;
+const MAX_NDIMS: usize = 16;
+const MAX_ELEMS: usize = 1 << 30;
+
+// ---------------------------------------------------------------------------
+// Typed errors
+// ---------------------------------------------------------------------------
+
+/// Typed checkpoint failure. Implements `std::error::Error`, so `?`
+/// lifts it into `anyhow::Result` at the coordinator/CLI layer.
+#[derive(Debug)]
+pub enum CkptError {
+    Io(std::io::Error),
+    /// Not a jorge checkpoint at all.
+    BadMagic,
+    /// A jorge checkpoint from a format this build does not read.
+    UnsupportedVersion(u8),
+    /// The file ends before the field being read.
+    Truncated { context: &'static str },
+    /// CRC32 trailer mismatch — the file was bit-flipped or partially
+    /// overwritten after it was written.
+    Checksum { stored: u32, computed: u32 },
+    /// A header field fails its sanity bound (guards allocations).
+    Implausible { what: &'static str, value: u64 },
+    /// Unknown dtype tag byte.
+    BadDtype(u8),
+    /// Tensor name is not UTF-8.
+    BadName,
+    /// Bytes remain after the last tensor (and before any trailer).
+    TrailingData { bytes: usize },
+}
+
+impl fmt::Display for CkptError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CkptError::Io(e) => write!(f, "checkpoint io: {e}"),
+            CkptError::BadMagic => write!(f, "not a jorge checkpoint (bad magic)"),
+            CkptError::UnsupportedVersion(v) => {
+                write!(f, "unsupported checkpoint version {v} (this build reads 1-{VERSION})")
+            }
+            CkptError::Truncated { context } => {
+                write!(f, "truncated checkpoint: file ends inside {context}")
+            }
+            CkptError::Checksum { stored, computed } => write!(
+                f,
+                "checkpoint checksum mismatch: stored {stored:#010x}, computed {computed:#010x} \
+                 (bit flip or partial write)"
+            ),
+            CkptError::Implausible { what, value } => {
+                write!(f, "implausible checkpoint field: {what} = {value}")
+            }
+            CkptError::BadDtype(tag) => write!(f, "unknown dtype tag {tag}"),
+            CkptError::BadName => write!(f, "tensor name is not valid UTF-8"),
+            CkptError::TrailingData { bytes } => {
+                write!(f, "{bytes} unexpected trailing bytes after the last tensor")
+            }
+        }
     }
-    let mut w = BufWriter::new(File::create(path)?);
-    w.write_all(MAGIC)?;
-    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+}
+
+impl std::error::Error for CkptError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CkptError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CkptError {
+    fn from(e: std::io::Error) -> Self {
+        CkptError::Io(e)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3, reflected, poly 0xEDB88320) — in-tree, no deps
+// ---------------------------------------------------------------------------
+
+fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+pub fn crc32(data: &[u8]) -> u32 {
+    let table = crc32_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = table[((c ^ u32::from(b)) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------------
+// Save (atomic: tmp + fsync + rename)
+// ---------------------------------------------------------------------------
+
+fn encode(tensors: &[(String, &HostTensor)]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.push(VERSION);
+    buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
     for (name, t) in tensors {
-        w.write_all(&(name.len() as u32).to_le_bytes())?;
-        w.write_all(name.as_bytes())?;
+        buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        buf.extend_from_slice(name.as_bytes());
+        let (tag, shape): (u8, &[usize]) = match t {
+            HostTensor::F32 { shape, .. } => (0, shape),
+            HostTensor::I32 { shape, .. } => (1, shape),
+        };
+        buf.push(tag);
+        buf.extend_from_slice(&(shape.len() as u32).to_le_bytes());
+        for &d in shape {
+            buf.extend_from_slice(&(d as u64).to_le_bytes());
+        }
         match t {
-            HostTensor::F32 { shape, data } => {
-                w.write_all(&[0u8])?;
-                w.write_all(&(shape.len() as u32).to_le_bytes())?;
-                for &d in shape {
-                    w.write_all(&(d as u64).to_le_bytes())?;
-                }
+            HostTensor::F32 { data, .. } => {
                 for v in data {
-                    w.write_all(&v.to_le_bytes())?;
+                    buf.extend_from_slice(&v.to_le_bytes());
                 }
             }
-            HostTensor::I32 { shape, data } => {
-                w.write_all(&[1u8])?;
-                w.write_all(&(shape.len() as u32).to_le_bytes())?;
-                for &d in shape {
-                    w.write_all(&(d as u64).to_le_bytes())?;
-                }
+            HostTensor::I32 { data, .. } => {
                 for v in data {
-                    w.write_all(&v.to_le_bytes())?;
+                    buf.extend_from_slice(&v.to_le_bytes());
                 }
             }
         }
     }
-    w.flush()
+    let crc = crc32(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    buf
 }
 
-fn read_u32(r: &mut impl Read) -> std::io::Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-
-fn read_u64(r: &mut impl Read) -> std::io::Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
-}
-
-fn bad(msg: &str) -> std::io::Error {
-    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
-}
-
-pub fn load(path: impl AsRef<Path>) -> std::io::Result<Vec<(String, HostTensor)>> {
-    let mut r = BufReader::new(File::open(path)?);
-    let mut magic = [0u8; 10];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(bad("not a jorge checkpoint (bad magic)"));
+/// Atomically write a checkpoint: serialize, write `<path>.tmp`, fsync,
+/// rename over `path`. The destination is either the complete new file
+/// or whatever was there before — never a torn write.
+pub fn save(path: impl AsRef<Path>, tensors: &[(String, &HostTensor)]) -> Result<(), CkptError> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            fs::create_dir_all(parent)?;
+        }
     }
-    let count = read_u32(&mut r)? as usize;
-    if count > 1_000_000 {
-        return Err(bad("implausible tensor count"));
+    let bytes = encode(tensors);
+    let tmp = {
+        let mut os = path.as_os_str().to_os_string();
+        os.push(".tmp");
+        PathBuf::from(os)
+    };
+    let written = write_atomic(&tmp, path, &bytes);
+    if written.is_err() {
+        fs::remove_file(&tmp).ok();
     }
-    let mut out = Vec::with_capacity(count);
+    written
+}
+
+fn write_atomic(tmp: &Path, path: &Path, bytes: &[u8]) -> Result<(), CkptError> {
+    use std::io::Write;
+    let mut f = fs::File::create(tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    fs::rename(tmp, path)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Load (whole-file slice parser, bounds checked before every allocation)
+// ---------------------------------------------------------------------------
+
+struct Cur<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize, context: &'static str) -> Result<&'a [u8], CkptError> {
+        if self.b.len() < n {
+            return Err(CkptError::Truncated { context });
+        }
+        let (head, tail) = self.b.split_at(n);
+        self.b = tail;
+        Ok(head)
+    }
+
+    fn u8(&mut self, context: &'static str) -> Result<u8, CkptError> {
+        Ok(self.take(1, context)?[0])
+    }
+
+    fn u32(&mut self, context: &'static str) -> Result<u32, CkptError> {
+        let b = self.take(4, context)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, context: &'static str) -> Result<u64, CkptError> {
+        let b = self.take(8, context)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<(String, HostTensor)>, CkptError> {
+    let bytes = fs::read(path)?;
+    if bytes.len() < MAGIC.len() + 1 {
+        return Err(CkptError::Truncated { context: "magic/version header" });
+    }
+    if &bytes[..MAGIC.len()] != MAGIC {
+        return Err(CkptError::BadMagic);
+    }
+    let version = bytes[MAGIC.len()];
+    let body = match version {
+        1 => &bytes[MAGIC.len() + 1..],
+        2 => {
+            // last 4 bytes are the CRC32 of everything before them
+            if bytes.len() < MAGIC.len() + 1 + 4 {
+                return Err(CkptError::Truncated { context: "checksum trailer" });
+            }
+            let split = bytes.len() - 4;
+            let stored = u32::from_le_bytes([
+                bytes[split],
+                bytes[split + 1],
+                bytes[split + 2],
+                bytes[split + 3],
+            ]);
+            let computed = crc32(&bytes[..split]);
+            if stored != computed {
+                return Err(CkptError::Checksum { stored, computed });
+            }
+            &bytes[MAGIC.len() + 1..split]
+        }
+        v => return Err(CkptError::UnsupportedVersion(v)),
+    };
+
+    let mut cur = Cur { b: body };
+    let count = cur.u32("tensor count")? as usize;
+    if count > MAX_TENSORS {
+        return Err(CkptError::Implausible { what: "tensor count", value: count as u64 });
+    }
+    let mut out = Vec::with_capacity(count.min(4096));
     for _ in 0..count {
-        let name_len = read_u32(&mut r)? as usize;
-        if name_len > 4096 {
-            return Err(bad("implausible name length"));
+        let name_len = cur.u32("name length")? as usize;
+        if name_len > MAX_NAME_LEN {
+            return Err(CkptError::Implausible { what: "name length", value: name_len as u64 });
         }
-        let mut name_bytes = vec![0u8; name_len];
-        r.read_exact(&mut name_bytes)?;
-        let name = String::from_utf8(name_bytes).map_err(|_| bad("bad tensor name"))?;
-        let mut dtype = [0u8; 1];
-        r.read_exact(&mut dtype)?;
-        let ndims = read_u32(&mut r)? as usize;
-        if ndims > 16 {
-            return Err(bad("implausible rank"));
+        let name_bytes = cur.take(name_len, "tensor name")?;
+        let name = std::str::from_utf8(name_bytes).map_err(|_| CkptError::BadName)?.to_string();
+        let dtype = cur.u8("dtype tag")?;
+        if dtype > 1 {
+            return Err(CkptError::BadDtype(dtype));
+        }
+        let ndims = cur.u32("rank")? as usize;
+        if ndims > MAX_NDIMS {
+            return Err(CkptError::Implausible { what: "rank", value: ndims as u64 });
         }
         let mut shape = Vec::with_capacity(ndims);
+        let mut n: usize = 1;
         for _ in 0..ndims {
-            shape.push(read_u64(&mut r)? as usize);
+            let d = cur.u64("dimension")?;
+            if d > MAX_ELEMS as u64 {
+                return Err(CkptError::Implausible { what: "dimension", value: d });
+            }
+            let d = d as usize;
+            n = n.saturating_mul(d);
+            shape.push(d);
         }
-        let n: usize = shape.iter().product::<usize>().max(1);
-        if n > 1 << 30 {
-            return Err(bad("implausible tensor size"));
+        if n > MAX_ELEMS {
+            return Err(CkptError::Implausible { what: "tensor elements", value: n as u64 });
         }
-        let t = match dtype[0] {
+        // `take` bounds the payload against the real file size before the
+        // data vector is allocated — no 4 GB allocation on a lying header.
+        let payload = cur.take(4 * n, "tensor data")?;
+        let t = match dtype {
             0 => {
-                let mut data = vec![0f32; n];
-                let mut buf = vec![0u8; 4 * n];
-                r.read_exact(&mut buf)?;
-                for (i, c) in buf.chunks_exact(4).enumerate() {
-                    data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
-                }
+                let data = payload
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
                 HostTensor::F32 { shape, data }
             }
-            1 => {
-                let mut data = vec![0i32; n];
-                let mut buf = vec![0u8; 4 * n];
-                r.read_exact(&mut buf)?;
-                for (i, c) in buf.chunks_exact(4).enumerate() {
-                    data[i] = i32::from_le_bytes([c[0], c[1], c[2], c[3]]);
-                }
+            _ => {
+                let data = payload
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
                 HostTensor::I32 { shape, data }
             }
-            other => return Err(bad(&format!("unknown dtype tag {other}"))),
         };
         out.push((name, t));
+    }
+    if !cur.b.is_empty() {
+        return Err(CkptError::TrailingData { bytes: cur.b.len() });
     }
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// Discovery (checkpoint-directory layout for cadence saves + auto-resume)
+// ---------------------------------------------------------------------------
+
+/// Canonical cadence-save path: `dir/step_XXXXXXXX.ckpt`. Zero-padded so
+/// lexicographic order == step order.
+pub fn step_path(dir: impl AsRef<Path>, step: usize) -> PathBuf {
+    dir.as_ref().join(format!("step_{step:08}.ckpt"))
+}
+
+/// All `*.ckpt` files in `dir`, sorted ascending (== step order for
+/// cadence saves). `.tmp` leftovers from interrupted saves are excluded
+/// by the extension filter.
+pub fn list(dir: impl AsRef<Path>) -> Vec<PathBuf> {
+    let mut out: Vec<PathBuf> = match fs::read_dir(dir) {
+        Ok(rd) => rd
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|e| e == "ckpt"))
+            .collect(),
+        Err(_) => Vec::new(),
+    };
+    out.sort();
+    out
+}
+
+/// Newest checkpoint in `dir` that loads cleanly. Corrupt or truncated
+/// files are reported to stderr and skipped, so auto-resume falls back
+/// to the previous valid checkpoint instead of dying on the newest one.
+pub fn latest_valid(dir: impl AsRef<Path>) -> Option<(PathBuf, Vec<(String, HostTensor)>)> {
+    for p in list(dir).into_iter().rev() {
+        match load(&p) {
+            Ok(tensors) => return Some((p, tensors)),
+            Err(e) => eprintln!("checkpoint: skipping {}: {e}", p.display()),
+        }
+    }
+    None
+}
+
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -151,21 +391,145 @@ mod tests {
     }
 
     #[test]
-    fn rejects_garbage() {
+    fn rejects_garbage_with_bad_magic() {
         let path = tmp("garbage.bin");
         std::fs::write(&path, b"not a checkpoint at all").unwrap();
-        assert!(load(&path).is_err());
+        assert!(matches!(load(&path), Err(CkptError::BadMagic)));
+        std::fs::write(&path, b"JORG").unwrap();
+        assert!(matches!(load(&path), Err(CkptError::Truncated { .. })));
         std::fs::remove_file(path).ok();
     }
 
     #[test]
-    fn rejects_truncated() {
+    fn rejects_truncated_with_typed_error() {
         let a = HostTensor::from_f32(vec![8, 8], vec![0.5; 64]);
         let path = tmp("trunc.bin");
         save(&path, &[("w".into(), &a)]).unwrap();
         let bytes = std::fs::read(&path).unwrap();
-        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
-        assert!(load(&path).is_err());
+        // truncating anywhere must yield a typed error, never garbage
+        for cut in [bytes.len() / 2, 12, bytes.len() - 1] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            match load(&path) {
+                Err(CkptError::Truncated { .. } | CkptError::Checksum { .. }) => {}
+                other => panic!("cut={cut}: expected Truncated/Checksum, got {other:?}"),
+            }
+        }
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_single_bit_flip_via_checksum() {
+        let a = HostTensor::from_f32(vec![4, 4], (0..16).map(|i| i as f32).collect());
+        let path = tmp("flip.bin");
+        save(&path, &[("w".into(), &a)]).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        // flip one bit in the payload region (past the header)
+        let mut dirty = clean.clone();
+        let i = dirty.len() - 10;
+        dirty[i] ^= 0x10;
+        std::fs::write(&path, &dirty).unwrap();
+        assert!(matches!(load(&path), Err(CkptError::Checksum { .. })));
+        // restore => loads again
+        std::fs::write(&path, &clean).unwrap();
+        assert!(load(&path).is_ok());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_unknown_dtype_and_implausible_headers() {
+        let a = HostTensor::from_f32(vec![2], vec![1.0, 2.0]);
+        let path = tmp("hdr.bin");
+        save(&path, &[("w".into(), &a)]).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        // dtype tag sits after count(4) + name_len(4) + name(1)
+        let dtype_off = MAGIC.len() + 1 + 4 + 4 + 1;
+        assert_eq!(clean[dtype_off], 0);
+        let patch = |off: usize, val: &[u8]| {
+            let mut b = clean.clone();
+            b[off..off + val.len()].copy_from_slice(val);
+            // re-seal the CRC so the header error (not the checksum) surfaces
+            let split = b.len() - 4;
+            let crc = crc32(&b[..split]).to_le_bytes();
+            b[split..].copy_from_slice(&crc);
+            b
+        };
+        std::fs::write(&path, patch(dtype_off, &[9])).unwrap();
+        assert!(matches!(load(&path), Err(CkptError::BadDtype(9))));
+        // name_len bound
+        std::fs::write(&path, patch(MAGIC.len() + 1 + 4, &u32::MAX.to_le_bytes())).unwrap();
+        assert!(matches!(load(&path), Err(CkptError::Implausible { .. })));
+        // rank bound
+        std::fs::write(&path, patch(dtype_off + 1, &1000u32.to_le_bytes())).unwrap();
+        assert!(matches!(load(&path), Err(CkptError::Implausible { .. })));
+        // huge dim: bounded before any allocation
+        std::fs::write(&path, patch(dtype_off + 1 + 4, &u64::MAX.to_le_bytes())).unwrap();
+        assert!(matches!(load(&path), Err(CkptError::Implausible { .. })));
+        // unsupported version
+        let mut b = clean.clone();
+        b[MAGIC.len()] = 9;
+        std::fs::write(&path, &b).unwrap();
+        assert!(matches!(load(&path), Err(CkptError::UnsupportedVersion(9))));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn legacy_v1_files_still_load() {
+        // hand-build a v1 file: "JORGECKPT\x01", no CRC trailer
+        let mut b: Vec<u8> = Vec::new();
+        b.extend_from_slice(b"JORGECKPT\x01");
+        b.extend_from_slice(&1u32.to_le_bytes()); // count
+        b.extend_from_slice(&1u32.to_le_bytes()); // name_len
+        b.push(b'x');
+        b.push(0); // dtype f32
+        b.extend_from_slice(&1u32.to_le_bytes()); // ndims
+        b.extend_from_slice(&2u64.to_le_bytes()); // dim
+        b.extend_from_slice(&1.5f32.to_le_bytes());
+        b.extend_from_slice(&(-2.0f32).to_le_bytes());
+        let path = tmp("v1.bin");
+        std::fs::write(&path, &b).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded, vec![("x".to_string(), HostTensor::from_f32(vec![2], vec![1.5, -2.0]))]);
+        // v1 with trailing garbage is rejected, not silently accepted
+        b.push(0xAB);
+        std::fs::write(&path, &b).unwrap();
+        assert!(matches!(load(&path), Err(CkptError::TrailingData { .. })));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn atomic_save_leaves_no_tmp_and_discovery_skips_corrupt() {
+        let dir = tmp("dir_discovery");
+        std::fs::create_dir_all(&dir).unwrap();
+        let a = HostTensor::from_f32(vec![2], vec![1.0, 2.0]);
+        let b = HostTensor::from_f32(vec![2], vec![3.0, 4.0]);
+        save(step_path(&dir, 4), &[("w".into(), &a)]).unwrap();
+        save(step_path(&dir, 8), &[("w".into(), &b)]).unwrap();
+        // a stray .tmp from a "crashed" save must be invisible
+        std::fs::write(dir.join("step_00000012.ckpt.tmp"), b"half-written").unwrap();
+        assert!(!list(&dir).iter().any(|p| p.to_string_lossy().contains("tmp")));
+        assert_eq!(list(&dir).len(), 2);
+        let (newest, t) = latest_valid(&dir).unwrap();
+        assert_eq!(newest, step_path(&dir, 8));
+        assert_eq!(t[0].1, b);
+        // corrupt the newest: discovery falls back to the previous valid one
+        let mut bytes = std::fs::read(step_path(&dir, 8)).unwrap();
+        let n = bytes.len();
+        bytes[n - 6] ^= 0x01;
+        std::fs::write(step_path(&dir, 8), &bytes).unwrap();
+        let (fallback, t) = latest_valid(&dir).unwrap();
+        assert_eq!(fallback, step_path(&dir, 4));
+        assert_eq!(t[0].1, a);
+        // everything corrupt => None
+        std::fs::write(step_path(&dir, 4), b"junk").unwrap();
+        std::fs::write(step_path(&dir, 8), b"junk").unwrap();
+        assert!(latest_valid(&dir).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // IEEE CRC-32 of "123456789" is 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
     }
 }

@@ -1,7 +1,14 @@
 //! L3 coordinator: training loop, data-parallel orchestration,
 //! checkpointing. See `trainer.rs` for the two execution modes.
+//!
+//! This layer owns failure handling for the whole run, so panicking
+//! escape hatches are linted out: every fallible path must surface a
+//! typed error the CLI can report (tests may opt out locally).
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod checkpoint;
 pub mod trainer;
 
-pub use trainer::{assign_owners, EpochRecord, RunResult, ShardReport, Trainer};
+pub use trainer::{
+    assign_owners, EpochRecord, FaultReport, RunResult, ShardReport, Trainer,
+};

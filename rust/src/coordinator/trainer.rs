@@ -22,12 +22,37 @@
 //! every worker applies the identical update. Refresh + all-gather +
 //! apply runs the same per-layer float ops as the serial fused step, so
 //! trajectories are bitwise identical at any worker count.
+//!
+//! ## Fault tolerance
+//!
+//! With a [`FaultPlan`] configured (`cfg.faults` / `JORGE_FAULTS`), the
+//! collectives run through a [`FaultSession`] and the coordinator
+//! degrades gracefully instead of crashing:
+//!
+//! * a rank lost during the **gradient all-reduce** is shed, the
+//!   surviving buffers re-form the ring, and the step's loss averages
+//!   over the survivors;
+//! * an owner lost during the **preconditioner all-gather** has its
+//!   layers reverted to the *stale* pre-refresh preconditioners for that
+//!   step (a sound degradation mode — Anil et al. 2021), the
+//!   FLOPs-balanced owner assignment is re-run over the survivors, and
+//!   the gather retries without the dead rank;
+//! * every recovery lands in the [`ShardReport`] / [`FaultReport`]
+//!   telemetry on [`RunResult`].
+//!
+//! When no plan is configured the fault paths are never entered and the
+//! float ops are identical to the fault-free build. Cadence
+//! checkpointing (`cfg.checkpoint_every`) and `cfg.resume` make the loop
+//! crash-safe: a resumed run skips completed steps deterministically
+//! (the sharder is pure per epoch) and continues bitwise-identically.
 
-use crate::collectives::{ring_all_gather, ring_all_reduce_mean, CommCostModel};
+use crate::collectives::{
+    ring_all_gather, ring_all_reduce_mean, CollectiveError, CommCostModel, FaultPlan, FaultSession,
+};
 use crate::config::{ShardPolicy, TrainConfig};
 use crate::data::{for_model, Dataset, Sharder};
 use crate::metricsio::{CsvWriter, Stopwatch, Summary};
-use crate::optim::{self, Hyper, Optimizer, OptimizerKind, Schedule, StepCtx};
+use crate::optim::{self, GuardReport, Hyper, Optimizer, OptimizerKind, Schedule, StepCtx};
 use crate::rngx::Rng;
 use crate::runtime::{Dtype, ExecBackend, ExecStep, HostTensor, Manifest, Role};
 use crate::tensor::Matrix;
@@ -62,6 +87,11 @@ pub struct RunResult {
     pub best_val_metric: f64,
     /// Sharding telemetry; `None` for serial optimizers.
     pub shard: Option<ShardReport>,
+    /// Numerical-guardrail counters from the native optimizer mirror
+    /// (all zeros on a healthy run, and on the artifact-apply path).
+    pub guard: GuardReport,
+    /// Fault-injection telemetry; `None` when no fault plan was active.
+    pub faults: Option<FaultReport>,
 }
 
 /// What the sharded step path actually did, for benches and tests:
@@ -80,6 +110,27 @@ pub struct ShardReport {
     pub allgather_floats: usize,
     /// A100 cost-model time for that all-gather traffic.
     pub modeled_comm_s: f64,
+    /// Layer-steps that fell back to stale preconditioners because
+    /// their owner was lost mid-gather.
+    pub stale_fallback_layers: usize,
+    /// Times the owner assignment was re-balanced over the survivors
+    /// after membership shrank.
+    pub reassignments: usize,
+}
+
+/// What the fault session did over the whole run.
+#[derive(Clone, Debug, Default)]
+pub struct FaultReport {
+    /// Human-readable record of every injected fault and its recovery.
+    pub events: Vec<String>,
+    /// Straggler retries absorbed by the backoff policy.
+    pub retries: usize,
+    /// Modeled (never slept) backoff charged for those retries.
+    pub modeled_backoff_s: f64,
+    /// Ranks that left the job (drop or timeout), in rank order.
+    pub dropped: Vec<usize>,
+    /// Ranks still alive at the end of the run.
+    pub survivors: usize,
 }
 
 /// Deterministic owner-computes assignment: `costs[l]` is the refresh
@@ -118,7 +169,7 @@ pub fn assign_owners(costs: &[f64], workers: usize, policy: ShardPolicy) -> Vec<
                             .unwrap_or(std::cmp::Ordering::Equal)
                             .then(a.cmp(&b))
                     })
-                    .unwrap();
+                    .unwrap_or(0);
                 owner[li] = Some(w);
                 load[w] += costs[li];
             }
@@ -134,7 +185,34 @@ struct ShardState {
     allgather_calls: usize,
     allgather_floats: usize,
     modeled_comm_s: f64,
+    stale_fallback_layers: usize,
+    reassignments: usize,
     comm: CommCostModel,
+}
+
+/// Re-run the FLOPs-balanced assignment over the surviving ranks. The
+/// owner map stays keyed by *original* rank id (dead ranks own
+/// nothing), so telemetry vectors and gather ordering remain stable.
+fn reassign_owners(
+    shard: &mut ShardState,
+    native: &dyn Optimizer,
+    live: &[usize],
+    policy: ShardPolicy,
+) -> Result<()> {
+    if live.is_empty() {
+        return Err(anyhow!("no live workers left to own preconditioners"));
+    }
+    let costs: Vec<f64> = (0..native.n_layers()).map(|l| native.refresh_flops(l)).collect();
+    let owner = assign_owners(&costs, live.len(), policy);
+    let mut owned = vec![Vec::new(); shard.owned.len()];
+    for (li, o) in owner.iter().enumerate() {
+        if let Some(w) = *o {
+            owned[live[w]].push(li);
+        }
+    }
+    shard.owned = owned;
+    shard.reassignments += 1;
+    Ok(())
 }
 
 impl RunResult {
@@ -162,12 +240,19 @@ impl RunResult {
 const EVAL_BATCHES: usize = 4;
 
 /// 2-D collapse of host tensors for the native optimizer mirrors.
-fn to_matrices(tensors: &[HostTensor]) -> Vec<Matrix> {
+fn to_matrices(tensors: &[HostTensor]) -> Result<Vec<Matrix>> {
     tensors
         .iter()
         .map(|t| {
             let sh = t.shape();
-            Matrix::from_vec(sh[0], sh.get(1).copied().unwrap_or(1), t.as_f32().unwrap().to_vec())
+            let data = t
+                .as_f32()
+                .ok_or_else(|| anyhow!("non-f32 tensor in param/grad list"))?;
+            Ok(Matrix::from_vec(
+                sh.first().copied().unwrap_or(1),
+                sh.get(1).copied().unwrap_or(1),
+                data.to_vec(),
+            ))
         })
         .collect()
 }
@@ -192,6 +277,8 @@ pub struct Trainer {
     /// serial base when there is a single worker (nothing to shard).
     kind: OptimizerKind,
     shard: Option<ShardState>,
+    /// Fault injector; `None` unless a plan is configured and workers > 1.
+    fault: Option<FaultSession>,
     n_params: usize,
     global_step: usize,
 }
@@ -255,25 +342,41 @@ impl Trainer {
             None
         };
 
-        let shard = if kind.sharded {
-            let native = native_opt.as_ref().unwrap();
-            let costs: Vec<f64> =
-                (0..native.n_layers()).map(|l| native.refresh_flops(l)).collect();
-            let owner = assign_owners(&costs, cfg.workers, cfg.shard_policy);
-            let mut owned = vec![Vec::new(); cfg.workers];
-            for (li, o) in owner.iter().enumerate() {
-                if let Some(w) = *o {
-                    owned[w].push(li);
+        let shard = match (&native_opt, kind.sharded) {
+            (Some(native), true) => {
+                let costs: Vec<f64> =
+                    (0..native.n_layers()).map(|l| native.refresh_flops(l)).collect();
+                let owner = assign_owners(&costs, cfg.workers, cfg.shard_policy);
+                let mut owned = vec![Vec::new(); cfg.workers];
+                for (li, o) in owner.iter().enumerate() {
+                    if let Some(w) = *o {
+                        owned[w].push(li);
+                    }
                 }
+                Some(ShardState {
+                    owned,
+                    refresh_layer_events: vec![0; cfg.workers],
+                    allgather_calls: 0,
+                    allgather_floats: 0,
+                    modeled_comm_s: 0.0,
+                    stale_fallback_layers: 0,
+                    reassignments: 0,
+                    comm: CommCostModel::nvlink_a100(),
+                })
             }
-            Some(ShardState {
-                owned,
-                refresh_layer_events: vec![0; cfg.workers],
-                allgather_calls: 0,
-                allgather_floats: 0,
-                modeled_comm_s: 0.0,
-                comm: CommCostModel::nvlink_a100(),
-            })
+            _ => None,
+        };
+
+        // fault injection: explicit config wins, else the environment
+        // (JORGE_FAULTS); only armed where collectives actually run
+        let fault = if cfg.workers > 1 {
+            let plan = if cfg.faults.is_empty() {
+                FaultPlan::from_env().map_err(|e| anyhow!(e))?
+            } else {
+                Some(FaultPlan::parse(&cfg.faults, cfg.fault_seed).map_err(|e| anyhow!(e))?)
+            };
+            plan.filter(|p| !p.is_empty())
+                .map(|p| FaultSession::new(p, cfg.workers))
         } else {
             None
         };
@@ -307,6 +410,7 @@ impl Trainer {
             native_opt,
             kind,
             shard,
+            fault,
             n_params,
             global_step: 0,
         })
@@ -321,20 +425,71 @@ impl Trainer {
             allgather_calls: s.allgather_calls,
             allgather_floats: s.allgather_floats,
             modeled_comm_s: s.modeled_comm_s,
+            stale_fallback_layers: s.stale_fallback_layers,
+            reassignments: s.reassignments,
         })
     }
 
-    fn batch_tensors(&self, step: &dyn ExecStep, indices: &[usize]) -> (HostTensor, HostTensor) {
+    /// Fault-injection telemetry (`None` when no plan was active).
+    pub fn fault_report(&self) -> Option<FaultReport> {
+        let f = self.fault.as_ref()?;
+        let live = f.live_ranks();
+        Some(FaultReport {
+            events: f
+                .records()
+                .iter()
+                .map(|r| {
+                    format!("step {} rank {} {} {}: {}", r.step, r.rank, r.op, r.kind, r.action)
+                })
+                .collect(),
+            retries: f.retries(),
+            modeled_backoff_s: f.modeled_backoff_s(),
+            dropped: (0..self.cfg.workers).filter(|&r| !live.contains(&r)).collect(),
+            survivors: live.len(),
+        })
+    }
+
+    /// Numerical-guardrail counters from the native mirror (all zeros
+    /// when running through the fused/apply artifacts).
+    pub fn guard_report(&self) -> GuardReport {
+        self.native_opt.as_ref().map(|o| o.guard_report()).unwrap_or_default()
+    }
+
+    /// Directory cadence checkpoints are written to and `--resume auto`
+    /// searches: `cfg.checkpoint_dir`, or a run-keyed default under
+    /// `out_dir` so different runs never clobber each other.
+    pub fn checkpoint_dir(&self) -> String {
+        if self.cfg.checkpoint_dir.is_empty() {
+            format!(
+                "{}/ckpt_{}_{}_s{}",
+                self.cfg.out_dir, self.cfg.model, self.kind, self.cfg.seed
+            )
+        } else {
+            self.cfg.checkpoint_dir.clone()
+        }
+    }
+
+    fn batch_tensors(
+        &self,
+        step: &dyn ExecStep,
+        indices: &[usize],
+    ) -> Result<(HostTensor, HostTensor)> {
         let b = self.dataset.batch(indices);
         let spec = step.spec();
-        let x_spec = &spec.inputs[spec.input_index(Role::X).unwrap()];
-        let y_spec = &spec.inputs[spec.input_index(Role::Y).unwrap()];
+        let xi = spec
+            .input_index(Role::X)
+            .ok_or_else(|| anyhow!("executable has no X input"))?;
+        let yi = spec
+            .input_index(Role::Y)
+            .ok_or_else(|| anyhow!("executable has no Y input"))?;
+        let x_spec = &spec.inputs[xi];
+        let y_spec = &spec.inputs[yi];
         let x = match x_spec.dtype {
             Dtype::F32 => HostTensor::from_f32(x_spec.shape.clone(), b.x_f32),
             Dtype::I32 => HostTensor::from_i32(x_spec.shape.clone(), b.x_i32),
         };
         let y = HostTensor::from_i32(y_spec.shape.clone(), b.y);
-        (x, y)
+        Ok((x, y))
     }
 
     fn precond_update_now(&self) -> bool {
@@ -345,12 +500,11 @@ impl Trainer {
     /// One fused train step (single-worker path). Returns (loss, metric).
     fn fused_step(&mut self, indices: &[usize], lr: f64) -> Result<(f64, f64)> {
         let update = self.precond_update_now();
-        let step = if update || self.train_skip.is_none() {
-            self.train_full.clone()
-        } else {
-            self.train_skip.as_ref().unwrap().clone()
+        let step = match (&self.train_skip, update) {
+            (Some(skip), false) => skip.clone(),
+            _ => self.train_full.clone(),
         };
-        let (x, y) = self.batch_tensors(step.as_ref(), indices);
+        let (x, y) = self.batch_tensors(step.as_ref(), indices)?;
         let mut inputs: Vec<HostTensor> =
             Vec::with_capacity(self.params.len() + self.opt_state.len() + 4);
         inputs.extend(self.params.iter().cloned());
@@ -361,73 +515,142 @@ impl Trainer {
         inputs.push(HostTensor::scalar_f32(self.cfg.weight_decay as f32));
 
         let mut outputs = step.run(&inputs)?;
-        let metric = outputs.pop().unwrap().scalar();
-        let loss = outputs.pop().unwrap().scalar();
+        let metric = outputs
+            .pop()
+            .ok_or_else(|| anyhow!("train step returned no metric output"))?
+            .scalar();
+        let loss = outputs
+            .pop()
+            .ok_or_else(|| anyhow!("train step returned no loss output"))?
+            .scalar();
+        if outputs.len() < self.n_params {
+            return Err(anyhow!("train step output arity mismatch"));
+        }
         let state = outputs.split_off(self.n_params);
         self.params = outputs;
         self.opt_state = state;
         Ok((loss, metric))
     }
 
-    /// One data-parallel step: grads on every worker, ring all-reduce,
-    /// leader applies the optimizer. Returns mean (loss, metric).
+    /// One data-parallel step: grads on every live worker, ring
+    /// all-reduce, leader applies the optimizer. A rank lost during the
+    /// reduce is shed and the survivors retry; the step's loss averages
+    /// over the ranks whose gradients made it into the reduce.
     fn data_parallel_step(&mut self, worker_indices: &[Vec<usize>], lr: f64) -> Result<(f64, f64)> {
-        let workers = worker_indices.len();
+        let live: Vec<usize> = match &self.fault {
+            Some(f) => f.live_ranks(),
+            None => (0..worker_indices.len()).collect(),
+        };
+        if live.is_empty() {
+            return Err(anyhow!("no live workers remain"));
+        }
         let grad_step = self.grad.clone();
+        let mut batches = Vec::with_capacity(live.len());
+        for &r in &live {
+            batches.push(self.batch_tensors(grad_step.as_ref(), &worker_indices[r])?);
+        }
         let params = &self.params;
 
-        // fan out gradient computation
+        // fan out gradient computation over the live ranks
         let results: Vec<Result<(Vec<HostTensor>, f64, f64)>> = std::thread::scope(|s| {
-            let handles: Vec<_> = worker_indices
-                .iter()
-                .map(|idx| {
+            let handles: Vec<_> = batches
+                .into_iter()
+                .map(|(x, y)| {
                     let grad_step = grad_step.clone();
-                    let (x, y) = self.batch_tensors(grad_step.as_ref(), idx);
                     s.spawn(move || -> Result<(Vec<HostTensor>, f64, f64)> {
                         let mut inputs: Vec<HostTensor> = params.to_vec();
                         inputs.push(x);
                         inputs.push(y);
                         let mut out = grad_step.run(&inputs)?;
-                        let metric = out.pop().unwrap().scalar();
-                        let loss = out.pop().unwrap().scalar();
+                        let metric = out
+                            .pop()
+                            .ok_or_else(|| anyhow!("grad step returned no metric output"))?
+                            .scalar();
+                        let loss = out
+                            .pop()
+                            .ok_or_else(|| anyhow!("grad step returned no loss output"))?
+                            .scalar();
                         Ok((out, loss, metric))
                     })
                 })
                 .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("gradient worker panicked"))))
+                .collect()
         });
 
-        let mut grads_per_worker: Vec<Vec<HostTensor>> = Vec::with_capacity(workers);
-        let mut loss_sum = 0.0;
-        let mut metric_sum = 0.0;
+        let mut grads_per_worker: Vec<Vec<HostTensor>> = Vec::with_capacity(live.len());
+        let mut losses: Vec<f64> = Vec::with_capacity(live.len());
+        let mut metrics: Vec<f64> = Vec::with_capacity(live.len());
         for r in results {
             let (g, l, m) = r?;
             grads_per_worker.push(g);
-            loss_sum += l;
-            metric_sum += m;
+            losses.push(l);
+            metrics.push(m);
         }
 
-        // bucket-flatten each worker's grads and ring-all-reduce the mean
-        let mut buffers: Vec<Vec<f32>> = grads_per_worker
-            .iter()
-            .map(|gs| {
-                let mut flat = Vec::new();
-                for g in gs {
-                    flat.extend_from_slice(g.as_f32().unwrap());
-                }
-                flat
-            })
-            .collect();
-        ring_all_reduce_mean(&mut buffers);
+        // bucket-flatten each live worker's grads
+        let mut buffers: Vec<Vec<f32>> = Vec::with_capacity(grads_per_worker.len());
+        for gs in &grads_per_worker {
+            let mut flat = Vec::new();
+            for g in gs {
+                flat.extend_from_slice(
+                    g.as_f32().ok_or_else(|| anyhow!("non-f32 gradient tensor"))?,
+                );
+            }
+            buffers.push(flat);
+        }
 
-        // unflatten rank-0's reduced buffer back into grad tensors
+        // ring-all-reduce the mean, shedding ranks the fault session
+        // kills mid-collective
+        let mut ranks = live;
+        match &mut self.fault {
+            None => ring_all_reduce_mean(&mut buffers)?,
+            Some(fault) => loop {
+                match fault.all_reduce_mean(self.global_step, &mut buffers, &ranks) {
+                    Ok(()) => break,
+                    Err(
+                        CollectiveError::WorkerDropped { rank, .. }
+                        | CollectiveError::Timeout { rank, .. },
+                    ) => {
+                        let Some(slot) = ranks.iter().position(|&r| r == rank) else {
+                            return Err(anyhow!("fault session dropped unknown rank {rank}"));
+                        };
+                        eprintln!(
+                            "[faults] step {}: rank {rank} lost during gradient reduce; \
+                             continuing with {} survivor(s)",
+                            self.global_step,
+                            ranks.len() - 1
+                        );
+                        ranks.remove(slot);
+                        buffers.remove(slot);
+                        grads_per_worker.remove(slot);
+                        losses.remove(slot);
+                        metrics.remove(slot);
+                        if ranks.is_empty() {
+                            return Err(anyhow!(
+                                "every worker was lost during the gradient reduce"
+                            ));
+                        }
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            },
+        }
+
+        // unflatten the first survivor's reduced buffer into grad tensors
+        let (first_grads, first_buf) = match (grads_per_worker.first(), buffers.first()) {
+            (Some(g), Some(b)) => (g, b),
+            _ => return Err(anyhow!("no gradients survived the reduce")),
+        };
         let mut reduced: Vec<HostTensor> = Vec::with_capacity(self.n_params);
         let mut off = 0usize;
-        for g in &grads_per_worker[0] {
+        for g in first_grads {
             let n = g.len();
             reduced.push(HostTensor::from_f32(
                 g.shape().to_vec(),
-                buffers[0][off..off + n].to_vec(),
+                first_buf[off..off + n].to_vec(),
             ));
             off += n;
         }
@@ -437,7 +660,8 @@ impl Trainer {
         } else {
             self.apply_reduced(reduced, lr)?;
         }
-        Ok((loss_sum / workers as f64, metric_sum / workers as f64))
+        let n = losses.len() as f64;
+        Ok((losses.iter().sum::<f64>() / n, metrics.iter().sum::<f64>() / n))
     }
 
     /// Sharded optimizer application (owner-computes): every worker
@@ -445,18 +669,54 @@ impl Trainer {
     /// travel a real ring all-gather, then the update is applied with
     /// the gathered state. The per-layer float ops equal the serial
     /// fused step's exactly, so the trajectory is bitwise identical.
+    ///
+    /// Under fault injection, an owner lost mid-gather degrades
+    /// gracefully: its layers keep the stale pre-refresh preconditioners
+    /// for this step, the assignment is re-balanced over the survivors,
+    /// and the gather retries.
     fn sharded_apply(&mut self, grads: Vec<HostTensor>, lr: f64) -> Result<()> {
         let update = self.precond_update_now();
         let wd = self.cfg.weight_decay as f32;
-        let native = self.native_opt.as_mut().expect("sharded mode forces the native mirror");
-        let shard = self.shard.as_mut().expect("sharded_apply without shard state");
+        let policy = self.cfg.shard_policy;
+        let step = self.global_step;
+        let Some(native) = self.native_opt.as_mut() else {
+            return Err(anyhow!("sharded mode requires the native optimizer mirror"));
+        };
+        let Some(shard) = self.shard.as_mut() else {
+            return Err(anyhow!("sharded_apply called without shard state"));
+        };
 
-        let mut mats = to_matrices(&self.params);
-        let gmats = to_matrices(&grads);
+        let mut mats = to_matrices(&self.params)?;
+        let gmats = to_matrices(&grads)?;
+
+        // membership may have shrunk during the gradient reduce:
+        // re-balance the owner map over the survivors before any refresh
+        // work, so no layer's statistics stall on a dead rank
+        if let Some(fault) = self.fault.as_ref() {
+            if shard
+                .owned
+                .iter()
+                .enumerate()
+                .any(|(w, ls)| !ls.is_empty() && !fault.is_alive(w))
+            {
+                reassign_owners(shard, &**native, &fault.live_ranks(), policy)?;
+            }
+        }
+
+        // pre-refresh snapshot: if an owner dies mid-gather its layers
+        // fall back to these stale preconditioners for this step
+        let stale: Option<Vec<Vec<f32>>> = if update && self.fault.is_some() {
+            Some(shard.owned.iter().map(|ls| native.export_preconditioners(ls)).collect())
+        } else {
+            None
+        };
 
         // owner-computes refresh; Shampoo also advances its stat EMAs
         // here on skip steps, so this runs every step
         for w in 0..shard.owned.len() {
+            if self.fault.as_ref().is_some_and(|f| !f.is_alive(w)) {
+                continue;
+            }
             native.refresh_layers(&shard.owned[w], &gmats, update);
             if update {
                 shard.refresh_layer_events[w] += shard.owned[w].len();
@@ -464,20 +724,100 @@ impl Trainer {
         }
 
         if update {
-            // owner w contributes the preconditioners it refreshed
-            let chunks: Vec<Vec<f32>> =
-                shard.owned.iter().map(|ls| native.export_preconditioners(ls)).collect();
-            let chunk_bytes: Vec<usize> = chunks.iter().map(|c| 4 * c.len()).collect();
-            let gathered = ring_all_gather(&chunks);
-            shard.allgather_calls += 1;
-            shard.allgather_floats += gathered.last().map_or(0, |b| b.len());
-            shard.modeled_comm_s += shard.comm.all_gather_ragged_time(&chunk_bytes);
-            // continue from the last rank's assembled buffer, so the
-            // state the run depends on has genuinely been around the ring
-            if let Some(buf) = gathered.last() {
-                let order: Vec<usize> = shard.owned.concat();
-                let used = native.import_preconditioners(&order, buf);
-                debug_assert_eq!(used, buf.len(), "all-gather payload mismatch");
+            match self.fault.as_mut() {
+                None => {
+                    // fault-free path: float-for-float the serial step
+                    let chunks: Vec<Vec<f32>> =
+                        shard.owned.iter().map(|ls| native.export_preconditioners(ls)).collect();
+                    let chunk_bytes: Vec<usize> = chunks.iter().map(|c| 4 * c.len()).collect();
+                    let gathered = ring_all_gather(&chunks);
+                    shard.allgather_calls += 1;
+                    shard.allgather_floats += gathered.last().map_or(0, |b| b.len());
+                    shard.modeled_comm_s += shard.comm.all_gather_ragged_time(&chunk_bytes);
+                    // continue from the last rank's assembled buffer, so
+                    // the state the run depends on has genuinely been
+                    // around the ring
+                    if let Some(buf) = gathered.last() {
+                        let order: Vec<usize> = shard.owned.concat();
+                        let used = native.import_preconditioners(&order, buf);
+                        debug_assert_eq!(used, buf.len(), "all-gather payload mismatch");
+                    }
+                }
+                Some(fault) => {
+                    // the gather runs over the owner map as it stood when
+                    // the chunks were exported; a mid-gather reassignment
+                    // only affects future steps, so capture the
+                    // participants' layer lists up front
+                    let mut participants: Vec<usize> = fault.live_ranks();
+                    let mut gather_owned: Vec<Vec<usize>> =
+                        participants.iter().map(|&r| shard.owned[r].clone()).collect();
+                    let mut chunks: Vec<Vec<f32>> = gather_owned
+                        .iter()
+                        .map(|ls| native.export_preconditioners(ls))
+                        .collect();
+                    loop {
+                        match fault.all_gather(step, &mut chunks, &participants) {
+                            Ok(gathered) => {
+                                let chunk_bytes: Vec<usize> =
+                                    chunks.iter().map(|c| 4 * c.len()).collect();
+                                shard.allgather_calls += 1;
+                                shard.allgather_floats += gathered.last().map_or(0, |b| b.len());
+                                shard.modeled_comm_s +=
+                                    shard.comm.all_gather_ragged_time(&chunk_bytes);
+                                if let Some(buf) = gathered.last() {
+                                    let order: Vec<usize> = gather_owned.concat();
+                                    let used = native.import_preconditioners(&order, buf);
+                                    if used != buf.len() {
+                                        return Err(anyhow!(
+                                            "all-gather payload mismatch: used {used} of {} \
+                                             floats",
+                                            buf.len()
+                                        ));
+                                    }
+                                }
+                                break;
+                            }
+                            Err(
+                                CollectiveError::WorkerDropped { rank, .. }
+                                | CollectiveError::Timeout { rank, .. },
+                            ) => {
+                                let Some(slot) = participants.iter().position(|&r| r == rank)
+                                else {
+                                    return Err(anyhow!(
+                                        "fault session dropped unknown rank {rank}"
+                                    ));
+                                };
+                                // the dead owner's refreshed preconditioners
+                                // never made it around the ring: revert its
+                                // layers to the stale snapshot for this step
+                                if let (Some(st), Some(ls)) =
+                                    (stale.as_ref(), gather_owned.get(slot))
+                                {
+                                    native.import_preconditioners(ls, &st[rank]);
+                                    shard.stale_fallback_layers += ls.len();
+                                    eprintln!(
+                                        "[faults] step {step}: owner rank {rank} lost during \
+                                         preconditioner all-gather; {} layer(s) keep stale \
+                                         preconditioners this step",
+                                        ls.len()
+                                    );
+                                }
+                                participants.remove(slot);
+                                gather_owned.remove(slot);
+                                chunks.remove(slot);
+                                if participants.is_empty() {
+                                    return Err(anyhow!(
+                                        "every worker was lost during the preconditioner \
+                                         all-gather"
+                                    ));
+                                }
+                                // re-balance future refreshes over survivors
+                                reassign_owners(shard, &**native, &participants, policy)?;
+                            }
+                            Err(e) => return Err(e.into()),
+                        }
+                    }
+                }
             }
         }
 
@@ -487,7 +827,9 @@ impl Trainer {
             StepCtx { lr: lr as f32, weight_decay: wd, update_precond: false },
         );
         for (p, m) in self.params.iter_mut().zip(mats) {
-            *p.as_f32_mut().unwrap() = m.data;
+            if let Some(buf) = p.as_f32_mut() {
+                *buf = m.data;
+            }
         }
         Ok(())
     }
@@ -496,8 +838,8 @@ impl Trainer {
         let update = self.precond_update_now();
         if let Some(native) = &mut self.native_opt {
             // native mirror path
-            let mut mats = to_matrices(&self.params);
-            let gmats = to_matrices(&grads);
+            let mut mats = to_matrices(&self.params)?;
+            let gmats = to_matrices(&grads)?;
             native.step(
                 &mut mats,
                 &gmats,
@@ -508,14 +850,15 @@ impl Trainer {
                 },
             );
             for (p, m) in self.params.iter_mut().zip(mats) {
-                *p.as_f32_mut().unwrap() = m.data;
+                if let Some(buf) = p.as_f32_mut() {
+                    *buf = m.data;
+                }
             }
             return Ok(());
         }
-        let step = if update || self.apply_skip.is_none() {
-            self.apply_full.clone()
-        } else {
-            self.apply_skip.as_ref().unwrap().clone()
+        let step = match (&self.apply_skip, update) {
+            (Some(skip), false) => skip.clone(),
+            _ => self.apply_full.clone(),
         };
         let mut inputs: Vec<HostTensor> =
             Vec::with_capacity(2 * self.n_params + self.opt_state.len() + 2);
@@ -525,6 +868,9 @@ impl Trainer {
         inputs.push(HostTensor::scalar_f32(lr as f32));
         inputs.push(HostTensor::scalar_f32(self.cfg.weight_decay as f32));
         let mut outputs = step.run(&inputs)?;
+        if outputs.len() < self.n_params {
+            return Err(anyhow!("apply step output arity mismatch"));
+        }
         let state = outputs.split_off(self.n_params);
         self.params = outputs;
         self.opt_state = state;
@@ -533,30 +879,86 @@ impl Trainer {
 
     /// Held-out evaluation: mean loss/metric over EVAL_BATCHES batches.
     pub fn evaluate(&self) -> Result<(f64, f64)> {
-        let meta = &self.engine.manifest().models[&self.cfg.model];
+        let meta = self
+            .engine
+            .manifest()
+            .models
+            .get(&self.cfg.model)
+            .ok_or_else(|| anyhow!("model {} not in manifest", self.cfg.model))?;
         let eb = meta.eval_batch;
         let mut loss = Summary::new();
         let mut metric = Summary::new();
         for k in 0..EVAL_BATCHES {
             let base = self.cfg.dataset_size + k * eb;
             let indices: Vec<usize> = (base..base + eb).collect();
-            let (x, y) = self.batch_tensors(self.eval.as_ref(), &indices);
+            let (x, y) = self.batch_tensors(self.eval.as_ref(), &indices)?;
             let mut inputs: Vec<HostTensor> = self.params.to_vec();
             inputs.push(x);
             inputs.push(y);
             let out = self.eval.run(&inputs)?;
+            if out.len() < 2 {
+                return Err(anyhow!("eval step returned {} outputs, need 2", out.len()));
+            }
             loss.add(out[0].scalar());
             metric.add(out[1].scalar());
         }
         Ok((loss.mean(), metric.mean()))
     }
 
-    /// Run the full training loop.
+    /// Apply `cfg.resume`: `""` starts fresh, `"auto"` restores the
+    /// newest *valid* checkpoint in [`Trainer::checkpoint_dir`]
+    /// (truncated or bit-flipped files are skipped by the CRC check),
+    /// anything else is an explicit checkpoint path.
+    fn maybe_resume(&mut self) -> Result<()> {
+        let resume = self.cfg.resume.clone();
+        match resume.as_str() {
+            "" => Ok(()),
+            "auto" => {
+                let dir = self.checkpoint_dir();
+                match super::checkpoint::latest_valid(&dir) {
+                    Some((path, tensors)) => {
+                        self.apply_checkpoint(tensors)
+                            .map_err(|e| anyhow!("resume from {}: {e}", path.display()))?;
+                        eprintln!(
+                            "[resume] restored step {} from {}",
+                            self.global_step,
+                            path.display()
+                        );
+                        Ok(())
+                    }
+                    None => {
+                        eprintln!("[resume] no valid checkpoint under {dir}; starting fresh");
+                        Ok(())
+                    }
+                }
+            }
+            path => {
+                self.load_checkpoint(path)?;
+                eprintln!("[resume] restored step {} from {path}", self.global_step);
+                Ok(())
+            }
+        }
+    }
+
+    /// Run the full training loop. With `cfg.resume` set, completed
+    /// steps are skipped deterministically (the sharder is pure per
+    /// epoch), so a resumed run continues bitwise-identically to an
+    /// uninterrupted one.
     pub fn run(&mut self) -> Result<RunResult> {
+        self.maybe_resume()?;
+        let resume_step = self.global_step;
+        let ckpt_dir = self.checkpoint_dir();
+
         // grad artifact batch == model batch; with workers > 1 every
         // worker consumes a full batch (weak scaling, like the paper's
         // DDP runs)
-        let per_worker_batch = self.engine.manifest().models[&self.cfg.model].batch;
+        let per_worker_batch = self
+            .engine
+            .manifest()
+            .models
+            .get(&self.cfg.model)
+            .ok_or_else(|| anyhow!("model {} not in manifest", self.cfg.model))?
+            .batch;
 
         let mut result = RunResult {
             model: self.cfg.model.clone(),
@@ -571,16 +973,26 @@ impl Trainer {
             seed: self.cfg.seed ^ 0x5A4D,
         };
 
+        let mut seen = 0usize;
         'epochs: for epoch in 0..self.cfg.epochs {
             let shards = sharder.epoch_shards(epoch);
             let steps_this_epoch = (shards[0].len() / per_worker_batch)
                 .min(self.cfg.steps_per_epoch)
                 .max(1);
+            if seen + steps_this_epoch <= resume_step {
+                // the whole epoch completed before the checkpoint was taken
+                seen += steps_this_epoch;
+                continue;
+            }
             let mut ep_loss = Summary::new();
             let mut ep_metric = Summary::new();
             let mut lr_now = self.cfg.lr;
 
             for si in 0..steps_this_epoch {
+                if seen < resume_step {
+                    seen += 1;
+                    continue;
+                }
                 if self.global_step >= self.cfg.max_steps {
                     break 'epochs;
                 }
@@ -601,9 +1013,18 @@ impl Trainer {
                 };
                 iter_times.add(t0.elapsed().as_secs_f64());
                 self.global_step += 1;
+                seen += 1;
                 ep_loss.add(loss);
                 ep_metric.add(metric);
                 result.step_losses.push(loss as f32);
+                if self.cfg.checkpoint_every > 0
+                    && self.global_step % self.cfg.checkpoint_every == 0
+                {
+                    let path = super::checkpoint::step_path(&ckpt_dir, self.global_step)
+                        .to_string_lossy()
+                        .to_string();
+                    self.save_checkpoint(&path)?;
+                }
             }
 
             let (val_loss, val_metric) = self.evaluate()?;
@@ -639,41 +1060,84 @@ impl Trainer {
         result.mean_iter_s = iter_times.mean();
         result.final_val_metric = result.epochs.last().map(|e| e.val_metric).unwrap_or(0.0);
         result.shard = self.shard_report();
+        result.guard = self.guard_report();
+        result.faults = self.fault_report();
         Ok(result)
     }
 
-    /// Save params + optimizer state.
-    pub fn save_checkpoint(&self, path: &str) -> std::io::Result<()> {
-        let spec = self.train_full.spec();
-        let mut named: Vec<(String, &HostTensor)> = Vec::new();
-        let mut pi = 0;
-        let mut si = 0;
-        for input in &spec.inputs {
-            match input.role {
-                Role::Param => {
-                    named.push((format!("param/{}", input.name), &self.params[pi]));
-                    pi += 1;
+    /// Save params + optimizer state — and, on the native path, the
+    /// mirror's preconditioner state and step counter, so a resumed run
+    /// continues bitwise-identically. Atomic + checksummed: see
+    /// [`super::checkpoint::save`].
+    pub fn save_checkpoint(&mut self, path: &str) -> Result<()> {
+        let mut named: Vec<(String, HostTensor)> = Vec::new();
+        {
+            let spec = self.train_full.spec();
+            let mut pi = 0;
+            let mut si = 0;
+            for input in &spec.inputs {
+                match input.role {
+                    Role::Param => {
+                        named.push((format!("param/{}", input.name), self.params[pi].clone()));
+                        pi += 1;
+                    }
+                    Role::State => {
+                        named.push((format!("state/{}", input.name), self.opt_state[si].clone()));
+                        si += 1;
+                    }
+                    _ => {}
                 }
-                Role::State => {
-                    named.push((format!("state/{}", input.name), &self.opt_state[si]));
-                    si += 1;
-                }
-                _ => {}
             }
         }
-        super::checkpoint::save(path, &named)
+        if let Some(native) = &mut self.native_opt {
+            let t = native.step_count();
+            for (i, m) in native.state_mut().into_iter().enumerate() {
+                named.push((
+                    format!("native/{i:04}"),
+                    HostTensor::from_f32(vec![m.rows, m.cols], m.data.clone()),
+                ));
+            }
+            named.push((
+                "native/step_count".to_string(),
+                HostTensor::from_i32(vec![1], vec![t as i32]),
+            ));
+        }
+        named.push((
+            "meta/global_step".to_string(),
+            HostTensor::from_i32(vec![1], vec![self.global_step as i32]),
+        ));
+        let refs: Vec<(String, &HostTensor)> =
+            named.iter().map(|(n, t)| (n.clone(), t)).collect();
+        super::checkpoint::save(path, &refs)?;
+        Ok(())
     }
 
     /// Restore params + optimizer state from a checkpoint.
     pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
         let tensors = super::checkpoint::load(path)?;
+        self.apply_checkpoint(tensors)
+    }
+
+    /// Route loaded tensors back into live state by name prefix; strict
+    /// about counts and shapes so a checkpoint from a different model or
+    /// optimizer is a typed error, not silent corruption.
+    fn apply_checkpoint(&mut self, tensors: Vec<(String, HostTensor)>) -> Result<()> {
         let mut params = Vec::new();
         let mut state = Vec::new();
+        let mut native_state: Vec<HostTensor> = Vec::new();
+        let mut native_step: Option<u64> = None;
+        let mut global_step: Option<usize> = None;
         for (name, t) in tensors {
             if name.starts_with("param/") {
                 params.push(t);
             } else if name.starts_with("state/") {
                 state.push(t);
+            } else if name == "native/step_count" {
+                native_step = t.as_i32().and_then(|v| v.first()).map(|&v| v.max(0) as u64);
+            } else if name.starts_with("native/") {
+                native_state.push(t);
+            } else if name == "meta/global_step" {
+                global_step = t.as_i32().and_then(|v| v.first()).map(|&v| v.max(0) as usize);
             }
         }
         if params.len() != self.params.len() || state.len() != self.opt_state.len() {
@@ -692,6 +1156,33 @@ impl Trainer {
         }
         self.params = params;
         self.opt_state = state;
+        if let Some(native) = &mut self.native_opt {
+            if !native_state.is_empty() {
+                let mut slots = native.state_mut();
+                if slots.len() != native_state.len() {
+                    return Err(anyhow!(
+                        "checkpoint native-state mismatch: {} tensors vs expected {}",
+                        native_state.len(),
+                        slots.len()
+                    ));
+                }
+                for (slot, t) in slots.iter_mut().zip(&native_state) {
+                    let data = t
+                        .as_f32()
+                        .ok_or_else(|| anyhow!("native optimizer state tensor is not f32"))?;
+                    if data.len() != slot.data.len() {
+                        return Err(anyhow!("checkpoint native-state shape mismatch"));
+                    }
+                    slot.data.copy_from_slice(data);
+                }
+                if let Some(t) = native_step {
+                    native.set_step_count(t);
+                }
+            }
+        }
+        if let Some(gs) = global_step {
+            self.global_step = gs;
+        }
         Ok(())
     }
 }

@@ -44,6 +44,11 @@ fn flag_spec() -> Vec<FlagSpec> {
         flag("backend", "execution backend: auto | native | pjrt"),
         flag("out", "output directory for CSV metrics"),
         flag("checkpoint", "checkpoint path to save (train) / load (eval)"),
+        flag("checkpoint-every", "write a crash-safe checkpoint every N steps (0 = off)"),
+        flag("checkpoint-dir", "directory for cadence checkpoints / auto-resume"),
+        flag("resume", "\"auto\" (newest valid checkpoint) or an explicit path"),
+        flag("faults", "fault-injection plan, e.g. \"drop@3:1:precond;delay@5:0:x4\""),
+        flag("fault-seed", "seed for deterministic fault corruption"),
         flag("max-steps", "hard cap on optimizer steps"),
         flag("tolerance", "bench-diff: relative drift threshold (default 0.15)"),
         switch("native", "apply optimizer via native mirrors (workers > 1)"),
@@ -114,6 +119,21 @@ fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<()> {
     if let Some(v) = args.get_usize("max-steps").map_err(|e| anyhow!(e))? {
         cfg.max_steps = v;
     }
+    if let Some(v) = args.get("faults") {
+        cfg.faults = v.into();
+    }
+    if let Some(v) = args.get_usize("fault-seed").map_err(|e| anyhow!(e))? {
+        cfg.fault_seed = v as u64;
+    }
+    if let Some(v) = args.get_usize("checkpoint-every").map_err(|e| anyhow!(e))? {
+        cfg.checkpoint_every = v;
+    }
+    if let Some(v) = args.get("checkpoint-dir") {
+        cfg.checkpoint_dir = v.into();
+    }
+    if let Some(v) = args.get("resume") {
+        cfg.resume = v.into();
+    }
     if args.has("native") {
         cfg.native = true;
     }
@@ -172,14 +192,32 @@ fn cmd_train(args: &Args) -> Result<()> {
             .map(|(w, ls)| format!("w{w}:{ls:?}"))
             .collect();
         println!(
-            "shard: workers={} owners=[{}] refreshes={:?} allgathers={} floats={} modeled_comm={:.3}ms",
+            "shard: workers={} owners=[{}] refreshes={:?} allgathers={} floats={} modeled_comm={:.3}ms stale_fallbacks={} reassignments={}",
             sh.workers,
             owners.join(" "),
             sh.refresh_events,
             sh.allgather_calls,
             sh.allgather_floats,
             sh.modeled_comm_s * 1e3,
+            sh.stale_fallback_layers,
+            sh.reassignments,
         );
+    }
+    if result.guard.total() > 0 {
+        println!("guardrails: {}", result.guard);
+    }
+    if let Some(f) = &result.faults {
+        println!(
+            "faults: events={} retries={} modeled_backoff={:.3}s dropped={:?} survivors={}",
+            f.events.len(),
+            f.retries,
+            f.modeled_backoff_s,
+            f.dropped,
+            f.survivors,
+        );
+        for ev in &f.events {
+            println!("fault-event: {ev}");
+        }
     }
     Ok(())
 }

@@ -14,7 +14,8 @@
 //! protocol is bitwise identical to the serial step.
 
 use super::{
-    for_each_layer, grafted_update, max_dim, Hyper, JorgeParams, Optimizer, StepCtx, INNER_PAR_DIM,
+    for_each_layer, grafted_update, max_dim, GuardReport, Hyper, JorgeParams, Optimizer, StepCtx,
+    INNER_PAR_DIM,
 };
 use crate::tensor::{gram_left, gram_right, jorge_update, matmul, Matrix};
 
@@ -24,6 +25,7 @@ struct LayerState {
     r_hat: Option<Matrix>,
     mom: Matrix,
     gmom: Matrix,
+    guard: GuardReport,
 }
 
 pub struct Jorge {
@@ -47,6 +49,7 @@ impl Jorge {
                     r_hat: precond.then(|| Matrix::eye(n, scale)),
                     mom: Matrix::zeros(m, n),
                     gmom: Matrix::zeros(m, n),
+                    guard: GuardReport::default(),
                 }
             })
             .collect();
@@ -62,23 +65,81 @@ impl Jorge {
 /// Owner-computes half: inverse-free truncated-binomial refresh of both
 /// preconditioner estimates. Jorge accumulates no separate statistics,
 /// so skip steps do nothing here.
-fn refresh_layer(st: &mut LayerState, g: &Matrix, update: bool) {
-    if !update {
+///
+/// Guardrails (zero-cost on healthy inputs beyond an `all_finite` scan):
+/// a non-finite gradient keeps the stale estimates; non-finite estimates
+/// (e.g. a corrupted import) self-heal to the eps-identity before the
+/// refresh; a non-finite refresh result is retried once with a damped
+/// gram, and only then falls back to stale.
+fn refresh_layer(eps: f32, st: &mut LayerState, g: &Matrix, update: bool) {
+    if !update || st.l_hat.is_none() {
         return;
     }
-    if let (Some(l_hat), Some(r_hat)) = (&mut st.l_hat, &mut st.r_hat) {
-        *l_hat = jorge_update(l_hat, &gram_left(g));
-        *r_hat = jorge_update(r_hat, &gram_right(g));
+    if !g.all_finite() {
+        st.guard.nonfinite_grads += 1;
+        st.guard.stale_preconds += 1;
+        return;
+    }
+    let heal = {
+        let (Some(l_hat), Some(r_hat)) = (&st.l_hat, &st.r_hat) else { return };
+        !l_hat.all_finite() || !r_hat.all_finite()
+    };
+    if heal {
+        let scale = eps.powf(-0.25);
+        let (m, n) = (st.mom.rows, st.mom.cols);
+        st.l_hat = Some(Matrix::eye(m, scale));
+        st.r_hat = Some(Matrix::eye(n, scale));
+        st.guard.precond_resets += 1;
+    }
+    let (Some(l_hat), Some(r_hat)) = (&mut st.l_hat, &mut st.r_hat) else { return };
+    let gl = gram_left(g);
+    let gr = gram_right(g);
+    if gl.all_finite() && gr.all_finite() {
+        let new_l = jorge_update(l_hat, &gl);
+        let new_r = jorge_update(r_hat, &gr);
+        if new_l.all_finite() && new_r.all_finite() {
+            *l_hat = new_l;
+            *r_hat = new_r;
+            return;
+        }
+    }
+    // Damped retry: rebuild the grams from the max-abs-normalized
+    // gradient. Jorge's update normalizes by ||P^4 S||, so it is nearly
+    // scale-invariant in S — damping tames the overflow without changing
+    // the fixed point the estimate converges to.
+    st.guard.damped_retries += 1;
+    let gd = g.scale(1.0 / g.max_abs().max(1e-30));
+    let retry_l = jorge_update(l_hat, &gram_left(&gd));
+    let retry_r = jorge_update(r_hat, &gram_right(&gd));
+    if retry_l.all_finite() && retry_r.all_finite() {
+        *l_hat = retry_l;
+        *r_hat = retry_r;
+    } else {
+        st.guard.stale_preconds += 1;
     }
 }
 
 /// Apply half: precondition with the current estimates and take the
 /// grafted update (decoupled weight decay). Never refreshes.
+///
+/// Guardrails: a non-finite gradient freezes the layer for the step (no
+/// momentum EMA, no decay); a non-finite preconditioned gradient falls
+/// back to the grafted first-order direction.
 fn apply_layer(p: JorgeParams, st: &mut LayerState, param: &mut Matrix, g: &Matrix, ctx: StepCtx) {
+    if !g.all_finite() {
+        st.guard.nonfinite_grads += 1;
+        st.guard.skipped_updates += 1;
+        return;
+    }
     match (&st.l_hat, &st.r_hat) {
         (Some(l_hat), Some(r_hat)) => {
             let gtilde = matmul(&matmul(l_hat, g), r_hat);
-            grafted_update(param, g, &gtilde, &mut st.mom, &mut st.gmom, ctx, p.graft, true);
+            if gtilde.all_finite() {
+                grafted_update(param, g, &gtilde, &mut st.mom, &mut st.gmom, ctx, p.graft, true);
+            } else {
+                st.guard.graft_fallbacks += 1;
+                grafted_update(param, g, g, &mut st.mom, &mut st.gmom, ctx, p.graft, true);
+            }
         }
         _ => {
             grafted_update(param, g, g, &mut st.mom, &mut st.gmom, ctx, p.graft, true);
@@ -101,7 +162,7 @@ impl Optimizer for Jorge {
         let p = self.p;
         let body = |li: usize, param: &mut Matrix, st: &mut LayerState| {
             let g = &grads[li];
-            refresh_layer(st, g, ctx.update_precond);
+            refresh_layer(p.eps, st, g, ctx.update_precond);
             apply_layer(p, st, param, g, ctx);
         };
         let dims = self.layers.iter().flat_map(|s| [s.l_hat.as_ref(), s.r_hat.as_ref()]);
@@ -152,8 +213,16 @@ impl Optimizer for Jorge {
 
     fn refresh_layers(&mut self, layers: &[usize], grads: &[Matrix], update_precond: bool) {
         for &li in layers {
-            refresh_layer(&mut self.layers[li], &grads[li], update_precond);
+            refresh_layer(self.p.eps, &mut self.layers[li], &grads[li], update_precond);
         }
+    }
+
+    fn guard_report(&self) -> GuardReport {
+        let mut total = GuardReport::default();
+        for s in &self.layers {
+            total.merge(&s.guard);
+        }
+        total
     }
 
     fn apply_update(&mut self, params: &mut [Matrix], grads: &[Matrix], ctx: StepCtx) {
@@ -273,6 +342,66 @@ mod tests {
             let asym = l.sub(&l.t()).max_abs() / l.max_abs().max(1e-12);
             assert!(asym < 0.05, "step {i}: asym {asym}");
         }
+    }
+
+    #[test]
+    fn nan_gradient_freezes_layer_and_keeps_state_finite() {
+        let mut rng = Rng::new(8);
+        let mut p = vec![Matrix::randn(6, 4, 1.0, &mut rng)];
+        let mut opt = Jorge::new(&[(6, 4)], Hyper::default());
+        // healthy step first so state is non-trivial
+        let g_ok = vec![Matrix::randn(6, 4, 0.3, &mut rng)];
+        opt.step(&mut p, &g_ok, ctx(0.05, 1e-3, true));
+        assert_eq!(opt.guard_report().total(), 0, "healthy run must not trip guards");
+        let p_before = p[0].clone();
+        let l_before = opt.left_preconditioner(0).unwrap().clone();
+        let mut g_bad = Matrix::randn(6, 4, 0.3, &mut rng);
+        g_bad.data[5] = f32::NAN;
+        opt.step(&mut p, &[g_bad], ctx(0.05, 1e-3, true));
+        // layer frozen, preconditioner stale, everything still finite
+        assert_eq!(p[0], p_before);
+        assert_eq!(opt.left_preconditioner(0).unwrap(), &l_before);
+        let rep = opt.guard_report();
+        assert!(rep.nonfinite_grads >= 1);
+        assert_eq!(rep.skipped_updates, 1);
+        assert_eq!(rep.stale_preconds, 1);
+        // training continues cleanly afterwards
+        let g2 = vec![Matrix::randn(6, 4, 0.3, &mut rng)];
+        opt.step(&mut p, &g2, ctx(0.05, 1e-3, true));
+        assert!(p[0].all_finite());
+        assert!(opt.left_preconditioner(0).unwrap().all_finite());
+    }
+
+    #[test]
+    fn corrupted_preconditioner_self_heals_on_refresh() {
+        let mut rng = Rng::new(9);
+        let mut p = vec![Matrix::randn(6, 4, 1.0, &mut rng)];
+        let mut opt = Jorge::new(&[(6, 4)], Hyper::default());
+        // poison the estimate the way a corrupted all-gather import would
+        let n_l = 36;
+        let mut blob = opt.export_preconditioners(&[0]);
+        blob[n_l / 2] = f32::NAN;
+        opt.import_preconditioners(&[0], &blob);
+        assert!(!opt.left_preconditioner(0).unwrap().all_finite());
+        let g = vec![Matrix::randn(6, 4, 0.3, &mut rng)];
+        opt.step(&mut p, &g, ctx(0.05, 0.0, true));
+        assert!(opt.left_preconditioner(0).unwrap().all_finite(), "must self-heal");
+        assert!(p[0].all_finite());
+        assert_eq!(opt.guard_report().precond_resets, 1);
+    }
+
+    #[test]
+    fn overflowing_gradient_takes_damped_retry() {
+        let mut rng = Rng::new(10);
+        let mut p = vec![Matrix::randn(6, 4, 1.0, &mut rng)];
+        let mut opt = Jorge::new(&[(6, 4)], Hyper::default());
+        // finite but huge: the gram (entrywise ~1e40) overflows f32
+        let g = vec![Matrix::randn(6, 4, 1.0, &mut rng).scale(1e20)];
+        assert!(g[0].all_finite());
+        opt.refresh_layers(&[0], &g, true);
+        let rep = opt.guard_report();
+        assert_eq!(rep.damped_retries, 1);
+        assert!(opt.left_preconditioner(0).unwrap().all_finite());
     }
 
     #[test]

@@ -382,6 +382,80 @@ pub(crate) fn for_each_layer<S: Send>(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Numerical guardrails
+// ---------------------------------------------------------------------------
+
+/// Counters for the second-order numerical guardrails: every recovery
+/// action taken instead of propagating a NaN/Inf (or panicking). Summed
+/// across layers by [`Optimizer::guard_report`] and surfaced in the
+/// coordinator's `RunResult`. All zeros on a healthy run — the guarded
+/// paths are float-for-float identical to the unguarded ones for finite
+/// inputs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GuardReport {
+    /// Layer-steps where the incoming gradient was non-finite.
+    pub nonfinite_grads: usize,
+    /// Gram statistics rejected before the EMA (Shampoo — one poisoned
+    /// stat would otherwise contaminate every later refresh).
+    pub rejected_stats: usize,
+    /// Refreshes redone once with extra damping (downscaled gram /
+    /// bumped ridge) after the first attempt went non-finite.
+    pub damped_retries: usize,
+    /// Refreshes abandoned entirely — the stale preconditioner was kept
+    /// (sound degradation; Anil et al. 2021).
+    pub stale_preconds: usize,
+    /// Non-finite preconditioner estimates self-healed by resetting to
+    /// the eps-identity initialization.
+    pub precond_resets: usize,
+    /// Applies that fell back to the grafted first-order direction
+    /// because the preconditioned gradient was non-finite.
+    pub graft_fallbacks: usize,
+    /// Layer updates skipped outright (non-finite gradient: no momentum
+    /// EMA, no decay — the layer freezes for that step).
+    pub skipped_updates: usize,
+}
+
+impl GuardReport {
+    pub fn merge(&mut self, o: &GuardReport) {
+        self.nonfinite_grads += o.nonfinite_grads;
+        self.rejected_stats += o.rejected_stats;
+        self.damped_retries += o.damped_retries;
+        self.stale_preconds += o.stale_preconds;
+        self.precond_resets += o.precond_resets;
+        self.graft_fallbacks += o.graft_fallbacks;
+        self.skipped_updates += o.skipped_updates;
+    }
+
+    /// Total recovery actions (0 ⇔ nothing fired).
+    pub fn total(&self) -> usize {
+        self.nonfinite_grads
+            + self.rejected_stats
+            + self.damped_retries
+            + self.stale_preconds
+            + self.precond_resets
+            + self.graft_fallbacks
+            + self.skipped_updates
+    }
+}
+
+impl fmt::Display for GuardReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "nonfinite_grads={} rejected_stats={} damped_retries={} stale_preconds={} \
+             precond_resets={} graft_fallbacks={} skipped_updates={}",
+            self.nonfinite_grads,
+            self.rejected_stats,
+            self.damped_retries,
+            self.stale_preconds,
+            self.precond_resets,
+            self.graft_fallbacks,
+            self.skipped_updates
+        )
+    }
+}
+
 /// A training-step context supplied by the coordinator.
 #[derive(Clone, Copy, Debug)]
 pub struct StepCtx {
@@ -458,6 +532,12 @@ pub trait Optimizer: Send {
     /// returns the number of floats consumed from `data`.
     fn import_preconditioners(&mut self, _layers: &[usize], _data: &[f32]) -> usize {
         0
+    }
+
+    /// Accumulated numerical-guardrail counters (all zero for the
+    /// first-order optimizers and on healthy second-order runs).
+    fn guard_report(&self) -> GuardReport {
+        GuardReport::default()
     }
 }
 

@@ -14,7 +14,7 @@
 //! protocol is bitwise identical to the serial step.
 
 use super::{
-    for_each_layer, grafted_update, max_dim, Hyper, Optimizer, ShampooParams, StepCtx,
+    for_each_layer, grafted_update, max_dim, GuardReport, Hyper, Optimizer, ShampooParams, StepCtx,
     INNER_PAR_DIM,
 };
 use crate::tensor::{gram_left, gram_right, inv_fourth_root_eigh, inv_fourth_root_newton};
@@ -33,6 +33,7 @@ struct LayerState {
     pr: Option<Matrix>,
     mom: Matrix,
     gmom: Matrix,
+    guard: GuardReport,
 }
 
 pub struct Shampoo {
@@ -68,6 +69,7 @@ impl Shampoo {
                     pr: precond.then(|| Matrix::eye(n, pscale)),
                     mom: Matrix::zeros(m, n),
                     gmom: Matrix::zeros(m, n),
+                    guard: GuardReport::default(),
                 }
             })
             .collect();
@@ -84,6 +86,14 @@ fn root_of(method: RootMethod, p: ShampooParams, a: &Matrix) -> Matrix {
 
 /// Owner-computes half: EMA both gram stats (every step, Alg. 1 lines
 /// 5-8), then recompute the inverse fourth roots on update steps.
+///
+/// Guardrails (zero-cost on healthy inputs beyond an `all_finite` scan):
+/// a non-finite gradient or gram is rejected *before* the EMA — one
+/// poisoned stat would otherwise contaminate every later refresh — and
+/// the roots stay stale for the step; non-finite stats (corrupted
+/// import) self-heal to the eps-identity; a non-finite root recompute is
+/// retried once with a bumped ridge (DASH-style damping of the
+/// ill-conditioned inverse root) before falling back to stale roots.
 fn refresh_layer(
     p: ShampooParams,
     method: RootMethod,
@@ -91,25 +101,69 @@ fn refresh_layer(
     g: &Matrix,
     update: bool,
 ) {
-    let Some(lstat) = st.lstat.as_mut() else { return };
-    let b2 = p.beta2;
-    let gl = gram_left(g);
-    for i in 0..lstat.data.len() {
-        lstat.data[i] = b2 * lstat.data[i] + (1.0 - b2) * gl.data[i];
+    if st.lstat.is_none() {
+        return;
     }
-    let rstat = st.rstat.as_mut().unwrap();
-    let gr = gram_right(g);
-    for i in 0..rstat.data.len() {
-        rstat.data[i] = b2 * rstat.data[i] + (1.0 - b2) * gr.data[i];
+    let (gl, gr) = if g.all_finite() {
+        let gl = gram_left(g);
+        let gr = gram_right(g);
+        if gl.all_finite() && gr.all_finite() {
+            (Some(gl), Some(gr))
+        } else {
+            (None, None)
+        }
+    } else {
+        st.guard.nonfinite_grads += 1;
+        (None, None)
+    };
+    let Some(lstat) = st.lstat.as_mut() else { return };
+    let Some(rstat) = st.rstat.as_mut() else { return };
+    // self-heal stats a corrupted import left non-finite
+    if !lstat.all_finite() || !rstat.all_finite() {
+        *lstat = Matrix::eye(st.mom.rows, p.eps);
+        *rstat = Matrix::eye(st.mom.cols, p.eps);
+        st.guard.precond_resets += 1;
+    }
+    match (gl, gr) {
+        (Some(gl), Some(gr)) => {
+            let b2 = p.beta2;
+            for i in 0..lstat.data.len() {
+                lstat.data[i] = b2 * lstat.data[i] + (1.0 - b2) * gl.data[i];
+            }
+            for i in 0..rstat.data.len() {
+                rstat.data[i] = b2 * rstat.data[i] + (1.0 - b2) * gr.data[i];
+            }
+        }
+        _ => st.guard.rejected_stats += 1,
     }
     if update {
-        st.pl = Some(root_of(method, p, st.lstat.as_ref().unwrap()));
-        st.pr = Some(root_of(method, p, st.rstat.as_ref().unwrap()));
+        let new_pl = root_of(method, p, lstat);
+        let new_pr = root_of(method, p, rstat);
+        if new_pl.all_finite() && new_pr.all_finite() {
+            st.pl = Some(new_pl);
+            st.pr = Some(new_pr);
+            return;
+        }
+        // damped retry: bump the ridge and redo once
+        st.guard.damped_retries += 1;
+        let damped = ShampooParams { eps: (p.eps * 1e4).max(1e-8), ..p };
+        let retry_pl = root_of(method, damped, lstat);
+        let retry_pr = root_of(method, damped, rstat);
+        if retry_pl.all_finite() && retry_pr.all_finite() {
+            st.pl = Some(retry_pl);
+            st.pr = Some(retry_pr);
+        } else {
+            st.guard.stale_preconds += 1;
+        }
     }
 }
 
 /// Apply half: precondition with the current roots and take the grafted
 /// update (coupled L2). Never touches stats or roots.
+///
+/// Guardrails: a non-finite gradient freezes the layer for the step; a
+/// non-finite preconditioned gradient falls back to the grafted
+/// first-order direction.
 fn apply_layer(
     p: ShampooParams,
     st: &mut LayerState,
@@ -117,11 +171,24 @@ fn apply_layer(
     g: &Matrix,
     ctx: StepCtx,
 ) {
-    if st.pl.is_some() {
-        let gtilde = matmul(&matmul(st.pl.as_ref().unwrap(), g), st.pr.as_ref().unwrap());
-        grafted_update(param, g, &gtilde, &mut st.mom, &mut st.gmom, ctx, p.graft, false);
-    } else {
-        grafted_update(param, g, g, &mut st.mom, &mut st.gmom, ctx, p.graft, false);
+    if !g.all_finite() {
+        st.guard.nonfinite_grads += 1;
+        st.guard.skipped_updates += 1;
+        return;
+    }
+    match (&st.pl, &st.pr) {
+        (Some(pl), Some(pr)) => {
+            let gtilde = matmul(&matmul(pl, g), pr);
+            if gtilde.all_finite() {
+                grafted_update(param, g, &gtilde, &mut st.mom, &mut st.gmom, ctx, p.graft, false);
+            } else {
+                st.guard.graft_fallbacks += 1;
+                grafted_update(param, g, g, &mut st.mom, &mut st.gmom, ctx, p.graft, false);
+            }
+        }
+        _ => {
+            grafted_update(param, g, g, &mut st.mom, &mut st.gmom, ctx, p.graft, false);
+        }
     }
 }
 
@@ -196,6 +263,14 @@ impl Optimizer for Shampoo {
         for &li in layers {
             refresh_layer(p, method, &mut self.layers[li], &grads[li], update_precond);
         }
+    }
+
+    fn guard_report(&self) -> GuardReport {
+        let mut total = GuardReport::default();
+        for s in &self.layers {
+            total.merge(&s.guard);
+        }
+        total
     }
 
     fn apply_update(&mut self, params: &mut [Matrix], grads: &[Matrix], ctx: StepCtx) {
@@ -309,6 +384,45 @@ mod tests {
         let shampoo = Shampoo::new(&shapes, Hyper::default());
         let jorge = super::super::Jorge::new(&shapes, Hyper::default());
         assert!(shampoo.state_floats() > jorge.state_floats());
+    }
+
+    #[test]
+    fn nan_gradient_never_poisons_the_stat_ema() {
+        let mut rng = Rng::new(11);
+        let mut p = vec![Matrix::randn(6, 4, 1.0, &mut rng)];
+        let mut opt = Shampoo::new(&[(6, 4)], Hyper::default());
+        let g_ok = vec![Matrix::randn(6, 4, 0.3, &mut rng)];
+        opt.step(&mut p, &g_ok, ctx(0.05, 1e-3, true));
+        assert_eq!(opt.guard_report().total(), 0, "healthy run must not trip guards");
+        let stat_before = opt.layers[0].lstat.clone().unwrap();
+        let p_before = p[0].clone();
+        let mut g_bad = Matrix::randn(6, 4, 0.3, &mut rng);
+        g_bad.data[0] = f32::NAN;
+        opt.step(&mut p, &[g_bad], ctx(0.05, 1e-3, true));
+        // the EMA was protected: one poisoned stat would stay poisoned forever
+        assert_eq!(opt.layers[0].lstat.as_ref().unwrap(), &stat_before);
+        assert_eq!(p[0], p_before, "layer must freeze on a NaN gradient");
+        let rep = opt.guard_report();
+        assert!(rep.nonfinite_grads >= 1);
+        assert_eq!(rep.rejected_stats, 1);
+        assert_eq!(rep.skipped_updates, 1);
+        // next healthy step proceeds with finite state
+        let g2 = vec![Matrix::randn(6, 4, 0.3, &mut rng)];
+        opt.step(&mut p, &g2, ctx(0.05, 1e-3, true));
+        assert!(p[0].all_finite());
+        assert!(opt.layers[0].pl.as_ref().unwrap().all_finite());
+    }
+
+    #[test]
+    fn corrupted_stat_self_heals_on_refresh() {
+        let mut rng = Rng::new(12);
+        let g = vec![Matrix::randn(6, 4, 0.3, &mut rng)];
+        let mut opt = Shampoo::new(&[(6, 4)], Hyper::default());
+        opt.layers[0].lstat.as_mut().unwrap().data[7] = f32::INFINITY;
+        opt.refresh_layers(&[0], &g, true);
+        assert!(opt.layers[0].lstat.as_ref().unwrap().all_finite());
+        assert!(opt.layers[0].pl.as_ref().unwrap().all_finite());
+        assert_eq!(opt.guard_report().precond_resets, 1);
     }
 
     #[test]

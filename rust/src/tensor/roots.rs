@@ -78,7 +78,11 @@ pub fn jorge_update(p_hat: &Matrix, s: &Matrix) -> Matrix {
     let x = matmul(&p4, s);
 
     let nx = x.frobenius() as f32;
-    if nx <= 1e-30 {
+    // Guardrail: a non-finite statistic (NaN/Inf gradient upstream) fails
+    // the `<= 1e-30` check and would otherwise poison P forever; keep the
+    // stale estimate instead (stale preconditioners are a sound
+    // degradation mode — Anil et al. 2021).
+    if !nx.is_finite() || nx <= 1e-30 {
         return p_hat.clone();
     }
     let a = 1.0 / (4.0 * nx);
@@ -168,6 +172,23 @@ mod tests {
         let p = Matrix::eye(10, 5.0);
         let s = Matrix::zeros(10, 10);
         assert_eq!(jorge_update(&p, &s), p);
+    }
+
+    #[test]
+    fn jorge_update_nonfinite_statistic_keeps_stale_estimate() {
+        let p = Matrix::eye(6, 2.0);
+        let mut s = Matrix::zeros(6, 6);
+        s.data[3] = f32::NAN;
+        assert_eq!(jorge_update(&p, &s), p);
+        let mut s_inf = Matrix::zeros(6, 6);
+        s_inf.data[0] = f32::INFINITY;
+        assert_eq!(jorge_update(&p, &s_inf), p);
+        // a non-finite *estimate* stays non-finite (the optimizer layer
+        // detects this and self-heals by resetting to the eps-identity)
+        let mut p_bad = Matrix::eye(6, 1.0);
+        p_bad.data[1] = f32::NAN;
+        let s_ok = random_spd(6, 3, 0.5);
+        assert!(!jorge_update(&p_bad, &s_ok).all_finite());
     }
 
     #[test]

@@ -1,0 +1,166 @@
+//! Cross-backend checkpoint compatibility.
+//!
+//! The checkpoint format's cross-backend contract is the naming scheme:
+//! `param/{name}` / `state/{name}` keyed by the *manifest* input specs
+//! (identical for every backend, since all backends load the same
+//! manifest), plus `meta/global_step` and — native-mirror runs only —
+//! `native/{i:04}` / `native/step_count`. These tests pin that contract
+//! from the native side; the PJRT half runs when the `pjrt` feature and
+//! compiled artifacts are present.
+
+use jorge::config::{ScheduleKind, TrainConfig};
+use jorge::coordinator::{checkpoint, Trainer};
+use jorge::runtime::{ExecBackend, Manifest, NativeBackend, Role};
+use std::sync::Arc;
+
+fn backend() -> Arc<dyn ExecBackend> {
+    Arc::new(NativeBackend::new())
+}
+
+fn cfg(opt: &str, workers: usize) -> TrainConfig {
+    TrainConfig {
+        model: "mlp".into(),
+        optimizer: opt.parse().unwrap(),
+        epochs: 1,
+        steps_per_epoch: 4,
+        lr: 0.01,
+        weight_decay: 1e-4,
+        schedule: ScheduleKind::Constant,
+        precond_every: 2,
+        seed: 55,
+        workers,
+        dataset_size: 64 * 4 * workers.max(1) * 2,
+        eval_every_epochs: 1000,
+        backend: "native".into(),
+        ..Default::default()
+    }
+}
+
+fn tmp(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("jorge_compat_{tag}_{}", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+#[test]
+fn checkpoint_names_follow_manifest_spec_order() {
+    let eng = backend();
+    let c = cfg("jorge", 1);
+    let step_name = Manifest::train_name(&c.model, c.optimizer, true);
+    let spec = eng.load(&step_name).unwrap();
+    let mut expected: Vec<String> = Vec::new();
+    for input in &spec.spec().inputs {
+        match input.role {
+            Role::Param => expected.push(format!("param/{}", input.name)),
+            Role::State => expected.push(format!("state/{}", input.name)),
+            _ => {}
+        }
+    }
+    expected.push("meta/global_step".into());
+
+    let path = tmp("names");
+    let mut trainer = Trainer::new(c, eng).unwrap();
+    trainer.run().unwrap();
+    trainer.save_checkpoint(&path).unwrap();
+    let tensors = checkpoint::load(&path).unwrap();
+    let names: Vec<String> = tensors.iter().map(|(n, _)| n.clone()).collect();
+    assert_eq!(names, expected, "checkpoint naming drifted from the manifest contract");
+
+    // shapes must match the manifest specs, so any backend can validate
+    for (name, t) in &tensors {
+        if let Some(io) = spec
+            .spec()
+            .inputs
+            .iter()
+            .find(|i| name.strip_prefix("param/") == Some(i.name.as_str())
+                || name.strip_prefix("state/") == Some(i.name.as_str()))
+        {
+            assert_eq!(t.shape(), &io.shape[..], "{name}");
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn checkpoint_loads_into_a_fresh_backend_instance() {
+    // two independently-constructed backends must agree on the format
+    let path = tmp("roundtrip");
+    let mut a = Trainer::new(cfg("jorge", 1), backend()).unwrap();
+    a.run().unwrap();
+    let (loss_a, metric_a) = a.evaluate().unwrap();
+    a.save_checkpoint(&path).unwrap();
+
+    let mut b = Trainer::new(cfg("jorge", 1), backend()).unwrap();
+    b.load_checkpoint(&path).unwrap();
+    let (loss_b, metric_b) = b.evaluate().unwrap();
+    assert_eq!(loss_a.to_bits(), loss_b.to_bits());
+    assert_eq!(metric_a.to_bits(), metric_b.to_bits());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn native_mirror_state_rides_along_and_restores() {
+    // sharded runs carry the mirror's preconditioners + step counter
+    let path = tmp("native_state");
+    let mut a = Trainer::new(cfg("jorge_sharded", 2), backend()).unwrap();
+    a.run().unwrap();
+    a.save_checkpoint(&path).unwrap();
+
+    let tensors = checkpoint::load(&path).unwrap();
+    assert!(
+        tensors.iter().any(|(n, _)| n.starts_with("native/") && n != "native/step_count"),
+        "sharded checkpoint must carry native mirror state"
+    );
+    assert!(tensors.iter().any(|(n, _)| n == "native/step_count"));
+
+    let mut b = Trainer::new(cfg("jorge_sharded", 2), backend()).unwrap();
+    b.load_checkpoint(&path).unwrap();
+    let (la, ma) = a.evaluate().unwrap();
+    let (lb, mb) = b.evaluate().unwrap();
+    assert_eq!(la.to_bits(), lb.to_bits());
+    assert_eq!(ma.to_bits(), mb.to_bits());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn serial_checkpoint_has_no_native_state() {
+    // the artifact-only path must not grow hidden state the PJRT side
+    // would not know how to produce
+    let path = tmp("no_native");
+    let mut a = Trainer::new(cfg("jorge", 1), backend()).unwrap();
+    a.save_checkpoint(&path).unwrap();
+    let tensors = checkpoint::load(&path).unwrap();
+    assert!(tensors.iter().all(|(n, _)| !n.starts_with("native/")));
+    std::fs::remove_file(&path).ok();
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt_side {
+    use super::*;
+    use jorge::runtime::backend_for;
+
+    /// Native-saved checkpoints load into a PJRT-backed trainer (and
+    /// vice versa) because both sides key tensors off the same manifest.
+    /// Skips silently when no compiled artifacts are present.
+    #[test]
+    fn native_checkpoint_loads_under_pjrt() {
+        let Ok(pjrt) = backend_for("artifacts", "pjrt") else {
+            eprintln!("skipping: no compiled artifacts for the pjrt backend");
+            return;
+        };
+        let path = tmp("pjrt");
+        let mut c = cfg("jorge", 1);
+        let mut a = Trainer::new(c.clone(), backend()).unwrap();
+        a.run().unwrap();
+        a.save_checkpoint(&path).unwrap();
+
+        c.backend = "pjrt".into();
+        let mut b = Trainer::new(c, pjrt).unwrap();
+        b.load_checkpoint(&path).unwrap();
+        let (loss, metric) = b.evaluate().unwrap();
+        assert!(loss.is_finite() && metric.is_finite());
+        std::fs::remove_file(&path).ok();
+    }
+}

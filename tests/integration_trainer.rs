@@ -123,7 +123,7 @@ fn checkpoint_rejects_wrong_model() {
     let eng = backend();
     let path = std::env::temp_dir().join(format!("jorge_it_ckpt2_{}", std::process::id()));
     let path = path.to_str().unwrap().to_string();
-    let trainer = Trainer::new(tiny_cfg("jorge", 1), eng.clone()).unwrap();
+    let mut trainer = Trainer::new(tiny_cfg("jorge", 1), eng.clone()).unwrap();
     trainer.save_checkpoint(&path).unwrap();
 
     let mut cfg = tiny_cfg("sgd", 1); // different optimizer => state mismatch

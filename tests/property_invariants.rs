@@ -216,7 +216,7 @@ fn prop_ring_all_reduce_equals_sum() {
             }
         }
         let mut got = bufs.clone();
-        ring_all_reduce(&mut got);
+        ring_all_reduce(&mut got).unwrap();
         for (r, b) in got.iter().enumerate() {
             for i in 0..len {
                 if (b[i] - want[i]).abs() > 1e-3 * want[i].abs().max(1.0) {
@@ -238,8 +238,8 @@ fn prop_tree_equals_ring() {
             .collect();
         let mut a = bufs.clone();
         let mut b = bufs;
-        ring_all_reduce(&mut a);
-        tree_all_reduce(&mut b);
+        ring_all_reduce(&mut a).unwrap();
+        tree_all_reduce(&mut b).unwrap();
         for (x, y) in a[0].iter().zip(&b[0]) {
             if (x - y).abs() > 1e-3 * x.abs().max(1.0) {
                 return Err(format!("{x} vs {y}"));
