@@ -35,6 +35,7 @@ fn measured_artifact_times() -> anyhow::Result<Vec<Json>> {
     let models = if fast() { vec!["mlp"] } else { vec!["mlp", "cnn", "segnet"] };
     for model in models {
         let mut times = Vec::new();
+        let mut tails: Vec<(f64, f64)> = Vec::new();
         for opt in opts {
             let mut cfg = base_config(model);
             tune_for(&mut cfg, opt);
@@ -44,8 +45,10 @@ fn measured_artifact_times() -> anyhow::Result<Vec<Json>> {
             cfg.precond_every = 50; // paper Table 1 setting
             let mut trainer = Trainer::new(cfg, engine.clone())?;
             let r = trainer.run()?;
-            // drop the first (compile-heavy) iterations: use the run mean
+            // mean_iter_s already excludes the first (compile-heavy)
+            // iteration; the percentiles expose refresh-step spikes
             times.push(r.mean_iter_s);
+            tails.push((r.iter_p50_s, r.iter_p95_s));
         }
         table.row(&[
             model.to_string(),
@@ -56,8 +59,14 @@ fn measured_artifact_times() -> anyhow::Result<Vec<Json>> {
             format!("{:.2}x", times[2] / times[0]),
             format!("{:.2}x", times[3] / times[0]),
         ]);
-        let cells: Vec<(&str, f64)> = opts.iter().copied().zip(times.iter().copied()).collect();
-        rows.push(json_row(model, &cells));
+        let mut cells: Vec<(String, f64)> =
+            opts.iter().copied().map(String::from).zip(times.iter().copied()).collect();
+        for (opt, &(p50, p95)) in opts.iter().zip(&tails) {
+            cells.push((format!("{opt}_p50"), p50));
+            cells.push((format!("{opt}_p95"), p95));
+        }
+        let cell_refs: Vec<(&str, f64)> = cells.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        rows.push(json_row(model, &cell_refs));
     }
     table.print();
     Ok(rows)

@@ -30,6 +30,8 @@ pub enum FaultOp {
     GradReduce,
     /// The sharded-preconditioner ring all-gather.
     PrecondGather,
+    /// The eval-result tree broadcast (leader distributes val metrics).
+    EvalBcast,
 }
 
 impl fmt::Display for FaultOp {
@@ -37,6 +39,7 @@ impl fmt::Display for FaultOp {
         match self {
             FaultOp::GradReduce => write!(f, "grad"),
             FaultOp::PrecondGather => write!(f, "precond"),
+            FaultOp::EvalBcast => write!(f, "eval"),
         }
     }
 }
@@ -182,9 +185,11 @@ pub fn tree_all_reduce(buffers: &mut [Vec<f32>]) -> Result<(), CollectiveError> 
 /// preconditioners it refreshed). n-1 forwarding steps; at step `s`,
 /// rank `r` forwards chunk `(r + n - s) % n` — the one it received the
 /// previous step — to rank `r + 1`. Ragged chunks are the point, so
-/// this collective has no failure mode of its own; faults are injected
-/// through [`FaultSession::all_gather`].
-pub fn ring_all_gather(chunks: &[Vec<f32>]) -> Vec<Vec<f32>> {
+/// this schedule has no intrinsic failure mode today, but it returns
+/// the typed `Result` every other collective does so fault-aware
+/// callers ([`FaultSession::all_gather`]) thread one error type and
+/// `--faults` events against the gather are never silently unroutable.
+pub fn ring_all_gather(chunks: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, CollectiveError> {
     let n = chunks.len();
     let mut offsets = Vec::with_capacity(n + 1);
     let mut total = 0usize;
@@ -198,7 +203,7 @@ pub fn ring_all_gather(chunks: &[Vec<f32>]) -> Vec<Vec<f32>> {
         out[r][offsets[r]..offsets[r + 1]].copy_from_slice(c);
     }
     if n <= 1 {
-        return out;
+        return Ok(out);
     }
     for s in 0..n - 1 {
         for r in 0..n {
@@ -212,7 +217,7 @@ pub fn ring_all_gather(chunks: &[Vec<f32>]) -> Vec<Vec<f32>> {
             b[lo..hi].copy_from_slice(&a[lo..hi]);
         }
     }
-    out
+    Ok(out)
 }
 
 /// Binomial-tree broadcast from `root`: after ceil(log2 n) rounds every
@@ -318,11 +323,12 @@ pub struct FaultEvent {
 /// kind@step:rank[:op][:xN]
 /// kind = drop | delay | corrupt
 /// rank = r3 or 3
-/// op   = grad (default) | precond
+/// op   = grad (default) | precond | eval
 /// xN   = delay retry count (delay only, default x1)
 /// ```
 ///
-/// e.g. `drop@3:r1:precond`, `delay@5:r0:grad:x2`, `corrupt@2:r1`.
+/// e.g. `drop@3:r1:precond`, `delay@5:r0:grad:x2`, `corrupt@2:r1`,
+/// `drop@2:r1:eval` (the eval-result broadcast).
 #[derive(Clone, Debug, Default)]
 pub struct FaultPlan {
     pub events: Vec<FaultEvent>,
@@ -361,6 +367,7 @@ impl FaultPlan {
                 match extra {
                     "grad" => op = FaultOp::GradReduce,
                     "precond" => op = FaultOp::PrecondGather,
+                    "eval" => op = FaultOp::EvalBcast,
                     _ if extra.starts_with('x') => {
                         attempts = extra[1..]
                             .parse()
@@ -522,6 +529,75 @@ impl FaultSession {
         pick
     }
 
+    /// Poison up to 8 seeded positions of `buf` with NaN; returns how
+    /// many were written.
+    fn poison(&mut self, buf: &mut [f32]) -> usize {
+        let n = buf.len().min(8);
+        for _ in 0..n {
+            let j = self.rng.below(buf.len() as u64) as usize;
+            buf[j] = f32::NAN;
+        }
+        n
+    }
+
+    /// Resolve a drop or delay event: liveness, telemetry, and retry
+    /// accounting. `Err` means the rank is gone (drop or exhausted
+    /// retry budget); a recovered delay returns `Ok`.
+    fn drop_or_delay(
+        &mut self,
+        step: usize,
+        op: FaultOp,
+        ev: FaultEvent,
+    ) -> Result<(), CollectiveError> {
+        match ev.kind {
+            FaultKind::Drop => {
+                self.mark_dead(ev.rank);
+                self.records.push(FaultRecord {
+                    step,
+                    rank: ev.rank,
+                    op,
+                    kind: ev.kind,
+                    action: "dropped; survivors re-form the ring".to_string(),
+                });
+                Err(CollectiveError::WorkerDropped { rank: ev.rank, step, op })
+            }
+            FaultKind::Delay { attempts } => {
+                if attempts >= self.policy.max_attempts {
+                    self.mark_dead(ev.rank);
+                    self.records.push(FaultRecord {
+                        step,
+                        rank: ev.rank,
+                        op,
+                        kind: ev.kind,
+                        action: format!(
+                            "timed out after {} attempts; treated as dropped",
+                            self.policy.max_attempts
+                        ),
+                    });
+                    return Err(CollectiveError::Timeout {
+                        rank: ev.rank,
+                        step,
+                        op,
+                        attempts: self.policy.max_attempts,
+                    });
+                }
+                for a in 0..attempts {
+                    self.retries += 1;
+                    self.modeled_backoff_s += self.policy.backoff_s(a);
+                }
+                self.records.push(FaultRecord {
+                    step,
+                    rank: ev.rank,
+                    op,
+                    kind: ev.kind,
+                    action: format!("recovered after {attempts} retries"),
+                });
+                Ok(())
+            }
+            FaultKind::Corrupt => Ok(()),
+        }
+    }
+
     /// Apply every fault scheduled for (step, op) to `buffers` (one per
     /// entry of `ranks`, in the same order). Returns `Err` on a drop or
     /// timeout — buffers are then untouched for drops, and the caller
@@ -537,60 +613,10 @@ impl FaultSession {
         while let Some(i) = self.take_event(step, op, ranks) {
             let ev = self.plan.events[i];
             match ev.kind {
-                FaultKind::Drop => {
-                    self.mark_dead(ev.rank);
-                    self.records.push(FaultRecord {
-                        step,
-                        rank: ev.rank,
-                        op,
-                        kind: ev.kind,
-                        action: "dropped; survivors re-form the ring".to_string(),
-                    });
-                    return Err(CollectiveError::WorkerDropped { rank: ev.rank, step, op });
-                }
-                FaultKind::Delay { attempts } => {
-                    if attempts >= self.policy.max_attempts {
-                        self.mark_dead(ev.rank);
-                        self.records.push(FaultRecord {
-                            step,
-                            rank: ev.rank,
-                            op,
-                            kind: ev.kind,
-                            action: format!(
-                                "timed out after {} attempts; treated as dropped",
-                                self.policy.max_attempts
-                            ),
-                        });
-                        return Err(CollectiveError::Timeout {
-                            rank: ev.rank,
-                            step,
-                            op,
-                            attempts: self.policy.max_attempts,
-                        });
-                    }
-                    for a in 0..attempts {
-                        self.retries += 1;
-                        self.modeled_backoff_s += self.policy.backoff_s(a);
-                    }
-                    self.records.push(FaultRecord {
-                        step,
-                        rank: ev.rank,
-                        op,
-                        kind: ev.kind,
-                        action: format!("recovered after {attempts} retries"),
-                    });
-                }
+                FaultKind::Drop | FaultKind::Delay { .. } => self.drop_or_delay(step, op, ev)?,
                 FaultKind::Corrupt => {
                     let slot = ranks.iter().position(|&r| r == ev.rank);
-                    let poisoned = slot.map_or(0, |s| {
-                        let buf = &mut buffers[s];
-                        let n = buf.len().min(8);
-                        for _ in 0..n {
-                            let j = self.rng.below(buf.len() as u64) as usize;
-                            buf[j] = f32::NAN;
-                        }
-                        n
-                    });
+                    let poisoned = slot.map_or(0, |s| self.poison(&mut buffers[s]));
                     self.records.push(FaultRecord {
                         step,
                         rank: ev.rank,
@@ -625,7 +651,60 @@ impl FaultSession {
         ranks: &[usize],
     ) -> Result<Vec<Vec<f32>>, CollectiveError> {
         self.inject(step, FaultOp::PrecondGather, chunks, ranks)?;
-        Ok(ring_all_gather(chunks))
+        ring_all_gather(chunks)
+    }
+
+    /// Fault-aware tree broadcast from world rank `root` (the
+    /// eval-result distribution). `ranks[i]` owns `buffers[i]`; `root`
+    /// must be a member of `ranks`. `corrupt` on the root poisons the
+    /// payload before it fans out (every rank receives NaNs); on a
+    /// non-root rank it poisons that rank's received copy after the
+    /// schedule runs — either way the event is recorded instead of
+    /// silently ignored.
+    pub fn broadcast(
+        &mut self,
+        step: usize,
+        buffers: &mut [Vec<f32>],
+        ranks: &[usize],
+        root: usize,
+    ) -> Result<(), CollectiveError> {
+        debug_assert_eq!(buffers.len(), ranks.len());
+        let root_slot = ranks
+            .iter()
+            .position(|&r| r == root)
+            .ok_or(CollectiveError::RootOutOfRange { root, world: ranks.len() })?;
+        let mut recv_corrupt: Vec<usize> = Vec::new();
+        while let Some(i) = self.take_event(step, FaultOp::EvalBcast, ranks) {
+            let ev = self.plan.events[i];
+            match ev.kind {
+                FaultKind::Drop | FaultKind::Delay { .. } => {
+                    self.drop_or_delay(step, FaultOp::EvalBcast, ev)?;
+                }
+                FaultKind::Corrupt => {
+                    let poisoned = if ev.rank == root {
+                        self.poison(&mut buffers[root_slot])
+                    } else {
+                        // defer: the broadcast would overwrite it
+                        if let Some(s) = ranks.iter().position(|&r| r == ev.rank) {
+                            recv_corrupt.push(s);
+                        }
+                        buffers.get(root_slot).map_or(0, |b| b.len().min(8))
+                    };
+                    self.records.push(FaultRecord {
+                        step,
+                        rank: ev.rank,
+                        op: FaultOp::EvalBcast,
+                        kind: ev.kind,
+                        action: format!("poisoned {poisoned} values with NaN"),
+                    });
+                }
+            }
+        }
+        tree_broadcast(buffers, root_slot)?;
+        for s in recv_corrupt {
+            let _ = self.poison(&mut buffers[s]);
+        }
+        Ok(())
     }
 }
 
@@ -826,7 +905,7 @@ mod tests {
                 })
                 .collect();
             let want: Vec<f32> = chunks.iter().flatten().copied().collect();
-            let out = ring_all_gather(&chunks);
+            let out = ring_all_gather(&chunks).unwrap();
             assert_eq!(out.len(), n);
             for (r, b) in out.iter().enumerate() {
                 assert_eq!(b, &want, "n={n} rank={r}");
@@ -836,9 +915,9 @@ mod tests {
 
     #[test]
     fn all_gather_single_rank_returns_own_chunk() {
-        let out = ring_all_gather(&[vec![1.0, 2.0, 3.0]]);
+        let out = ring_all_gather(&[vec![1.0, 2.0, 3.0]]).unwrap();
         assert_eq!(out, vec![vec![1.0, 2.0, 3.0]]);
-        assert!(ring_all_gather(&[]).is_empty());
+        assert!(ring_all_gather(&[]).unwrap().is_empty());
     }
 
     #[test]
@@ -873,6 +952,10 @@ mod tests {
         assert!(FaultPlan::parse("explode@1:r0", 0).is_err());
         assert!(FaultPlan::parse("drop@x:r0", 0).is_err());
         assert!(FaultPlan::parse("drop@1:r0:sideways", 0).is_err());
+        // the eval-broadcast op is addressable
+        let ev = FaultPlan::parse("drop@2:r1:eval", 0).unwrap().events[0];
+        assert_eq!(ev.op, FaultOp::EvalBcast);
+        assert_eq!(ev.op.to_string(), "eval");
     }
 
     #[test]
@@ -982,6 +1065,62 @@ mod tests {
         let mut survivors = vec![chunks[0].clone(), chunks[2].clone()];
         let out = sess.all_gather(4, &mut survivors, &[0, 2]).unwrap();
         assert_eq!(out, vec![vec![1.0, 3.0], vec![1.0, 3.0]]);
+    }
+
+    #[test]
+    fn session_broadcast_routes_faults() {
+        // drop during the eval broadcast surfaces as a typed error
+        let plan = FaultPlan::parse("drop@3:r2:eval", 0).unwrap();
+        let mut sess = FaultSession::new(plan, 4);
+        let mut bufs: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32; 2]).collect();
+        match sess.broadcast(3, &mut bufs, &[0, 1, 2, 3], 0) {
+            Err(CollectiveError::WorkerDropped { rank: 2, step: 3, op: FaultOp::EvalBcast }) => {}
+            other => panic!("expected eval-broadcast drop, got {other:?}"),
+        }
+        assert!(!sess.is_alive(2));
+        // survivors re-broadcast successfully
+        let mut survivors = vec![vec![7.0f32, 8.0], vec![0.0; 2], vec![0.0; 2]];
+        sess.broadcast(3, &mut survivors, &[0, 1, 3], 0).unwrap();
+        assert!(survivors.iter().all(|b| b == &vec![7.0, 8.0]));
+        assert_eq!(sess.records().len(), 1);
+    }
+
+    #[test]
+    fn session_broadcast_corrupt_root_and_receiver() {
+        // root corruption fans out to every rank
+        let plan = FaultPlan::parse("corrupt@1:r0:eval", 5).unwrap();
+        let mut sess = FaultSession::new(plan, 3);
+        let mut bufs = vec![vec![1.0f32; 16], vec![0.0f32; 16], vec![0.0f32; 16]];
+        sess.broadcast(1, &mut bufs, &[0, 1, 2], 0).unwrap();
+        for b in &bufs {
+            assert!(b.iter().any(|v| v.is_nan()), "root corruption must propagate");
+        }
+        // receiver corruption survives the overwrite (poisoned after)
+        let plan = FaultPlan::parse("corrupt@1:r2:eval", 5).unwrap();
+        let mut sess = FaultSession::new(plan, 3);
+        let mut bufs = vec![vec![1.0f32; 16], vec![0.0f32; 16], vec![0.0f32; 16]];
+        sess.broadcast(1, &mut bufs, &[0, 1, 2], 0).unwrap();
+        assert!(bufs[0].iter().all(|v| v.is_finite()));
+        assert!(bufs[1].iter().all(|v| v.is_finite()));
+        assert!(bufs[2].iter().any(|v| v.is_nan()), "receiver copy must stay poisoned");
+        assert_eq!(sess.records().len(), 1);
+    }
+
+    #[test]
+    fn session_broadcast_no_fault_matches_plain_tree() {
+        let mut sess = FaultSession::new(FaultPlan::default(), 4);
+        let mut a: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32 + 0.5; 6]).collect();
+        let mut b = a.clone();
+        sess.broadcast(0, &mut a, &[0, 1, 2, 3], 1).unwrap();
+        tree_broadcast(&mut b, 1).unwrap();
+        assert_eq!(a, b);
+        assert!(sess.records().is_empty());
+        // root must be a member of the live set
+        let mut bufs = vec![vec![0.0f32; 2], vec![0.0f32; 2]];
+        assert!(matches!(
+            sess.broadcast(0, &mut bufs, &[0, 2], 1),
+            Err(CollectiveError::RootOutOfRange { root: 1, .. })
+        ));
     }
 
     #[test]

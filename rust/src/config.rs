@@ -310,6 +310,11 @@ pub struct TrainConfig {
     /// Resume mode: "" (fresh), "auto" (newest valid checkpoint in
     /// `checkpoint_dir`, skipping corrupt files), or an explicit path.
     pub resume: String,
+    /// Per-step phase-trace JSONL output path (empty = tracing off).
+    pub trace_path: String,
+    /// Run-summary metrics JSON output path (empty = off). Uses the
+    /// `BENCH_*.json` envelope so `jorge bench-diff` can diff it.
+    pub metrics_out: String,
 }
 
 impl Default for TrainConfig {
@@ -342,6 +347,8 @@ impl Default for TrainConfig {
             checkpoint_every: 0,
             checkpoint_dir: String::new(),
             resume: String::new(),
+            trace_path: String::new(),
+            metrics_out: String::new(),
         }
     }
 }
@@ -389,6 +396,8 @@ impl TrainConfig {
             checkpoint_every: t.usize_or("train.checkpoint_every", d.checkpoint_every),
             checkpoint_dir: t.str_or("paths.checkpoints", &d.checkpoint_dir),
             resume: t.str_or("train.resume", &d.resume),
+            trace_path: t.str_or("paths.trace", &d.trace_path),
+            metrics_out: t.str_or("paths.metrics_out", &d.metrics_out),
         };
         cfg.validate()?;
         Ok(cfg)

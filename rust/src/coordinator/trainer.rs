@@ -51,12 +51,15 @@ use crate::collectives::{
 };
 use crate::config::{ShardPolicy, TrainConfig};
 use crate::data::{for_model, Dataset, Sharder};
-use crate::metricsio::{CsvWriter, Stopwatch, Summary};
+use crate::jsonio::Json;
+use crate::metricsio::{CsvWriter, JsonlWriter, Stopwatch, Summary};
 use crate::optim::{self, GuardReport, Hyper, Optimizer, OptimizerKind, Schedule, StepCtx};
 use crate::rngx::Rng;
 use crate::runtime::{Dtype, ExecBackend, ExecStep, HostTensor, Manifest, Role};
-use crate::tensor::Matrix;
+use crate::tensor::{dispatch_counters, Matrix};
+use crate::trace::{self, MetricsReport, Phase};
 use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// Per-epoch summary record.
@@ -82,7 +85,13 @@ pub struct RunResult {
     pub epochs_to_target: Option<usize>,
     pub time_to_target_s: Option<f64>,
     pub total_time_s: f64,
+    /// Mean step time over the *warm* iterations: the first measured
+    /// step (pool spawn, cache-cold GEMMs) is excluded whenever more
+    /// than one step ran, so bench tables aren't skewed by warmup.
     pub mean_iter_s: f64,
+    /// Warm step-time percentiles (same exclusion as `mean_iter_s`).
+    pub iter_p50_s: f64,
+    pub iter_p95_s: f64,
     pub final_val_metric: f64,
     pub best_val_metric: f64,
     /// Sharding telemetry; `None` for serial optimizers.
@@ -92,6 +101,9 @@ pub struct RunResult {
     pub guard: GuardReport,
     /// Fault-injection telemetry; `None` when no fault plan was active.
     pub faults: Option<FaultReport>,
+    /// Phase timings + unified counters; `None` unless tracing was on
+    /// (`--trace` / `--metrics-out`, or `trace::set_enabled` in tests).
+    pub metrics: Option<MetricsReport>,
 }
 
 /// What the sharded step path actually did, for benches and tests:
@@ -504,6 +516,7 @@ impl Trainer {
             (Some(skip), false) => skip.clone(),
             _ => self.train_full.clone(),
         };
+        let data_scope = trace::scope(Phase::Data);
         let (x, y) = self.batch_tensors(step.as_ref(), indices)?;
         let mut inputs: Vec<HostTensor> =
             Vec::with_capacity(self.params.len() + self.opt_state.len() + 4);
@@ -513,6 +526,7 @@ impl Trainer {
         inputs.push(y);
         inputs.push(HostTensor::scalar_f32(lr as f32));
         inputs.push(HostTensor::scalar_f32(self.cfg.weight_decay as f32));
+        drop(data_scope);
 
         let mut outputs = step.run(&inputs)?;
         let metric = outputs
@@ -545,10 +559,12 @@ impl Trainer {
             return Err(anyhow!("no live workers remain"));
         }
         let grad_step = self.grad.clone();
+        let data_scope = trace::scope(Phase::Data);
         let mut batches = Vec::with_capacity(live.len());
         for &r in &live {
             batches.push(self.batch_tensors(grad_step.as_ref(), &worker_indices[r])?);
         }
+        drop(data_scope);
         let params = &self.params;
 
         // fan out gradient computation over the live ranks
@@ -591,6 +607,7 @@ impl Trainer {
         }
 
         // bucket-flatten each live worker's grads
+        let reduce_scope = trace::scope(Phase::GradReduce);
         let mut buffers: Vec<Vec<f32>> = Vec::with_capacity(grads_per_worker.len());
         for gs in &grads_per_worker {
             let mut flat = Vec::new();
@@ -654,6 +671,7 @@ impl Trainer {
             ));
             off += n;
         }
+        drop(reduce_scope);
 
         if self.shard.is_some() {
             self.sharded_apply(reduced, lr)?;
@@ -724,13 +742,14 @@ impl Trainer {
         }
 
         if update {
+            let gather_scope = trace::scope(Phase::PrecondGather);
             match self.fault.as_mut() {
                 None => {
                     // fault-free path: float-for-float the serial step
                     let chunks: Vec<Vec<f32>> =
                         shard.owned.iter().map(|ls| native.export_preconditioners(ls)).collect();
                     let chunk_bytes: Vec<usize> = chunks.iter().map(|c| 4 * c.len()).collect();
-                    let gathered = ring_all_gather(&chunks);
+                    let gathered = ring_all_gather(&chunks)?;
                     shard.allgather_calls += 1;
                     shard.allgather_floats += gathered.last().map_or(0, |b| b.len());
                     shard.modeled_comm_s += shard.comm.all_gather_ragged_time(&chunk_bytes);
@@ -819,6 +838,7 @@ impl Trainer {
                     }
                 }
             }
+            drop(gather_scope);
         }
 
         native.apply_update(
@@ -837,7 +857,9 @@ impl Trainer {
     fn apply_reduced(&mut self, grads: Vec<HostTensor>, lr: f64) -> Result<()> {
         let update = self.precond_update_now();
         if let Some(native) = &mut self.native_opt {
-            // native mirror path
+            // native mirror path: the fused step() runs refresh + apply
+            // back to back, so its whole cost is attributed to Apply
+            let _apply_scope = trace::scope(Phase::Apply);
             let mut mats = to_matrices(&self.params)?;
             let gmats = to_matrices(&grads)?;
             native.step(
@@ -860,6 +882,7 @@ impl Trainer {
             (Some(skip), false) => skip.clone(),
             _ => self.apply_full.clone(),
         };
+        let _apply_scope = trace::scope(Phase::Apply);
         let mut inputs: Vec<HostTensor> =
             Vec::with_capacity(2 * self.n_params + self.opt_state.len() + 2);
         inputs.extend(self.params.iter().cloned());
@@ -878,7 +901,16 @@ impl Trainer {
     }
 
     /// Held-out evaluation: mean loss/metric over EVAL_BATCHES batches.
-    pub fn evaluate(&self) -> Result<(f64, f64)> {
+    ///
+    /// The leader computes the result; with a fault session active the
+    /// `[loss, metric]` pair is then pushed through the fault-aware tree
+    /// broadcast, so `--faults` events against the `eval` op are actually
+    /// routable (a rank lost here is shed like any other collective
+    /// casualty, a corrupted receiver copy is re-fetched from the
+    /// leader). The leader's f64 values stay authoritative either way, so
+    /// eval numerics are bitwise independent of the fault plan.
+    pub fn evaluate(&mut self) -> Result<(f64, f64)> {
+        let _eval_scope = trace::scope(Phase::Eval);
         let meta = self
             .engine
             .manifest()
@@ -902,7 +934,47 @@ impl Trainer {
             loss.add(out[0].scalar());
             metric.add(out[1].scalar());
         }
-        Ok((loss.mean(), metric.mean()))
+        let (loss, metric) = (loss.mean(), metric.mean());
+        self.broadcast_eval_result(loss, metric)?;
+        Ok((loss, metric))
+    }
+
+    /// Distribute the leader's eval result to the live ranks through the
+    /// fault session (no-op without one). Ranks lost mid-broadcast are
+    /// shed and the survivors retry; corrupted receiver copies are
+    /// counted and discarded in favour of the leader's values.
+    fn broadcast_eval_result(&mut self, loss: f64, metric: f64) -> Result<()> {
+        let Some(fault) = self.fault.as_mut() else { return Ok(()) };
+        let step = self.global_step;
+        let mut ranks = fault.live_ranks();
+        loop {
+            if ranks.is_empty() {
+                return Err(anyhow!("every worker was lost during the eval broadcast"));
+            }
+            let root = ranks[0];
+            let mut bufs: Vec<Vec<f32>> =
+                ranks.iter().map(|_| vec![loss as f32, metric as f32]).collect();
+            match fault.broadcast(step, &mut bufs, &ranks, root) {
+                Ok(()) => {
+                    let corrupted =
+                        bufs.iter().filter(|b| b.iter().any(|v| !v.is_finite())).count();
+                    trace::incr("fault.eval_corrupt_refetches", corrupted as u64);
+                    return Ok(());
+                }
+                Err(
+                    CollectiveError::WorkerDropped { rank, .. }
+                    | CollectiveError::Timeout { rank, .. },
+                ) => {
+                    eprintln!(
+                        "[faults] step {step}: rank {rank} lost during eval broadcast; \
+                         continuing with {} survivor(s)",
+                        ranks.len() - 1
+                    );
+                    ranks.retain(|&r| r != rank);
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
     }
 
     /// Apply `cfg.resume`: `""` starts fresh, `"auto"` restores the
@@ -945,6 +1017,31 @@ impl Trainer {
     /// epoch), so a resumed run continues bitwise-identically to an
     /// uninterrupted one.
     pub fn run(&mut self) -> Result<RunResult> {
+        // arm the trace registry when the run asked for it; leave it
+        // untouched (still a single relaxed load per scope) otherwise
+        let self_enabled = !trace::enabled()
+            && (!self.cfg.trace_path.is_empty() || !self.cfg.metrics_out.is_empty());
+        if self_enabled {
+            trace::set_enabled(true);
+        }
+        let tracing = trace::enabled();
+        let mut trace_log = if tracing && !self.cfg.trace_path.is_empty() {
+            Some(JsonlWriter::create(&self.cfg.trace_path)?)
+        } else {
+            None
+        };
+        if let Some(w) = &mut trace_log {
+            let mut ev = BTreeMap::new();
+            ev.insert("event".to_string(), Json::Str("run_start".to_string()));
+            ev.insert("model".to_string(), Json::Str(self.cfg.model.clone()));
+            ev.insert("optimizer".to_string(), Json::Str(self.kind.to_string()));
+            ev.insert("workers".to_string(), Json::Num(self.cfg.workers as f64));
+            ev.insert("precond_every".to_string(), Json::Num(self.cfg.precond_every as f64));
+            ev.insert("seed".to_string(), Json::Num(self.cfg.seed as f64));
+            w.write(&Json::Obj(ev))?;
+        }
+        let pool_baseline = dispatch_counters();
+
         self.maybe_resume()?;
         let resume_step = self.global_step;
         let ckpt_dir = self.checkpoint_dir();
@@ -967,6 +1064,10 @@ impl Trainer {
         };
         let sw = Stopwatch::new();
         let mut iter_times = Summary::new();
+        // warm-iteration stats: skip the first measured step (pool
+        // spawn, cache-cold code paths) so reported means/percentiles
+        // reflect steady state
+        let mut warm_times = Summary::new();
         let sharder = Sharder {
             dataset_len: self.cfg.dataset_size,
             workers: self.cfg.workers,
@@ -1011,7 +1112,11 @@ impl Trainer {
                         .collect();
                     self.data_parallel_step(&worker_indices, lr_now)?
                 };
-                iter_times.add(t0.elapsed().as_secs_f64());
+                let dt = t0.elapsed().as_secs_f64();
+                iter_times.add(dt);
+                if iter_times.count() > 1 {
+                    warm_times.add(dt);
+                }
                 self.global_step += 1;
                 seen += 1;
                 ep_loss.add(loss);
@@ -1020,14 +1125,51 @@ impl Trainer {
                 if self.cfg.checkpoint_every > 0
                     && self.global_step % self.cfg.checkpoint_every == 0
                 {
+                    let ckpt_scope = trace::scope(Phase::Checkpoint);
                     let path = super::checkpoint::step_path(&ckpt_dir, self.global_step)
                         .to_string_lossy()
                         .to_string();
                     self.save_checkpoint(&path)?;
+                    drop(ckpt_scope);
+                }
+                if let Some(rows) = trace::flush_step() {
+                    if let Some(w) = &mut trace_log {
+                        let mut ev = BTreeMap::new();
+                        ev.insert("event".to_string(), Json::Str("step".to_string()));
+                        ev.insert(
+                            "step".to_string(),
+                            Json::Num((self.global_step - 1) as f64),
+                        );
+                        ev.insert("loss".to_string(), Json::Num(loss));
+                        ev.insert("wall_s".to_string(), Json::Num(dt));
+                        let phases: BTreeMap<String, Json> = rows
+                            .iter()
+                            .map(|(name, s)| (name.to_string(), Json::Num(*s)))
+                            .collect();
+                        ev.insert("phases".to_string(), Json::Obj(phases));
+                        w.write(&Json::Obj(ev))?;
+                    }
                 }
             }
 
             let (val_loss, val_metric) = self.evaluate()?;
+            // roll eval time into its own trace row so step rows stay
+            // strictly per-training-step
+            if let Some(rows) = trace::flush_step() {
+                if let Some(w) = &mut trace_log {
+                    let mut ev = BTreeMap::new();
+                    ev.insert("event".to_string(), Json::Str("eval".to_string()));
+                    ev.insert("epoch".to_string(), Json::Num(epoch as f64));
+                    ev.insert("val_loss".to_string(), Json::Num(val_loss));
+                    ev.insert("val_metric".to_string(), Json::Num(val_metric));
+                    let phases: BTreeMap<String, Json> = rows
+                        .iter()
+                        .map(|(name, s)| (name.to_string(), Json::Num(*s)))
+                        .collect();
+                    ev.insert("phases".to_string(), Json::Obj(phases));
+                    w.write(&Json::Obj(ev))?;
+                }
+            }
             let rec = EpochRecord {
                 epoch,
                 lr: lr_now,
@@ -1057,11 +1199,58 @@ impl Trainer {
         }
 
         result.total_time_s = sw.total();
-        result.mean_iter_s = iter_times.mean();
+        // warm stats when available (any run of >= 2 steps); a 0/1-step
+        // run falls back to the raw samples
+        let stats = if warm_times.count() > 0 { &warm_times } else { &iter_times };
+        result.mean_iter_s = stats.mean();
+        if stats.count() > 0 {
+            result.iter_p50_s = stats.percentile(50.0);
+            result.iter_p95_s = stats.percentile(95.0);
+        }
         result.final_val_metric = result.epochs.last().map(|e| e.val_metric).unwrap_or(0.0);
         result.shard = self.shard_report();
         result.guard = self.guard_report();
         result.faults = self.fault_report();
+
+        if tracing {
+            // unify every subsystem's counters in the one registry
+            for (name, v) in result.guard.counter_pairs() {
+                trace::incr(&format!("guard.{name}"), v as u64);
+            }
+            if let Some(sh) = &result.shard {
+                trace::incr("shard.allgather_calls", sh.allgather_calls as u64);
+                trace::incr("shard.allgather_floats", sh.allgather_floats as u64);
+                trace::incr("shard.stale_fallback_layers", sh.stale_fallback_layers as u64);
+                trace::incr("shard.reassignments", sh.reassignments as u64);
+                trace::set_gauge("shard.modeled_comm_s", sh.modeled_comm_s);
+            }
+            if let Some(f) = &result.faults {
+                trace::incr("fault.events", f.events.len() as u64);
+                trace::incr("fault.retries", f.retries as u64);
+                trace::incr("fault.dropped", f.dropped.len() as u64);
+                trace::set_gauge("fault.modeled_backoff_s", f.modeled_backoff_s);
+            }
+            let pd = dispatch_counters().since(&pool_baseline);
+            trace::incr("pool.jobs", pd.pool_jobs);
+            trace::incr("pool.inline_jobs", pd.inline_jobs);
+            trace::incr("pool.tasks", pd.tasks);
+            trace::set_gauge("pool.fanout_ratio", pd.fanout_ratio());
+            trace::set_gauge("step_total_s", iter_times.total());
+            trace::set_gauge("steps", result.step_losses.len() as f64);
+
+            let report = trace::take_report();
+            if let Some(w) = &mut trace_log {
+                let mut ev = BTreeMap::new();
+                ev.insert("event".to_string(), Json::Str("summary".to_string()));
+                ev.insert("metrics".to_string(), report.to_json());
+                w.write(&Json::Obj(ev))?;
+                w.flush()?;
+            }
+            result.metrics = Some(report);
+            if self_enabled {
+                trace::set_enabled(false);
+            }
+        }
         Ok(result)
     }
 

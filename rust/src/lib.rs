@@ -36,3 +36,4 @@ pub mod perfmodel;
 pub mod rngx;
 pub mod runtime;
 pub mod tensor;
+pub mod trace;

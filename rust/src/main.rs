@@ -50,6 +50,8 @@ fn flag_spec() -> Vec<FlagSpec> {
         flag("faults", "fault-injection plan, e.g. \"drop@3:1:precond;delay@5:0:x4\""),
         flag("fault-seed", "seed for deterministic fault corruption"),
         flag("max-steps", "hard cap on optimizer steps"),
+        flag("trace", "write per-step phase-trace JSONL to this path"),
+        flag("metrics-out", "write run-summary metrics JSON (bench-diff compatible)"),
         flag("tolerance", "bench-diff: relative drift threshold (default 0.15)"),
         switch("native", "apply optimizer via native mirrors (workers > 1)"),
         switch("strict", "bench-diff: exit nonzero on drift instead of warning"),
@@ -134,6 +136,12 @@ fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<()> {
     if let Some(v) = args.get("resume") {
         cfg.resume = v.into();
     }
+    if let Some(v) = args.get("trace") {
+        cfg.trace_path = v.into();
+    }
+    if let Some(v) = args.get("metrics-out") {
+        cfg.metrics_out = v.into();
+    }
     if args.has("native") {
         cfg.native = true;
     }
@@ -166,6 +174,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         engine.platform()
     );
     let out_dir = cfg.out_dir.clone();
+    let metrics_out = cfg.metrics_out.clone();
     let tag = format!("{}_{}_s{}", cfg.model, cfg.optimizer, cfg.seed);
     let mut trainer = Trainer::new(cfg, engine)?;
     let result = trainer.run()?;
@@ -217,6 +226,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         );
         for ev in &f.events {
             println!("fault-event: {ev}");
+        }
+    }
+    if let Some(report) = &result.metrics {
+        println!("trace: {report}");
+        if !metrics_out.is_empty() {
+            let envelope = jorge::benchrun::bench_envelope("train_metrics", report.to_json());
+            if let Some(parent) = std::path::Path::new(&metrics_out).parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::write(&metrics_out, envelope.to_string_pretty())?;
+            eprintln!("metrics written to {metrics_out}");
         }
     }
     Ok(())

@@ -101,6 +101,11 @@ impl Summary {
         self.mean
     }
 
+    /// Sum of all samples.
+    pub fn total(&self) -> f64 {
+        self.mean * self.samples.len() as f64
+    }
+
     pub fn std(&self) -> f64 {
         if self.samples.len() < 2 {
             return 0.0;
@@ -200,6 +205,7 @@ mod tests {
         }
         assert_eq!(s.count(), 5);
         assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert!((s.total() - 15.0).abs() < 1e-12);
         assert!((s.std() - (2.5f64).sqrt()).abs() < 1e-12);
         assert_eq!(s.min(), 1.0);
         assert_eq!(s.max(), 5.0);

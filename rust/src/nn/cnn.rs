@@ -9,6 +9,7 @@ use super::ops::{
 use super::{he, zeros, BatchRef, ModelSpec, NativeModel};
 use crate::runtime::manifest::Dtype;
 use crate::tensor::{matmul_bias, matmul_bias_relu, matmul_nt, matmul_tn, Matrix};
+use crate::trace::{self, Phase};
 
 pub const CNN_HW: usize = 32;
 pub const CNN_CIN: usize = 3;
@@ -82,6 +83,7 @@ impl NativeModel for Cnn {
         let stages = conv_stages();
 
         // forward through the conv tower
+        let fwd_scope = trace::scope(Phase::Forward);
         let mut act: Vec<f32> = batch.x_f32.to_vec();
         let mut caches: Vec<StageCache> = Vec::with_capacity(3);
         for (si, cv) in stages.iter().enumerate() {
@@ -101,8 +103,10 @@ impl NativeModel for Cnn {
 
         let out = softmax_xent(&logits, batch.y);
         let acc = accuracy(&out.preds, batch.y);
+        drop(fwd_scope);
 
         // backward through the head (transpose-free variants)
+        let _bwd_scope = trace::scope(Phase::Backward);
         let dlogits = out.dlogits;
         let dfc2w = matmul_tn(&af, &dlogits);
         let dfc2b = col_sums(&dlogits);

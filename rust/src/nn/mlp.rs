@@ -6,6 +6,7 @@ use super::ops::{accuracy, col_sums, relu_bwd_inplace, softmax_xent};
 use super::{he, zeros, BatchRef, ModelSpec, NativeModel};
 use crate::runtime::manifest::Dtype;
 use crate::tensor::{matmul_bias, matmul_bias_relu, matmul_nt, matmul_tn, Matrix};
+use crate::trace::{self, Phase};
 
 pub const MLP_IN: usize = 128;
 pub const MLP_H1: usize = 256;
@@ -59,14 +60,17 @@ impl NativeModel for Mlp {
         // forward — bias + ReLU fused into the GEMM epilogue, so only
         // the post-activations are materialised (they double as the
         // ReLU masks in the backward pass)
+        let fwd_scope = trace::scope(Phase::Forward);
         let a1 = matmul_bias_relu(&x, w1, b1);
         let a2 = matmul_bias_relu(&a1, w2, b2);
         let logits = matmul_bias(&a2, w3, b3);
 
         let out = softmax_xent(&logits, batch.y);
         let acc = accuracy(&out.preds, batch.y);
+        drop(fwd_scope);
 
         // backward — transpose-free GEMM variants, no `.t()` copies
+        let _bwd_scope = trace::scope(Phase::Backward);
         let dlogits = out.dlogits;
         let dw3 = matmul_tn(&a2, &dlogits);
         let db3 = col_sums(&dlogits);

@@ -6,6 +6,7 @@ use super::ops::{col2im, col_sums, im2col, mean_iou, relu_bwd_inplace, softmax_x
 use super::{he, zeros, BatchRef, ModelSpec, NativeModel};
 use crate::runtime::manifest::Dtype;
 use crate::tensor::{matmul_bias, matmul_bias_relu, matmul_nt, matmul_tn, Matrix};
+use crate::trace::{self, Phase};
 
 pub const SEG_HW: usize = 16;
 pub const SEG_CIN: usize = 3;
@@ -66,6 +67,7 @@ impl NativeModel for Segnet {
         // ReLU fused into the GEMM epilogue; the stored activations
         // double as the ReLU masks in the backward pass, so each stage
         // reads the previous stage's output in place (no copies)
+        let fwd_scope = trace::scope(Phase::Forward);
         let mut cols: Vec<Matrix> = Vec::with_capacity(3);
         let mut acts: Vec<Matrix> = Vec::with_capacity(3);
         for (si, cv) in stages.iter().enumerate() {
@@ -85,8 +87,10 @@ impl NativeModel for Segnet {
         let logits = Matrix::from_vec(b * SEG_HW * SEG_HW, SEG_CLASSES, head.data);
         let out = softmax_xent(&logits, batch.y);
         let iou = mean_iou(&out.preds, batch.y, SEG_CLASSES);
+        drop(fwd_scope);
 
         // backward (transpose-free variants)
+        let _bwd_scope = trace::scope(Phase::Backward);
         let mut grads: Vec<Matrix> = vec![Matrix::zeros(1, 1); 6];
         let mut dpre = out.dlogits;
         for si in (0..3).rev() {

@@ -11,6 +11,7 @@ use super::ops::{
 use super::{he_scaled, normal, ones, BatchRef, ModelSpec, NativeModel, ParamSpec};
 use crate::runtime::manifest::Dtype;
 use crate::tensor::{matmul, matmul_nt, matmul_tn, Matrix};
+use crate::trace::{self, Phase};
 
 pub struct Transformer {
     vocab: usize,
@@ -194,11 +195,14 @@ impl NativeModel for Transformer {
     fn loss_grad(&self, params: &[Matrix], batch: &BatchRef) -> (Vec<Matrix>, f64, f64) {
         let (b, s, d, dh) = (batch.batch, self.seq, self.d, self.d / self.heads);
         let scale = 1.0 / (dh as f32).sqrt();
+        let fwd_scope = trace::scope(Phase::Forward);
         let fwd = self.forward(params, batch);
 
         let out = softmax_xent(&fwd.logits, batch.y);
         let acc = accuracy(&out.preds, batch.y);
+        drop(fwd_scope);
 
+        let _bwd_scope = trace::scope(Phase::Backward);
         let mut grads: Vec<Matrix> =
             params.iter().map(|p| Matrix::zeros(p.rows, p.cols)).collect();
 

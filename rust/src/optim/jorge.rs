@@ -18,6 +18,7 @@ use super::{
     INNER_PAR_DIM,
 };
 use crate::tensor::{gram_left, gram_right, jorge_update, matmul, Matrix};
+use crate::trace::{self, Phase};
 
 struct LayerState {
     /// None for unpreconditioned (1-D) layers.
@@ -212,6 +213,7 @@ impl Optimizer for Jorge {
     }
 
     fn refresh_layers(&mut self, layers: &[usize], grads: &[Matrix], update_precond: bool) {
+        let _scope = trace::scope(Phase::PrecondRefresh);
         for &li in layers {
             refresh_layer(self.p.eps, &mut self.layers[li], &grads[li], update_precond);
         }
@@ -226,6 +228,7 @@ impl Optimizer for Jorge {
     }
 
     fn apply_update(&mut self, params: &mut [Matrix], grads: &[Matrix], ctx: StepCtx) {
+        let _scope = trace::scope(Phase::Apply);
         assert_eq!(params.len(), self.layers.len());
         let p = self.p;
         let body = |li: usize, param: &mut Matrix, st: &mut LayerState| {

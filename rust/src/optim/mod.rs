@@ -437,6 +437,20 @@ impl GuardReport {
             + self.graft_fallbacks
             + self.skipped_updates
     }
+
+    /// Every counter as a `(name, value)` pair, in declaration order —
+    /// how the trace registry folds guardrails into the unified metrics.
+    pub fn counter_pairs(&self) -> [(&'static str, usize); 7] {
+        [
+            ("nonfinite_grads", self.nonfinite_grads),
+            ("rejected_stats", self.rejected_stats),
+            ("damped_retries", self.damped_retries),
+            ("stale_preconds", self.stale_preconds),
+            ("precond_resets", self.precond_resets),
+            ("graft_fallbacks", self.graft_fallbacks),
+            ("skipped_updates", self.skipped_updates),
+        ]
+    }
 }
 
 impl fmt::Display for GuardReport {

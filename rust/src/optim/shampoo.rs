@@ -19,6 +19,7 @@ use super::{
 };
 use crate::tensor::{gram_left, gram_right, inv_fourth_root_eigh, inv_fourth_root_newton};
 use crate::tensor::{matmul, Matrix};
+use crate::trace::{self, Phase};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RootMethod {
@@ -258,6 +259,7 @@ impl Optimizer for Shampoo {
     }
 
     fn refresh_layers(&mut self, layers: &[usize], grads: &[Matrix], update_precond: bool) {
+        let _scope = trace::scope(Phase::PrecondRefresh);
         let p = self.p;
         let method = self.root_method;
         for &li in layers {
@@ -274,6 +276,7 @@ impl Optimizer for Shampoo {
     }
 
     fn apply_update(&mut self, params: &mut [Matrix], grads: &[Matrix], ctx: StepCtx) {
+        let _scope = trace::scope(Phase::Apply);
         assert_eq!(params.len(), self.layers.len());
         let p = self.p;
         let body = |li: usize, param: &mut Matrix, st: &mut LayerState| {

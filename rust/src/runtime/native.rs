@@ -15,6 +15,7 @@ use super::values::HostTensor;
 use crate::nn::{self, BatchRef, NativeModel};
 use crate::optim::{self, Hyper, StepCtx};
 use crate::tensor::Matrix;
+use crate::trace::{self, Phase};
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -136,7 +137,14 @@ impl ExecStep for NativeStep {
             }
         }
 
-        // partition inputs by role, preserving order
+        // partition inputs by role, preserving order. Attribute the input
+        // unpacking to the Data phase only for the kinds the trainer does
+        // not already wrap in a scope of its own (Apply is wrapped by
+        // `apply_reduced`, Eval by `evaluate`).
+        let data_scope = match self.kind {
+            Kind::Train { .. } | Kind::Grad => Some(trace::scope(Phase::Data)),
+            Kind::Apply { .. } | Kind::Eval => None,
+        };
         let mut params_in: Vec<&HostTensor> = Vec::new();
         let mut grads_in: Vec<&HostTensor> = Vec::new();
         let mut state_in: Vec<&HostTensor> = Vec::new();
@@ -156,11 +164,16 @@ impl ExecStep for NativeStep {
         let mut mats = to_matrices(&params_in)?;
         let lr = lr.map(|t| t.scalar() as f32).unwrap_or(0.0);
         let wd = wd.map(|t| t.scalar() as f32).unwrap_or(0.0);
+        drop(data_scope);
 
         match &self.kind {
             Kind::Train { opt, update_precond } => {
                 let batch = batch_ref(need(x, "x")?, need(y, "y")?)?;
                 let (grads, loss, metric) = self.model.loss_grad(&mats, &batch);
+                // The fused opt.step() runs refresh + apply back to back
+                // (it does not route through the scoped trait halves), so
+                // the whole optimizer cost lands in Apply here.
+                let _apply_scope = trace::scope(Phase::Apply);
                 let state_out = apply_optimizer(
                     opt,
                     self.hyper,

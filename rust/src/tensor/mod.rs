@@ -13,7 +13,10 @@ pub use eig::{eigh, eigh_default, spectral_map};
 pub use gemm::{gram_left, gram_right, matmul, matmul_bias, matmul_bias_relu, matmul_nt};
 pub use gemm::{matmul_st, matmul_tn};
 pub use matrix::Matrix;
-pub use pool::{parallel_chunks, parallel_for, parallel_zip_mut, pool_size, warm_pool};
+pub use pool::{
+    dispatch_counters, parallel_chunks, parallel_for, parallel_zip_mut, pool_size, warm_pool,
+    PoolCounters,
+};
 pub use roots::{
     dynamic_beta2, inv_fourth_root_eigh, inv_fourth_root_newton, inv_pth_root_eigh,
     jorge_update,

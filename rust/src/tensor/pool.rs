@@ -23,6 +23,7 @@
 use std::any::Any;
 use std::cell::Cell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex, MutexGuard, OnceLock, PoisonError, TryLockError};
 
 /// Lifetime-erased handle to the closure of the job in flight. Only
@@ -86,8 +87,16 @@ thread_local! {
     static IN_TASK: Cell<bool> = const { Cell::new(false) };
 }
 
+/// Parse a `JORGE_THREADS`-style override. A value of 0 would size a
+/// pool that can never run a task, so anything parsing below 1 clamps
+/// to 1 (single-threaded); non-numeric values fall through to the
+/// hardware default.
+fn parse_threads(v: &str) -> Option<usize> {
+    v.trim().parse::<usize>().ok().map(|n| n.max(1))
+}
+
 fn env_threads() -> Option<usize> {
-    std::env::var("JORGE_THREADS").ok().and_then(|v| v.parse().ok())
+    std::env::var("JORGE_THREADS").ok().and_then(|v| parse_threads(&v))
 }
 
 fn hardware_threads() -> usize {
@@ -116,6 +125,52 @@ impl Pool {
 
 fn pool() -> &'static Pool {
     POOL.get_or_init(Pool::new)
+}
+
+// Dispatch telemetry: always-on relaxed atomics (sub-nanosecond per
+// job), read by the trainer's metrics layer as before/after deltas.
+static POOL_JOBS: AtomicU64 = AtomicU64::new(0);
+static INLINE_JOBS: AtomicU64 = AtomicU64::new(0);
+static POOL_TASKS: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative dispatch counts since process start. `pool_jobs` fanned
+/// out across workers; `inline_jobs` ran on the calling thread (no
+/// workers, trivial task count, nested call, or pool busy).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolCounters {
+    pub pool_jobs: u64,
+    pub inline_jobs: u64,
+    pub tasks: u64,
+}
+
+impl PoolCounters {
+    /// Counter growth between `earlier` and `self`.
+    pub fn since(&self, earlier: &PoolCounters) -> PoolCounters {
+        PoolCounters {
+            pool_jobs: self.pool_jobs - earlier.pool_jobs,
+            inline_jobs: self.inline_jobs - earlier.inline_jobs,
+            tasks: self.tasks - earlier.tasks,
+        }
+    }
+
+    /// Fraction of jobs that actually fanned out across the pool.
+    pub fn fanout_ratio(&self) -> f64 {
+        let total = self.pool_jobs + self.inline_jobs;
+        if total == 0 {
+            0.0
+        } else {
+            self.pool_jobs as f64 / total as f64
+        }
+    }
+}
+
+/// Snapshot the dispatch counters.
+pub fn dispatch_counters() -> PoolCounters {
+    PoolCounters {
+        pool_jobs: POOL_JOBS.load(Ordering::Relaxed),
+        inline_jobs: INLINE_JOBS.load(Ordering::Relaxed),
+        tasks: POOL_TASKS.load(Ordering::Relaxed),
+    }
 }
 
 /// Total threads the pool can bring to bear (workers + the caller).
@@ -200,6 +255,8 @@ pub fn parallel_for<F: Fn(usize) + Sync>(n_tasks: usize, f: F) {
     }
     let pool = pool();
     if pool.workers == 0 || n_tasks == 1 || IN_TASK.with(|c| c.get()) {
+        INLINE_JOBS.fetch_add(1, Ordering::Relaxed);
+        POOL_TASKS.fetch_add(n_tasks as u64, Ordering::Relaxed);
         for i in 0..n_tasks {
             f(i);
         }
@@ -214,12 +271,16 @@ pub fn parallel_for<F: Fn(usize) + Sync>(n_tasks: usize, f: F) {
         Ok(guard) => guard,
         Err(TryLockError::Poisoned(poisoned)) => poisoned.into_inner(),
         Err(TryLockError::WouldBlock) => {
+            INLINE_JOBS.fetch_add(1, Ordering::Relaxed);
+            POOL_TASKS.fetch_add(n_tasks as u64, Ordering::Relaxed);
             for i in 0..n_tasks {
                 f(i);
             }
             return;
         }
     };
+    POOL_JOBS.fetch_add(1, Ordering::Relaxed);
+    POOL_TASKS.fetch_add(n_tasks as u64, Ordering::Relaxed);
     let shared = pool.shared;
     *shared.panic_payload.lock().unwrap_or_else(PoisonError::into_inner) = None;
     let my_epoch;
@@ -371,6 +432,30 @@ mod tests {
     fn pool_size_is_positive() {
         assert!(pool_size() >= 1);
         warm_pool();
+    }
+
+    #[test]
+    fn thread_override_clamps_zero_to_one() {
+        // JORGE_THREADS=0 must never size a zero-worker pool
+        assert_eq!(parse_threads("0"), Some(1));
+        assert_eq!(parse_threads("00"), Some(1));
+        assert_eq!(parse_threads("1"), Some(1));
+        assert_eq!(parse_threads(" 4 "), Some(4));
+        // non-numeric garbage falls back to the hardware default
+        assert_eq!(parse_threads("zero"), None);
+        assert_eq!(parse_threads(""), None);
+        assert_eq!(parse_threads("-2"), None);
+    }
+
+    #[test]
+    fn dispatch_counters_track_jobs_and_tasks() {
+        let before = dispatch_counters();
+        parallel_for(1, |_| {}); // single task: always inline
+        parallel_for(16, |_| {});
+        let d = dispatch_counters().since(&before);
+        assert!(d.pool_jobs + d.inline_jobs >= 2);
+        assert!(d.tasks >= 17);
+        assert!((0.0..=1.0).contains(&d.fanout_ratio()));
     }
 
     #[test]

@@ -1,0 +1,436 @@
+//! Step-phase tracing and the unified metrics registry.
+//!
+//! A run-wide singleton that attributes wall-clock to the phases of a
+//! training step (data / forward / backward / grad all-reduce /
+//! preconditioner refresh / preconditioner all-gather / apply /
+//! checkpoint / eval) and folds every subsystem's counters — guardrails,
+//! faults, sharding, worker-pool dispatch — into one place. The trainer
+//! drains it into a [`MetricsReport`] at the end of a run (`--metrics-out`)
+//! and streams per-step phase rows as JSONL (`--trace`).
+//!
+//! Cost discipline: when tracing is disabled (the default) every entry
+//! point is a single relaxed atomic load and nothing else — no clock
+//! reads, no locks, no allocation — so instrumented code paths stay
+//! bitwise identical to uninstrumented ones. Enabling tracing only adds
+//! `Instant` reads and registry bookkeeping; it never touches RNG state
+//! or float math, so traced trajectories are bitwise identical too.
+//!
+//! Phase scopes may fire from worker threads (the data-parallel gradient
+//! fan-out runs `loss_grad` per simulated rank). Those samples add
+//! *per-device* time, so with `--workers N` the forward/backward totals
+//! sum across ranks and can exceed wall-clock — the same convention GPU
+//! profilers use for per-device streams. Single-worker runs are strictly
+//! sequential and their phase totals sum to the step wall-clock (pinned
+//! within 5% by `tests/trace_layer.rs`).
+
+use crate::jsonio::Json;
+use crate::metricsio::Summary;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// The phases of one training step, in pipeline order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Batch assembly: dataset slicing + host tensor packing.
+    Data,
+    /// Model forward pass (per simulated rank under data parallelism).
+    Forward,
+    /// Model backward pass (per simulated rank under data parallelism).
+    Backward,
+    /// Ring/tree all-reduce of the gradient buckets, incl. fault retries.
+    GradReduce,
+    /// Owner-computes preconditioner refresh (gram + root / Jorge update).
+    PrecondRefresh,
+    /// Ring all-gather of refreshed preconditioners.
+    PrecondGather,
+    /// Parameter update (grafted step, weight decay, state writeback).
+    Apply,
+    /// Cadenced checkpoint save.
+    Checkpoint,
+    /// Validation pass + eval-result broadcast.
+    Eval,
+}
+
+/// Every phase, in the order reports and JSONL rows list them.
+pub const PHASES: [Phase; 9] = [
+    Phase::Data,
+    Phase::Forward,
+    Phase::Backward,
+    Phase::GradReduce,
+    Phase::PrecondRefresh,
+    Phase::PrecondGather,
+    Phase::Apply,
+    Phase::Checkpoint,
+    Phase::Eval,
+];
+
+impl Phase {
+    /// Stable snake_case name — the JSONL/metrics key for this phase.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Data => "data",
+            Phase::Forward => "forward",
+            Phase::Backward => "backward",
+            Phase::GradReduce => "grad_all_reduce",
+            Phase::PrecondRefresh => "precond_refresh",
+            Phase::PrecondGather => "precond_all_gather",
+            Phase::Apply => "apply",
+            Phase::Checkpoint => "checkpoint",
+            Phase::Eval => "eval",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Phase::Data => 0,
+            Phase::Forward => 1,
+            Phase::Backward => 2,
+            Phase::GradReduce => 3,
+            Phase::PrecondRefresh => 4,
+            Phase::PrecondGather => 5,
+            Phase::Apply => 6,
+            Phase::Checkpoint => 7,
+            Phase::Eval => 8,
+        }
+    }
+}
+
+const N_PHASES: usize = PHASES.len();
+
+/// Registry state behind the mutex. `scratch` accumulates the current
+/// step; `flush_step` rolls it into the per-step distributions.
+struct Inner {
+    scratch: [f64; N_PHASES],
+    per_step: Vec<Summary>,
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+}
+
+impl Inner {
+    fn new() -> Inner {
+        Inner {
+            scratch: [0.0; N_PHASES],
+            per_step: (0..N_PHASES).map(|_| Summary::new()).collect(),
+            counters: BTreeMap::new(),
+            gauges: BTreeMap::new(),
+        }
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static REGISTRY: Mutex<Option<Inner>> = Mutex::new(None);
+
+/// Whether tracing is live. One relaxed load — the entire disabled-path
+/// cost of every instrumentation point.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the registry on (resetting any prior state) or off. The trainer
+/// flips this only for runs that asked for `--trace`/`--metrics-out`;
+/// everything else never touches it.
+pub fn set_enabled(on: bool) {
+    if on {
+        let mut guard = lock();
+        *guard = Some(Inner::new());
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+fn lock() -> std::sync::MutexGuard<'static, Option<Inner>> {
+    // A poisoned registry only ever holds timing telemetry; recover it
+    // rather than cascading a panic out of an instrumentation point.
+    REGISTRY.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn with_inner(f: impl FnOnce(&mut Inner)) {
+    let mut guard = lock();
+    f(guard.get_or_insert_with(Inner::new));
+}
+
+/// RAII phase timer: accumulates elapsed seconds into the registry on
+/// drop. Inert (no clock read) when tracing is disabled.
+pub struct PhaseGuard {
+    phase: Phase,
+    start: Option<Instant>,
+}
+
+impl Drop for PhaseGuard {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            add_phase_s(self.phase, t0.elapsed().as_secs_f64());
+        }
+    }
+}
+
+/// Open a scoped timer for `phase`; time accrues until the guard drops.
+#[inline]
+pub fn scope(phase: Phase) -> PhaseGuard {
+    let start = if enabled() { Some(Instant::now()) } else { None };
+    PhaseGuard { phase, start }
+}
+
+/// Credit `s` seconds to `phase` in the current step directly (for
+/// intervals measured by the caller rather than a scope).
+pub fn add_phase_s(phase: Phase, s: f64) {
+    if !enabled() {
+        return;
+    }
+    with_inner(|inner| inner.scratch[phase.index()] += s);
+}
+
+/// Bump a named counter. Counter names are free-form dotted paths
+/// (`guard.stale_preconds`, `fault.retries`, `pool.jobs`).
+pub fn incr(name: &str, n: u64) {
+    if !enabled() || n == 0 {
+        return;
+    }
+    with_inner(|inner| *inner.counters.entry(name.to_string()).or_insert(0) += n);
+}
+
+/// Set a named gauge (last-write-wins scalar, e.g. modeled comm time).
+pub fn set_gauge(name: &str, v: f64) {
+    if !enabled() {
+        return;
+    }
+    with_inner(|inner| {
+        inner.gauges.insert(name.to_string(), v);
+    });
+}
+
+/// Close out the current step: roll the scratch phase times into the
+/// per-step distributions and return this step's `(phase, seconds)` rows
+/// (phases that did not run are omitted). `None` when tracing is off.
+pub fn flush_step() -> Option<Vec<(&'static str, f64)>> {
+    if !enabled() {
+        return None;
+    }
+    let mut out = Vec::new();
+    with_inner(|inner| {
+        for ph in PHASES {
+            let s = inner.scratch[ph.index()];
+            if s > 0.0 {
+                inner.per_step[ph.index()].add(s);
+                out.push((ph.name(), s));
+            }
+        }
+        inner.scratch = [0.0; N_PHASES];
+    });
+    Some(out)
+}
+
+/// Drain the registry into a [`MetricsReport`] (leaving it reset but
+/// still enabled). Un-flushed scratch from a partial step is folded in
+/// as one final sample first.
+pub fn take_report() -> MetricsReport {
+    let _ = flush_step();
+    let mut report = MetricsReport::default();
+    with_inner(|inner| {
+        for ph in PHASES {
+            let s = &inner.per_step[ph.index()];
+            if s.count() == 0 {
+                continue;
+            }
+            report.phases.push(PhaseStat {
+                name: ph.name(),
+                count: s.count() as u64,
+                total_s: s.total(),
+                p50_s: s.percentile(50.0),
+                p95_s: s.percentile(95.0),
+            });
+        }
+        report.counters = std::mem::take(&mut inner.counters);
+        report.gauges = std::mem::take(&mut inner.gauges);
+        *inner = Inner::new();
+    });
+    report
+}
+
+/// Per-phase timing distribution over the steps of one run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhaseStat {
+    pub name: &'static str,
+    /// Steps in which the phase ran.
+    pub count: u64,
+    pub total_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+/// The unified per-run metrics: phase timings plus every subsystem's
+/// counters and gauges under one roof. Serialises through the
+/// `benchrun` JSON-row convention (`"name"`-keyed rows) so
+/// `jorge bench-diff` can diff two runs' metrics files in CI.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsReport {
+    pub phases: Vec<PhaseStat>,
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+}
+
+impl MetricsReport {
+    /// Sum of all phase totals.
+    pub fn total_phase_s(&self) -> f64 {
+        self.phases.iter().map(|p| p.total_s).sum()
+    }
+
+    /// Total seconds attributed to `phase`, 0 if it never ran.
+    pub fn phase_total_s(&self, phase: Phase) -> f64 {
+        self.phases
+            .iter()
+            .find(|p| p.name == phase.name())
+            .map_or(0.0, |p| p.total_s)
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// `{"phases": [{"name", "count", "total_s", "p50_s", "p95_s"}, ...],
+    ///   "counters": {...}, "gauges": {...}}`
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .phases
+            .iter()
+            .map(|p| {
+                let mut row = BTreeMap::new();
+                row.insert("name".to_string(), Json::Str(p.name.to_string()));
+                row.insert("count".to_string(), Json::Num(p.count as f64));
+                row.insert("total_s".to_string(), Json::Num(p.total_s));
+                row.insert("p50_s".to_string(), Json::Num(p.p50_s));
+                row.insert("p95_s".to_string(), Json::Num(p.p95_s));
+                Json::Obj(row)
+            })
+            .collect();
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> =
+            self.gauges.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect();
+        let mut obj = BTreeMap::new();
+        obj.insert("phases".to_string(), Json::Arr(rows));
+        obj.insert("counters".to_string(), Json::Obj(counters));
+        obj.insert("gauges".to_string(), Json::Obj(gauges));
+        Json::Obj(obj)
+    }
+}
+
+impl fmt::Display for MetricsReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let total = self.total_phase_s().max(1e-12);
+        write!(f, "phases:")?;
+        for p in &self.phases {
+            write!(
+                f,
+                " {}={:.4}s({:.0}%)",
+                p.name,
+                p.total_s,
+                100.0 * p.total_s / total
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex as StdMutex;
+
+    // The registry is process-global; serialise the tests that flip it.
+    static TEST_LOCK: StdMutex<()> = StdMutex::new(());
+
+    #[test]
+    fn disabled_tracing_records_nothing() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(false);
+        {
+            let _s = scope(Phase::Forward);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        incr("x", 3);
+        assert!(flush_step().is_none());
+        set_enabled(true);
+        let report = take_report();
+        assert!(report.phases.is_empty());
+        assert_eq!(report.counter("x"), 0);
+        set_enabled(false);
+    }
+
+    #[test]
+    fn scopes_accumulate_and_flush_per_step() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        for _ in 0..3 {
+            add_phase_s(Phase::Data, 0.25);
+            add_phase_s(Phase::Apply, 0.5);
+            add_phase_s(Phase::Apply, 0.25);
+            let rows = flush_step().unwrap();
+            assert_eq!(rows, vec![("data", 0.25), ("apply", 0.75)]);
+        }
+        incr("guard.stale_preconds", 2);
+        incr("guard.stale_preconds", 1);
+        set_gauge("modeled_comm_s", 0.125);
+        let report = take_report();
+        assert_eq!(report.phases.len(), 2);
+        assert_eq!(report.phase_total_s(Phase::Data), 0.75);
+        assert_eq!(report.phase_total_s(Phase::Apply), 2.25);
+        assert_eq!(report.phases[1].count, 3);
+        assert_eq!(report.phases[1].p50_s, 0.75);
+        assert_eq!(report.counter("guard.stale_preconds"), 3);
+        assert_eq!(report.gauge("modeled_comm_s"), Some(0.125));
+        // drained: a second take is empty
+        assert!(take_report().phases.is_empty());
+        set_enabled(false);
+    }
+
+    #[test]
+    fn scope_guard_measures_wall_time() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        {
+            let _s = scope(Phase::Backward);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let report = take_report();
+        assert!(report.phase_total_s(Phase::Backward) >= 0.002);
+        set_enabled(false);
+    }
+
+    #[test]
+    fn report_json_uses_name_keyed_rows() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        add_phase_s(Phase::GradReduce, 0.5);
+        incr("fault.retries", 4);
+        let j = take_report().to_json();
+        set_enabled(false);
+        let rows = j.get("phases").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("name").unwrap().as_str(), Some("grad_all_reduce"));
+        assert_eq!(rows[0].get("total_s").unwrap().as_f64(), Some(0.5));
+        assert_eq!(rows[0].get("p95_s").unwrap().as_f64(), Some(0.5));
+        let c = j.get("counters").unwrap();
+        assert_eq!(c.get("fault.retries").unwrap().as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn phase_names_are_unique_and_ordered() {
+        let names: Vec<&str> = PHASES.iter().map(|p| p.name()).collect();
+        let mut dedup = names.clone();
+        dedup.dedup();
+        assert_eq!(names, dedup);
+        for (i, ph) in PHASES.iter().enumerate() {
+            assert_eq!(ph.index(), i);
+        }
+    }
+}

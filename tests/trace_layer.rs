@@ -1,0 +1,150 @@
+//! Observability layer: phase traces account for step wall-clock, the
+//! JSONL trace parses and covers the expected phases, and tracing-off
+//! runs are bitwise identical to traced runs.
+//!
+//! The trace registry is process-global, so every test here serialises
+//! on `TEST_LOCK` (cargo runs test fns on parallel threads).
+
+use jorge::config::{ScheduleKind, TrainConfig};
+use jorge::coordinator::Trainer;
+use jorge::jsonio::Json;
+use jorge::runtime::{ExecBackend, NativeBackend};
+use jorge::trace::{self, Phase};
+use std::sync::{Arc, Mutex};
+
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+fn backend() -> Arc<dyn ExecBackend> {
+    Arc::new(NativeBackend::new())
+}
+
+fn tiny_cfg(opt: &str, workers: usize) -> TrainConfig {
+    TrainConfig {
+        model: "mlp".into(),
+        optimizer: opt.parse().unwrap(),
+        epochs: 2,
+        steps_per_epoch: 15,
+        lr: 0.01,
+        weight_decay: 1e-4,
+        schedule: ScheduleKind::Constant,
+        precond_every: 2,
+        seed: 33,
+        workers,
+        dataset_size: 64 * 15 * workers.max(1) * 2,
+        eval_every_epochs: 1000,
+        backend: "native".into(),
+        ..Default::default()
+    }
+}
+
+fn tmp_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("jorge_trace_{tag}_{}.jsonl", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+#[test]
+fn fused_phase_sum_accounts_for_step_time_and_jsonl_parses() {
+    let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let eng = backend();
+    let path = tmp_path("fused");
+    let mut cfg = tiny_cfg("jorge", 1);
+    cfg.trace_path = path.clone();
+    let mut trainer = Trainer::new(cfg, eng).unwrap();
+    let r = trainer.run().unwrap();
+    assert!(!trace::enabled(), "trainer must disarm tracing it armed itself");
+
+    let report = r.metrics.expect("traced run returns a metrics report");
+
+    // the fully-sequential fused path (workers == 1) is the one place
+    // phase totals must reconcile with wall-clock: everything a training
+    // step does lands in Data/Forward/Backward/Apply. Eval and
+    // Checkpoint fall outside the per-step timer, so exclude them.
+    let step_sum = report.phase_total_s(Phase::Data)
+        + report.phase_total_s(Phase::Forward)
+        + report.phase_total_s(Phase::Backward)
+        + report.phase_total_s(Phase::Apply);
+    let wall = report.gauge("step_total_s").expect("step_total_s gauge");
+    assert!(wall > 0.0, "no measured step time");
+    let frac = step_sum / wall;
+    assert!(
+        (0.95..=1.05).contains(&frac),
+        "phase sum {step_sum:.6}s vs step wall-clock {wall:.6}s ({:.1}% accounted)",
+        100.0 * frac
+    );
+    // eval ran once per epoch and was captured in its own phase
+    assert!(report.phase_total_s(Phase::Eval) > 0.0, "eval phase missing");
+    // the GEMM dispatch counters were folded into the same registry
+    assert!(
+        report.counter("pool.jobs") + report.counter("pool.inline_jobs") > 0,
+        "pool dispatch counters missing: {report}"
+    );
+
+    // every JSONL line parses; events cover run_start, per-step rows
+    // with the fused phases, and a final summary
+    let text = std::fs::read_to_string(&path).unwrap();
+    let events: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(events[0].get("event").and_then(Json::as_str), Some("run_start"));
+    let steps: Vec<&Json> = events
+        .iter()
+        .filter(|e| e.get("event").and_then(Json::as_str) == Some("step"))
+        .collect();
+    assert_eq!(steps.len(), r.step_losses.len(), "one trace row per training step");
+    for ev in &steps {
+        assert!(ev.get("wall_s").and_then(Json::as_f64).unwrap() > 0.0);
+        let phases = ev.get("phases").expect("phases object");
+        for name in ["data", "forward", "backward", "apply"] {
+            assert!(
+                phases.get(name).and_then(Json::as_f64).unwrap_or(0.0) > 0.0,
+                "step row missing phase {name}: {ev:?}"
+            );
+        }
+    }
+    let last = events.last().unwrap();
+    assert_eq!(last.get("event").and_then(Json::as_str), Some("summary"));
+    let metrics = last.get("metrics").expect("summary metrics");
+    assert!(matches!(metrics.get("phases"), Some(Json::Arr(rows)) if !rows.is_empty()));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn data_parallel_trace_covers_reduce_phase() {
+    let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let eng = backend();
+    let path = tmp_path("dp");
+    let mut cfg = tiny_cfg("jorge", 2);
+    cfg.epochs = 1;
+    cfg.trace_path = path.clone();
+    let r = Trainer::new(cfg, eng).unwrap().run().unwrap();
+    let report = r.metrics.expect("traced run returns a metrics report");
+    for phase in [Phase::Data, Phase::Forward, Phase::Backward, Phase::GradReduce, Phase::Apply] {
+        assert!(
+            report.phase_total_s(phase) > 0.0,
+            "data-parallel run missing phase {}: {report}",
+            phase.name()
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn disabled_tracing_is_bitwise_identical() {
+    let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let eng = backend();
+    let plain = Trainer::new(tiny_cfg("jorge", 1), eng.clone()).unwrap().run().unwrap();
+    assert!(plain.metrics.is_none(), "untraced run must not build a report");
+
+    let path = tmp_path("bitwise");
+    let mut cfg = tiny_cfg("jorge", 1);
+    cfg.trace_path = path.clone();
+    let traced = Trainer::new(cfg, eng).unwrap().run().unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(plain.step_losses, traced.step_losses, "tracing perturbed the trajectory");
+    for (a, b) in plain.epochs.iter().zip(&traced.epochs) {
+        assert_eq!(a.val_loss.to_bits(), b.val_loss.to_bits());
+        assert_eq!(a.val_metric.to_bits(), b.val_metric.to_bits());
+    }
+}
