@@ -293,20 +293,26 @@ pub enum FaultKind {
     /// positions before the collective runs (silent data corruption —
     /// the numerical guardrails downstream must catch it).
     Corrupt,
+    /// A previously-dropped rank comes back. It is readmitted at the
+    /// step boundary (never mid-collective): the leader broadcasts the
+    /// full training state and the survivors re-run owner assignment.
+    Rejoin,
 }
 
 impl fmt::Display for FaultKind {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             FaultKind::Drop => write!(f, "drop"),
-            FaultKind::Delay { attempts } => write!(f, "delay(x{attempts})"),
+            FaultKind::Delay { .. } => write!(f, "delay"),
             FaultKind::Corrupt => write!(f, "corrupt"),
+            FaultKind::Rejoin => write!(f, "rejoin"),
         }
     }
 }
 
 /// One scheduled fault: at global training step `step`, rank `rank`
-/// misbehaves during collective `op`.
+/// misbehaves during collective `op`. (`rejoin` events carry the
+/// default `op` — they fire at the step boundary, not in a collective.)
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct FaultEvent {
     pub step: usize,
@@ -315,24 +321,121 @@ pub struct FaultEvent {
     pub kind: FaultKind,
 }
 
+impl fmt::Display for FaultEvent {
+    /// Canonical grammar form; [`FaultPlan::parse`] round-trips it.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.kind {
+            FaultKind::Rejoin => write!(f, "rejoin@{}:r{}", self.step, self.rank),
+            FaultKind::Delay { attempts } => {
+                write!(f, "delay@{}:r{}:{}:x{}", self.step, self.rank, self.op, attempts)
+            }
+            _ => write!(f, "{}@{}:r{}:{}", self.kind, self.step, self.rank, self.op),
+        }
+    }
+}
+
+impl std::str::FromStr for FaultEvent {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        parse_event(s.trim())
+    }
+}
+
+/// Parse one `kind@step:rank[:op][:xN]` clause.
+fn parse_event(tok: &str) -> Result<FaultEvent, String> {
+    let (kind_s, rest) = tok
+        .split_once('@')
+        .ok_or_else(|| format!("fault `{tok}`: expected kind@step:rank[:op][:xN]"))?;
+    let mut parts = rest.split(':');
+    let step: usize = parts
+        .next()
+        .ok_or_else(|| format!("fault `{tok}`: missing step"))?
+        .trim()
+        .parse()
+        .map_err(|_| format!("fault `{tok}`: bad step"))?;
+    let rank_s = parts.next().ok_or_else(|| format!("fault `{tok}`: missing rank"))?;
+    let rank: usize = rank_s
+        .trim()
+        .trim_start_matches('r')
+        .parse()
+        .map_err(|_| format!("fault `{tok}`: bad rank `{rank_s}`"))?;
+    let mut op = FaultOp::GradReduce;
+    let mut attempts: Option<u32> = None;
+    for extra in parts {
+        let extra = extra.trim();
+        match extra {
+            "grad" => op = FaultOp::GradReduce,
+            "precond" => op = FaultOp::PrecondGather,
+            "eval" => op = FaultOp::EvalBcast,
+            _ if extra.starts_with('x') => {
+                attempts = Some(
+                    extra[1..]
+                        .parse()
+                        .map_err(|_| format!("fault `{tok}`: bad retry count `{extra}`"))?,
+                );
+            }
+            _ => return Err(format!("fault `{tok}`: unknown field `{extra}`")),
+        }
+    }
+    let kind = match kind_s.trim() {
+        "drop" => FaultKind::Drop,
+        "delay" => FaultKind::Delay { attempts: attempts.unwrap_or(1) },
+        "corrupt" => FaultKind::Corrupt,
+        "rejoin" => FaultKind::Rejoin,
+        other => return Err(format!("fault `{tok}`: unknown kind `{other}`")),
+    };
+    if attempts.is_some() && !matches!(kind, FaultKind::Delay { .. }) {
+        return Err(format!("fault `{tok}`: retry count `xN` only applies to delay"));
+    }
+    if matches!(kind, FaultKind::Rejoin) && rest.split(':').count() > 2 {
+        return Err(format!("fault `{tok}`: rejoin takes no op or retry fields"));
+    }
+    Ok(FaultEvent { step, rank, op, kind })
+}
+
 /// A deterministic, seeded schedule of fault events.
 ///
 /// Spec grammar (events separated by `;` or `,`):
 ///
 /// ```text
 /// kind@step:rank[:op][:xN]
-/// kind = drop | delay | corrupt
+/// kind = drop | delay | corrupt | rejoin
 /// rank = r3 or 3
 /// op   = grad (default) | precond | eval
 /// xN   = delay retry count (delay only, default x1)
 /// ```
 ///
 /// e.g. `drop@3:r1:precond`, `delay@5:r0:grad:x2`, `corrupt@2:r1`,
-/// `drop@2:r1:eval` (the eval-result broadcast).
+/// `drop@2:r1:eval` (the eval-result broadcast). `rejoin@step:rank`
+/// takes no op or retry fields: it readmits a previously-dropped rank
+/// at the start of `step` (leader state broadcast + owner
+/// re-assignment), so [`validate`](Self::validate) rejects a rejoin of
+/// a rank the plan never drops.
 #[derive(Clone, Debug, Default)]
 pub struct FaultPlan {
     pub events: Vec<FaultEvent>,
     pub seed: u64,
+}
+
+impl fmt::Display for FaultPlan {
+    /// Canonical spec form (events joined with `; `); parsing it back
+    /// reproduces `events` exactly (the seed travels separately).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, ev) in self.events.iter().enumerate() {
+            if i > 0 {
+                write!(f, "; ")?;
+            }
+            write!(f, "{ev}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::str::FromStr for FaultPlan {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        FaultPlan::parse(s, 0)
+    }
 }
 
 impl FaultPlan {
@@ -344,47 +447,44 @@ impl FaultPlan {
             if tok.is_empty() {
                 continue;
             }
-            let (kind_s, rest) = tok
-                .split_once('@')
-                .ok_or_else(|| format!("fault `{tok}`: expected kind@step:rank[:op][:xN]"))?;
-            let mut parts = rest.split(':');
-            let step: usize = parts
-                .next()
-                .ok_or_else(|| format!("fault `{tok}`: missing step"))?
-                .trim()
-                .parse()
-                .map_err(|_| format!("fault `{tok}`: bad step"))?;
-            let rank_s = parts.next().ok_or_else(|| format!("fault `{tok}`: missing rank"))?;
-            let rank: usize = rank_s
-                .trim()
-                .trim_start_matches('r')
-                .parse()
-                .map_err(|_| format!("fault `{tok}`: bad rank `{rank_s}`"))?;
-            let mut op = FaultOp::GradReduce;
-            let mut attempts: u32 = 1;
-            for extra in parts {
-                let extra = extra.trim();
-                match extra {
-                    "grad" => op = FaultOp::GradReduce,
-                    "precond" => op = FaultOp::PrecondGather,
-                    "eval" => op = FaultOp::EvalBcast,
-                    _ if extra.starts_with('x') => {
-                        attempts = extra[1..]
-                            .parse()
-                            .map_err(|_| format!("fault `{tok}`: bad retry count `{extra}`"))?;
-                    }
-                    _ => return Err(format!("fault `{tok}`: unknown field `{extra}`")),
-                }
-            }
-            let kind = match kind_s.trim() {
-                "drop" => FaultKind::Drop,
-                "delay" => FaultKind::Delay { attempts },
-                "corrupt" => FaultKind::Corrupt,
-                other => return Err(format!("fault `{tok}`: unknown kind `{other}`")),
-            };
-            events.push(FaultEvent { step, rank, op, kind });
+            events.push(parse_event(tok)?);
         }
         Ok(FaultPlan { events, seed })
+    }
+
+    /// Static plan checks against a world size: every rank must exist,
+    /// and every `rejoin` must target a rank that is dead at its step
+    /// (killed earlier by a `drop` or a budget-exhausting `delay`).
+    /// Rejoins at a step are ordered before kill events at the same
+    /// step, mirroring the runtime (the readmission barrier runs at the
+    /// step boundary, before the step's collectives).
+    pub fn validate(&self, world: usize) -> Result<(), String> {
+        for ev in &self.events {
+            if ev.rank >= world {
+                return Err(format!("`{ev}`: rank r{} out of range for workers={world}", ev.rank));
+            }
+        }
+        let mut order: Vec<&FaultEvent> = self.events.iter().collect();
+        order.sort_by_key(|e| (e.step, !matches!(e.kind, FaultKind::Rejoin)));
+        let mut dead = std::collections::BTreeSet::new();
+        let budget = RetryPolicy::default().max_attempts;
+        for ev in order {
+            match ev.kind {
+                FaultKind::Drop => {
+                    dead.insert(ev.rank);
+                }
+                FaultKind::Delay { attempts } if attempts >= budget => {
+                    dead.insert(ev.rank);
+                }
+                FaultKind::Delay { .. } | FaultKind::Corrupt => {}
+                FaultKind::Rejoin => {
+                    if !dead.remove(&ev.rank) {
+                        return Err(format!("`{ev}` readmits a rank that was never dropped"));
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Read `JORGE_FAULTS` / `JORGE_FAULT_SEED` from the environment.
@@ -454,6 +554,10 @@ pub struct FaultSession {
     records: Vec<FaultRecord>,
     retries: usize,
     modeled_backoff_s: f64,
+    membership_epoch: usize,
+    rejoins: usize,
+    resync_bytes: usize,
+    modeled_resync_s: f64,
 }
 
 impl FaultSession {
@@ -469,6 +573,10 @@ impl FaultSession {
             records: Vec::new(),
             retries: 0,
             modeled_backoff_s: 0.0,
+            membership_epoch: 0,
+            rejoins: 0,
+            resync_bytes: 0,
+            modeled_resync_s: 0.0,
         }
     }
 
@@ -483,8 +591,23 @@ impl FaultSession {
 
     pub fn mark_dead(&mut self, rank: usize) {
         if let Some(a) = self.alive.get_mut(rank) {
-            *a = false;
+            if *a {
+                *a = false;
+                self.membership_epoch += 1;
+            }
         }
+    }
+
+    /// Readmit a rank; returns whether liveness actually flipped.
+    pub fn mark_alive(&mut self, rank: usize) -> bool {
+        if let Some(a) = self.alive.get_mut(rank) {
+            if !*a {
+                *a = true;
+                self.membership_epoch += 1;
+                return true;
+            }
+        }
+        false
     }
 
     pub fn live_ranks(&self) -> Vec<usize> {
@@ -503,13 +626,124 @@ impl FaultSession {
         self.modeled_backoff_s
     }
 
+    /// Bumped every time a rank leaves or rejoins the worker set.
+    pub fn membership_epoch(&self) -> usize {
+        self.membership_epoch
+    }
+
+    /// Ranks readmitted so far.
+    pub fn rejoins(&self) -> usize {
+        self.rejoins
+    }
+
+    /// Bytes of state broadcast to rejoining ranks so far.
+    pub fn resync_bytes(&self) -> usize {
+        self.resync_bytes
+    }
+
+    /// Modeled alpha-beta cost of the resync broadcasts so far.
+    pub fn modeled_resync_s(&self) -> f64 {
+        self.modeled_resync_s
+    }
+
+    /// Fire every `rejoin` event scheduled for `step`: flip the target
+    /// ranks back to alive and return the readmitted ranks (the caller
+    /// runs the resync broadcast + owner re-assignment). A rejoin whose
+    /// target is already live — e.g. the paired drop never fired at
+    /// runtime — is recorded as a no-op instead of erroring, keeping
+    /// fuzzed plans panic-free.
+    pub fn take_rejoins(&mut self, step: usize) -> Vec<usize> {
+        let mut readmitted = Vec::new();
+        for i in 0..self.plan.events.len() {
+            let ev = self.plan.events[i];
+            if self.fired[i] || ev.step != step || !matches!(ev.kind, FaultKind::Rejoin) {
+                continue;
+            }
+            self.fired[i] = true;
+            if !self.mark_alive(ev.rank) {
+                self.records.push(FaultRecord {
+                    step,
+                    rank: ev.rank,
+                    op: ev.op,
+                    kind: ev.kind,
+                    action: "already live; rejoin is a no-op".to_string(),
+                });
+                continue;
+            }
+            self.rejoins += 1;
+            self.records.push(FaultRecord {
+                step,
+                rank: ev.rank,
+                op: ev.op,
+                kind: ev.kind,
+                action: "readmitted; state resynced via leader broadcast".to_string(),
+            });
+            readmitted.push(ev.rank);
+        }
+        readmitted
+    }
+
+    /// Resync a rejoining rank: broadcast an opaque state blob (the
+    /// checkpoint encoding) from world rank `root` to every rank in
+    /// `ranks` over the real binomial-tree schedule, and return the
+    /// copy received by world rank `recv` — byte-for-byte identical to
+    /// the leader's blob (the schedule only memcpys, and the f32
+    /// packing is a bit-level transmute). Charges `resync_bytes` and
+    /// the modeled alpha-beta broadcast cost.
+    pub fn resync_broadcast(
+        &mut self,
+        blob: &[u8],
+        ranks: &[usize],
+        root: usize,
+        recv: usize,
+        comm: &CommCostModel,
+    ) -> Result<Vec<u8>, CollectiveError> {
+        let world = ranks.len();
+        let root_slot = ranks
+            .iter()
+            .position(|&r| r == root)
+            .ok_or(CollectiveError::RootOutOfRange { root, world })?;
+        let recv_slot = ranks
+            .iter()
+            .position(|&r| r == recv)
+            .ok_or(CollectiveError::RootOutOfRange { root: recv, world })?;
+        // pack bytes into f32 words (zero-pad the tail; lossless both
+        // ways because from/to_le_bytes are bit transmutes)
+        let words = blob.len().div_ceil(4);
+        let mut payload = vec![0.0f32; words];
+        for (i, chunk) in blob.chunks(4).enumerate() {
+            let mut b = [0u8; 4];
+            b[..chunk.len()].copy_from_slice(chunk);
+            payload[i] = f32::from_le_bytes(b);
+        }
+        let mut bufs: Vec<Vec<f32>> = (0..world)
+            .map(|s| if s == root_slot { payload.clone() } else { vec![0.0f32; words] })
+            .collect();
+        tree_broadcast(&mut bufs, root_slot)?;
+        let mut out = Vec::with_capacity(words * 4);
+        for w in &bufs[recv_slot] {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out.truncate(blob.len());
+        self.resync_bytes += blob.len();
+        self.modeled_resync_s += comm.broadcast_time(blob.len(), world);
+        Ok(out)
+    }
+
     /// Next unfired event matching (step, op) whose target is in
     /// `ranks`, preferring drops so callers see membership changes
-    /// before payload corruption.
+    /// before payload corruption. Rejoin events never fire here — they
+    /// belong to the step-boundary barrier ([`take_rejoins`](Self::take_rejoins)),
+    /// not to a collective.
     fn take_event(&mut self, step: usize, op: FaultOp, ranks: &[usize]) -> Option<usize> {
         let mut pick: Option<usize> = None;
         for (i, ev) in self.plan.events.iter().enumerate() {
-            if self.fired[i] || ev.step != step || ev.op != op || !ranks.contains(&ev.rank) {
+            if self.fired[i]
+                || ev.step != step
+                || ev.op != op
+                || !ranks.contains(&ev.rank)
+                || matches!(ev.kind, FaultKind::Rejoin)
+            {
                 continue;
             }
             let is_drop = matches!(ev.kind, FaultKind::Drop);
@@ -594,7 +828,7 @@ impl FaultSession {
                 });
                 Ok(())
             }
-            FaultKind::Corrupt => Ok(()),
+            FaultKind::Corrupt | FaultKind::Rejoin => Ok(()),
         }
     }
 
@@ -625,6 +859,7 @@ impl FaultSession {
                         action: format!("poisoned {poisoned} values with NaN"),
                     });
                 }
+                FaultKind::Rejoin => {} // never yielded by take_event
             }
         }
         Ok(())
@@ -698,6 +933,7 @@ impl FaultSession {
                         action: format!("poisoned {poisoned} values with NaN"),
                     });
                 }
+                FaultKind::Rejoin => {} // never yielded by take_event
             }
         }
         tree_broadcast(buffers, root_slot)?;
@@ -956,6 +1192,182 @@ mod tests {
         let ev = FaultPlan::parse("drop@2:r1:eval", 0).unwrap().events[0];
         assert_eq!(ev.op, FaultOp::EvalBcast);
         assert_eq!(ev.op.to_string(), "eval");
+    }
+
+    #[test]
+    fn fault_plan_parses_rejoin_and_rejects_extra_fields() {
+        let plan = FaultPlan::parse("drop@2:r1:grad; rejoin@5:r1", 0).unwrap();
+        assert_eq!(plan.events[1].kind, FaultKind::Rejoin);
+        assert_eq!((plan.events[1].step, plan.events[1].rank), (5, 1));
+        // rejoin is a step-boundary event: no op, no retry count
+        assert!(FaultPlan::parse("rejoin@5:r1:grad", 0).is_err());
+        assert!(FaultPlan::parse("rejoin@5:r1:precond", 0).is_err());
+        assert!(FaultPlan::parse("rejoin@5:r1:x2", 0).is_err());
+        // xN on non-delay kinds is an error too (it would silently
+        // vanish on Display round-trip otherwise)
+        assert!(FaultPlan::parse("drop@1:r0:grad:x2", 0).is_err());
+        assert!(FaultPlan::parse("corrupt@1:r0:x3", 0).is_err());
+    }
+
+    #[test]
+    fn fault_event_display_fromstr_round_trips_every_kind() {
+        // exhaustive kind x op x attempts sweep
+        let ops = [FaultOp::GradReduce, FaultOp::PrecondGather, FaultOp::EvalBcast];
+        let mut events = Vec::new();
+        for (i, &op) in ops.iter().enumerate() {
+            events.push(FaultEvent { step: 3 + i, rank: i, op, kind: FaultKind::Drop });
+            events.push(FaultEvent { step: 7 + i, rank: i, op, kind: FaultKind::Corrupt });
+            for attempts in [1u32, 2, 9] {
+                events.push(FaultEvent {
+                    step: 11 + i,
+                    rank: i,
+                    op,
+                    kind: FaultKind::Delay { attempts },
+                });
+            }
+        }
+        events.push(FaultEvent {
+            step: 5,
+            rank: 1,
+            op: FaultOp::GradReduce,
+            kind: FaultKind::Rejoin,
+        });
+        for ev in &events {
+            let s = ev.to_string();
+            let back: FaultEvent = s.parse().unwrap_or_else(|e| panic!("`{s}`: {e}"));
+            assert_eq!(&back, ev, "display form `{s}` did not round-trip");
+        }
+        // whole-plan round-trip, including the `; ` joiner
+        let plan = FaultPlan { events: events.clone(), seed: 9 };
+        let respelled: FaultPlan = plan.to_string().parse().unwrap();
+        assert_eq!(respelled.events, plan.events);
+        // seeded random events round-trip too
+        let mut rng = Rng::new(0xE1A5);
+        for _ in 0..200 {
+            let kind = match rng.below(4) {
+                0 => FaultKind::Drop,
+                1 => FaultKind::Delay { attempts: 1 + rng.below(9) as u32 },
+                2 => FaultKind::Corrupt,
+                _ => FaultKind::Rejoin,
+            };
+            // rejoin's canonical form carries no op, so its parse gets
+            // the default
+            let op = if matches!(kind, FaultKind::Rejoin) {
+                FaultOp::GradReduce
+            } else {
+                ops[rng.below(3) as usize]
+            };
+            let ev = FaultEvent {
+                step: rng.below(100) as usize,
+                rank: rng.below(16) as usize,
+                op,
+                kind,
+            };
+            let back: FaultEvent = ev.to_string().parse().unwrap();
+            assert_eq!(back, ev, "`{ev}` did not round-trip");
+        }
+    }
+
+    #[test]
+    fn fault_plan_validate_checks_ranks_and_rejoin_targets() {
+        let ok = FaultPlan::parse("drop@2:r1; rejoin@5:r1", 0).unwrap();
+        ok.validate(4).unwrap();
+        // rank out of range
+        assert!(ok.validate(1).is_err());
+        // rejoin of a never-dropped rank
+        let never = FaultPlan::parse("rejoin@5:r1", 0).unwrap();
+        let err = never.validate(4).unwrap_err();
+        assert!(err.contains("never dropped"), "{err}");
+        // rejoin of a rank that was only delayed within budget
+        let delayed = FaultPlan::parse("delay@2:r1:grad:x2; rejoin@5:r1", 0).unwrap();
+        assert!(delayed.validate(4).is_err());
+        // an exhausted delay is a drop, so its rejoin is legal
+        let timed_out = FaultPlan::parse("delay@2:r1:grad:x9; rejoin@5:r1", 0).unwrap();
+        timed_out.validate(4).unwrap();
+        // double rejoin of the same drop is an error
+        let twice = FaultPlan::parse("drop@2:r1; rejoin@5:r1; rejoin@7:r1", 0).unwrap();
+        assert!(twice.validate(4).is_err());
+        // drop -> rejoin -> drop -> rejoin is legal
+        let cycle = FaultPlan::parse("drop@2:r1; rejoin@4:r1; drop@6:r1; rejoin@8:r1", 0).unwrap();
+        cycle.validate(4).unwrap();
+        // same-step ordering: the rejoin barrier runs before the step's
+        // collectives, so rejoin@5 + drop@5 of the same rank is legal
+        // only when a prior drop feeds the rejoin
+        let same_step = FaultPlan::parse("drop@2:r1; rejoin@5:r1; drop@5:r1", 0).unwrap();
+        same_step.validate(4).unwrap();
+    }
+
+    #[test]
+    fn session_take_rejoins_flips_liveness_and_counts() {
+        let plan = FaultPlan::parse("drop@2:r1; rejoin@5:r1", 0).unwrap();
+        let mut sess = FaultSession::new(plan, 4);
+        assert_eq!(sess.membership_epoch(), 0);
+        // nothing scheduled at step 3
+        assert!(sess.take_rejoins(3).is_empty());
+        sess.mark_dead(1);
+        assert_eq!(sess.membership_epoch(), 1);
+        assert_eq!(sess.take_rejoins(5), vec![1]);
+        assert!(sess.is_alive(1));
+        assert_eq!(sess.membership_epoch(), 2);
+        assert_eq!(sess.rejoins(), 1);
+        assert_eq!(sess.live_ranks(), vec![0, 1, 2, 3]);
+        // the event fired; it never fires again
+        assert!(sess.take_rejoins(5).is_empty());
+        let rec = sess.records().last().unwrap();
+        assert_eq!(rec.kind, FaultKind::Rejoin);
+        assert!(rec.action.contains("readmitted"), "{rec:?}");
+    }
+
+    #[test]
+    fn session_rejoin_of_live_rank_is_recorded_noop() {
+        // the paired drop targets a collective that never runs, so the
+        // rank is still alive when the rejoin fires
+        let plan = FaultPlan::parse("drop@2:r1:precond; rejoin@5:r1", 0).unwrap();
+        let mut sess = FaultSession::new(plan, 4);
+        assert!(sess.take_rejoins(5).is_empty());
+        assert!(sess.is_alive(1));
+        assert_eq!(sess.rejoins(), 0);
+        let rec = sess.records().last().unwrap();
+        assert!(rec.action.contains("no-op"), "{rec:?}");
+    }
+
+    #[test]
+    fn rejoin_events_never_fire_inside_collectives() {
+        let plan = FaultPlan::parse("rejoin@1:r0", 0).unwrap();
+        let mut sess = FaultSession::new(plan, 2);
+        let (mut a, _) = make_buffers(2, 16, 33);
+        let mut b = a.clone();
+        sess.all_reduce_mean(1, &mut a, &[0, 1]).unwrap();
+        ring_all_reduce_mean(&mut b).unwrap();
+        assert_eq!(a, b, "a rejoin event must not perturb a collective");
+        assert!(sess.records().is_empty());
+    }
+
+    #[test]
+    fn resync_broadcast_is_byte_exact_and_charged() {
+        let comm = CommCostModel::nvlink_a100();
+        let mut sess = FaultSession::new(FaultPlan::default(), 4);
+        // arbitrary bytes, length not a multiple of 4 (exercises the
+        // pad/truncate path), including NaN-pattern words
+        let mut blob: Vec<u8> = (0..1037u32).map(|i| (i * 31 % 251) as u8).collect();
+        blob[8..12].copy_from_slice(&f32::NAN.to_le_bytes());
+        for recv in [1usize, 3] {
+            let out = sess.resync_broadcast(&blob, &[0, 1, 2, 3], 0, recv, &comm).unwrap();
+            assert_eq!(out, blob, "recv={recv}: resync must be byte-exact");
+        }
+        assert_eq!(sess.resync_bytes(), 2 * blob.len());
+        assert!(sess.modeled_resync_s() > 0.0);
+        let want = 2.0 * comm.broadcast_time(blob.len(), 4);
+        assert!((sess.modeled_resync_s() - want).abs() < 1e-15, "{}", sess.modeled_resync_s());
+        // root or receiver outside the rank set is a typed error
+        assert!(matches!(
+            sess.resync_broadcast(&blob, &[0, 2], 1, 0, &comm),
+            Err(CollectiveError::RootOutOfRange { root: 1, .. })
+        ));
+        assert!(matches!(
+            sess.resync_broadcast(&blob, &[0, 2], 0, 3, &comm),
+            Err(CollectiveError::RootOutOfRange { root: 3, .. })
+        ));
     }
 
     #[test]

@@ -452,8 +452,11 @@ impl TrainConfig {
                     "faults only apply to the collectives path; set workers > 1".into()
                 );
             }
-            crate::collectives::FaultPlan::parse(&self.faults, self.fault_seed)
+            let plan = crate::collectives::FaultPlan::parse(&self.faults, self.fault_seed)
                 .map_err(|e| format!("faults: {e}"))?;
+            // static plan checks: ranks must exist at this world size,
+            // and a rejoin must target a rank the plan actually drops
+            plan.validate(self.workers).map_err(|e| format!("faults: {e}"))?;
         }
         Ok(())
     }
@@ -625,6 +628,24 @@ artifacts = "artifacts"
         t2.set_override("train.workers", "1").unwrap();
         let err = TrainConfig::from_toml(&t2).unwrap_err();
         assert!(err.contains("workers"), "{err}");
+
+        // a rank outside the world is a plan bug, not a runtime surprise
+        let mut t3 = Toml::parse(SAMPLE).unwrap();
+        t3.set_override("train.faults", "\"drop@3:r9\"").unwrap();
+        let err = TrainConfig::from_toml(&t3).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+
+        // rejoin must target a rank the plan previously drops
+        let mut t4 = Toml::parse(SAMPLE).unwrap();
+        t4.set_override("train.faults", "\"rejoin@5:r1\"").unwrap();
+        let err = TrainConfig::from_toml(&t4).unwrap_err();
+        assert!(err.contains("never dropped"), "{err}");
+
+        // ...and the drop+rejoin pair is a valid plan
+        let mut t5 = Toml::parse(SAMPLE).unwrap();
+        t5.set_override("train.faults", "\"drop@2:r1:precond; rejoin@5:r1\"").unwrap();
+        let c = TrainConfig::from_toml(&t5).unwrap();
+        assert_eq!(c.faults, "drop@2:r1:precond; rejoin@5:r1");
     }
 
     #[test]

@@ -37,6 +37,13 @@
 //!   step (a sound degradation mode — Anil et al. 2021), the
 //!   FLOPs-balanced owner assignment is re-run over the survivors, and
 //!   the gather retries without the dead rank;
+//! * a previously-dropped rank with a `rejoin@step:rank` event is
+//!   readmitted at the **step boundary** (never mid-collective): the
+//!   leader tree-broadcasts the full training state — params, optimizer
+//!   mirror state, preconditioners — as the exact checkpoint blob
+//!   `--resume` would read, so resync and resume share one codepath,
+//!   and the FLOPs-balanced owner assignment is re-run over the
+//!   restored membership;
 //! * every recovery lands in the [`ShardReport`] / [`FaultReport`]
 //!   telemetry on [`RunResult`].
 //!
@@ -128,6 +135,10 @@ pub struct ShardReport {
     /// Times the owner assignment was re-balanced over the survivors
     /// after membership shrank.
     pub reassignments: usize,
+    /// Ranks readmitted through the step-boundary rejoin barrier.
+    pub rejoin_events: usize,
+    /// Bytes of checkpoint-encoded state broadcast to rejoining ranks.
+    pub resync_bytes: usize,
 }
 
 /// What the fault session did over the whole run.
@@ -143,6 +154,12 @@ pub struct FaultReport {
     pub dropped: Vec<usize>,
     /// Ranks still alive at the end of the run.
     pub survivors: usize,
+    /// Ranks readmitted by `rejoin` events.
+    pub rejoins: usize,
+    /// Bytes of state broadcast to rejoining ranks.
+    pub resync_bytes: usize,
+    /// Membership epoch at end of run (bumped on every leave/rejoin).
+    pub membership_epochs: usize,
 }
 
 /// Deterministic owner-computes assignment: `costs[l]` is the refresh
@@ -387,6 +404,11 @@ impl Trainer {
             } else {
                 Some(FaultPlan::parse(&cfg.faults, cfg.fault_seed).map_err(|e| anyhow!(e))?)
             };
+            if let Some(p) = &plan {
+                // rank ranges + rejoin-of-a-live-rank are plan bugs;
+                // catch them before any step runs
+                p.validate(cfg.workers).map_err(|e| anyhow!("faults: {e}"))?;
+            }
             plan.filter(|p| !p.is_empty())
                 .map(|p| FaultSession::new(p, cfg.workers))
         } else {
@@ -439,6 +461,8 @@ impl Trainer {
             modeled_comm_s: s.modeled_comm_s,
             stale_fallback_layers: s.stale_fallback_layers,
             reassignments: s.reassignments,
+            rejoin_events: self.fault.as_ref().map_or(0, |f| f.rejoins()),
+            resync_bytes: self.fault.as_ref().map_or(0, |f| f.resync_bytes()),
         })
     }
 
@@ -451,13 +475,22 @@ impl Trainer {
                 .records()
                 .iter()
                 .map(|r| {
-                    format!("step {} rank {} {} {}: {}", r.step, r.rank, r.op, r.kind, r.action)
+                    if matches!(r.kind, crate::collectives::FaultKind::Rejoin) {
+                        // rejoins fire at the step boundary, not inside a
+                        // collective — no op token in the event line
+                        format!("step {} rank {} {}: {}", r.step, r.rank, r.kind, r.action)
+                    } else {
+                        format!("step {} rank {} {} {}: {}", r.step, r.rank, r.op, r.kind, r.action)
+                    }
                 })
                 .collect(),
             retries: f.retries(),
             modeled_backoff_s: f.modeled_backoff_s(),
             dropped: (0..self.cfg.workers).filter(|&r| !live.contains(&r)).collect(),
             survivors: live.len(),
+            rejoins: f.rejoins(),
+            resync_bytes: f.resync_bytes(),
+            membership_epochs: f.membership_epoch(),
         })
     }
 
@@ -977,6 +1010,79 @@ impl Trainer {
         }
     }
 
+    /// Step-boundary re-admission barrier: fire any `rejoin` events due
+    /// at the current global step. Each readmitted rank receives the
+    /// leader's full training state — the exact checkpoint blob
+    /// `--resume` reads — through the real tree-broadcast schedule,
+    /// restores it via [`Trainer::apply_checkpoint`], and the
+    /// FLOPs-balanced owner assignment is re-run over the restored
+    /// membership. `decode_blob(encode_blob(state))` is a bitwise
+    /// identity and the leader's state is never perturbed, so the
+    /// trajectory from this step onward is bitwise identical to a run
+    /// that entered the step with full membership and the same state.
+    fn readmit_ranks(&mut self) -> Result<()> {
+        let step = self.global_step;
+        let rejoined = match self.fault.as_mut() {
+            Some(f) => f.take_rejoins(step),
+            None => return Ok(()),
+        };
+        if rejoined.is_empty() {
+            return Ok(());
+        }
+        let _resync_scope = trace::scope(Phase::Resync);
+        let named = self.state_tensors();
+        let refs: Vec<(String, &HostTensor)> =
+            named.iter().map(|(n, t)| (n.clone(), t)).collect();
+        let blob = super::checkpoint::encode_blob(&refs);
+        let comm = self.shard.as_ref().map(|s| s.comm).unwrap_or_else(CommCostModel::nvlink_a100);
+        // the barrier world is the *restored* membership: take_rejoins
+        // already flipped the readmitted ranks back to alive
+        let live: Vec<usize> = match &self.fault {
+            Some(f) => f.live_ranks(),
+            None => Vec::new(),
+        };
+        // leader = lowest rank that was live before the barrier (it
+        // carries authoritative state; a rank cannot resync from itself)
+        let root = live
+            .iter()
+            .copied()
+            .find(|r| !rejoined.contains(r))
+            .ok_or_else(|| anyhow!("rejoin barrier: no surviving leader to resync from"))?;
+        let (received, resync_s) = {
+            let Some(fault) = self.fault.as_mut() else { return Ok(()) };
+            let before = fault.modeled_resync_s();
+            let mut received: Option<Vec<u8>> = None;
+            for &r in &rejoined {
+                let bytes = fault.resync_broadcast(&blob, &live, root, r, &comm)?;
+                eprintln!(
+                    "[faults] step {step}: rank {r} rejoined; resynced {} bytes from \
+                     leader rank {root}",
+                    blob.len()
+                );
+                received = Some(bytes);
+            }
+            (received, fault.modeled_resync_s() - before)
+        };
+        // restore the received copy through the shared resume codepath,
+        // exercising the full serialize -> broadcast -> deserialize
+        // contract the rejoining worker would run
+        if let Some(bytes) = received {
+            let tensors = super::checkpoint::decode_blob(&bytes)
+                .map_err(|e| anyhow!("rejoin resync decode: {e}"))?;
+            self.apply_checkpoint(tensors)?;
+        }
+        // fold the readmitted ranks back into owner-computes refresh;
+        // with full membership restored the deterministic LPT reproduces
+        // the original assignment, and the resync traffic is charged to
+        // the modeled step like any other collective
+        let policy = self.cfg.shard_policy;
+        if let (Some(native), Some(shard)) = (self.native_opt.as_deref(), self.shard.as_mut()) {
+            reassign_owners(shard, native, &live, policy)?;
+            shard.modeled_comm_s += resync_s;
+        }
+        Ok(())
+    }
+
     /// Apply `cfg.resume`: `""` starts fresh, `"auto"` restores the
     /// newest *valid* checkpoint in [`Trainer::checkpoint_dir`]
     /// (truncated or bit-flipped files are skipped by the CRC check),
@@ -1098,6 +1204,7 @@ impl Trainer {
                     break 'epochs;
                 }
                 lr_now = self.schedule.lr_at(self.global_step);
+                self.readmit_ranks()?;
                 let t0 = std::time::Instant::now();
                 let (loss, metric) = if self.cfg.workers == 1 {
                     let lo = si * per_worker_batch;
@@ -1222,12 +1329,16 @@ impl Trainer {
                 trace::incr("shard.allgather_floats", sh.allgather_floats as u64);
                 trace::incr("shard.stale_fallback_layers", sh.stale_fallback_layers as u64);
                 trace::incr("shard.reassignments", sh.reassignments as u64);
+                trace::incr("shard.rejoin_events", sh.rejoin_events as u64);
+                trace::incr("shard.resync_bytes", sh.resync_bytes as u64);
                 trace::set_gauge("shard.modeled_comm_s", sh.modeled_comm_s);
             }
             if let Some(f) = &result.faults {
                 trace::incr("fault.events", f.events.len() as u64);
                 trace::incr("fault.retries", f.retries as u64);
                 trace::incr("fault.dropped", f.dropped.len() as u64);
+                trace::incr("fault.rejoins", f.rejoins as u64);
+                trace::incr("fault.membership_epochs", f.membership_epochs as u64);
                 trace::set_gauge("fault.modeled_backoff_s", f.modeled_backoff_s);
             }
             let pd = dispatch_counters().since(&pool_baseline);
@@ -1254,11 +1365,13 @@ impl Trainer {
         Ok(result)
     }
 
-    /// Save params + optimizer state — and, on the native path, the
-    /// mirror's preconditioner state and step counter, so a resumed run
-    /// continues bitwise-identically. Atomic + checksummed: see
-    /// [`super::checkpoint::save`].
-    pub fn save_checkpoint(&mut self, path: &str) -> Result<()> {
+    /// The full named training state under the checkpoint contract:
+    /// params + optimizer state — and, on the native path, the mirror's
+    /// preconditioner state and step counter. Both cadence checkpoints
+    /// and the rejoin resync broadcast serialize exactly this list, so
+    /// a resynced rank and a `--resume`d run restore through one
+    /// codepath.
+    fn state_tensors(&mut self) -> Vec<(String, HostTensor)> {
         let mut named: Vec<(String, HostTensor)> = Vec::new();
         {
             let spec = self.train_full.spec();
@@ -1295,6 +1408,14 @@ impl Trainer {
             "meta/global_step".to_string(),
             HostTensor::from_i32(vec![1], vec![self.global_step as i32]),
         ));
+        named
+    }
+
+    /// Save the full training state. Atomic + checksummed: see
+    /// [`super::checkpoint::save`]. A resumed run continues
+    /// bitwise-identically.
+    pub fn save_checkpoint(&mut self, path: &str) -> Result<()> {
+        let named = self.state_tensors();
         let refs: Vec<(String, &HostTensor)> =
             named.iter().map(|(n, t)| (n.clone(), t)).collect();
         super::checkpoint::save(path, &refs)?;

@@ -47,7 +47,7 @@ fn flag_spec() -> Vec<FlagSpec> {
         flag("checkpoint-every", "write a crash-safe checkpoint every N steps (0 = off)"),
         flag("checkpoint-dir", "directory for cadence checkpoints / auto-resume"),
         flag("resume", "\"auto\" (newest valid checkpoint) or an explicit path"),
-        flag("faults", "fault-injection plan, e.g. \"drop@3:1:precond;delay@5:0:x4\""),
+        flag("faults", "fault-injection plan, e.g. \"drop@3:1:precond;delay@5:0:x4;rejoin@8:1\""),
         flag("fault-seed", "seed for deterministic fault corruption"),
         flag("max-steps", "hard cap on optimizer steps"),
         flag("trace", "write per-step phase-trace JSONL to this path"),
@@ -201,7 +201,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             .map(|(w, ls)| format!("w{w}:{ls:?}"))
             .collect();
         println!(
-            "shard: workers={} owners=[{}] refreshes={:?} allgathers={} floats={} modeled_comm={:.3}ms stale_fallbacks={} reassignments={}",
+            "shard: workers={} owners=[{}] refreshes={:?} allgathers={} floats={} modeled_comm={:.3}ms stale_fallbacks={} reassignments={} rejoins={} resync_bytes={}",
             sh.workers,
             owners.join(" "),
             sh.refresh_events,
@@ -210,6 +210,8 @@ fn cmd_train(args: &Args) -> Result<()> {
             sh.modeled_comm_s * 1e3,
             sh.stale_fallback_layers,
             sh.reassignments,
+            sh.rejoin_events,
+            sh.resync_bytes,
         );
     }
     if result.guard.total() > 0 {
@@ -217,12 +219,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(f) = &result.faults {
         println!(
-            "faults: events={} retries={} modeled_backoff={:.3}s dropped={:?} survivors={}",
+            "faults: events={} retries={} modeled_backoff={:.3}s dropped={:?} survivors={} rejoins={} resync_bytes={} membership_epochs={}",
             f.events.len(),
             f.retries,
             f.modeled_backoff_s,
             f.dropped,
             f.survivors,
+            f.rejoins,
+            f.resync_bytes,
+            f.membership_epochs,
         );
         for ev in &f.events {
             println!("fault-event: {ev}");

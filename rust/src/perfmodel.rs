@@ -246,6 +246,24 @@ pub fn project_sharded_iteration(
     IterProjection { fwd_bwd_s: fwd_bwd_anchor_s, optimizer_s: opt_t, comm_s }
 }
 
+/// Modeled one-off cost of readmitting a dropped rank (elastic rejoin):
+/// the leader tree-broadcasts the full training state — params plus the
+/// optimizer's mirror state and preconditioners — to the restored
+/// membership, exactly the bytes a checkpoint of the run would hold.
+/// Charged to the step the rejoin lands on (the runtime mirrors this in
+/// `FaultSession::resync_broadcast`); amortised over a long run it is
+/// noise, but it bounds how often elasticity can be exercised before
+/// resync traffic dominates the gradient all-reduce.
+pub fn project_rejoin_resync(
+    comm: &CommCostModel,
+    net: &NetworkInventory,
+    opt: OptKind,
+    gpus: usize,
+) -> f64 {
+    let state_bytes = 4 * net.param_count() + crate::optim::memory::state_bytes(net, opt, true);
+    comm.broadcast_time(state_bytes, gpus)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -340,6 +358,21 @@ mod tests {
         let (g, c) = table1_setup();
         let net = resnet50().blocked(1024);
         project_sharded_iteration(&g, &c, &net, OptKind::Sgd, 50, 0.085, 16);
+    }
+
+    #[test]
+    fn rejoin_resync_cost_is_positive_and_tracks_state_size() {
+        let (_, c) = table1_setup();
+        let net = resnet50().blocked(1024);
+        let jorge = project_rejoin_resync(&c, &net, OptKind::Jorge, 16);
+        assert!(jorge > 0.0);
+        // a bigger world pays more tree hops for the same bytes
+        assert!(project_rejoin_resync(&c, &net, OptKind::Jorge, 32) > jorge);
+        // Shampoo carries stat EMAs on top of the preconditioners, so
+        // its resync blob is at least as heavy as Jorge's
+        assert!(project_rejoin_resync(&c, &net, OptKind::Shampoo, 16) >= jorge);
+        // one resync should stay well under a full second on NVLink
+        assert!(jorge < 1.0, "resync {jorge}s");
     }
 
     #[test]

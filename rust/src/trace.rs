@@ -3,7 +3,7 @@
 //! A run-wide singleton that attributes wall-clock to the phases of a
 //! training step (data / forward / backward / grad all-reduce /
 //! preconditioner refresh / preconditioner all-gather / apply /
-//! checkpoint / eval) and folds every subsystem's counters — guardrails,
+//! checkpoint / resync / eval) and folds every subsystem's counters — guardrails,
 //! faults, sharding, worker-pool dispatch — into one place. The trainer
 //! drains it into a [`MetricsReport`] at the end of a run (`--metrics-out`)
 //! and streams per-step phase rows as JSONL (`--trace`).
@@ -50,12 +50,14 @@ pub enum Phase {
     Apply,
     /// Cadenced checkpoint save.
     Checkpoint,
+    /// Rejoin readmission: leader state broadcast + owner re-assignment.
+    Resync,
     /// Validation pass + eval-result broadcast.
     Eval,
 }
 
 /// Every phase, in the order reports and JSONL rows list them.
-pub const PHASES: [Phase; 9] = [
+pub const PHASES: [Phase; 10] = [
     Phase::Data,
     Phase::Forward,
     Phase::Backward,
@@ -64,6 +66,7 @@ pub const PHASES: [Phase; 9] = [
     Phase::PrecondGather,
     Phase::Apply,
     Phase::Checkpoint,
+    Phase::Resync,
     Phase::Eval,
 ];
 
@@ -79,6 +82,7 @@ impl Phase {
             Phase::PrecondGather => "precond_all_gather",
             Phase::Apply => "apply",
             Phase::Checkpoint => "checkpoint",
+            Phase::Resync => "resync",
             Phase::Eval => "eval",
         }
     }
@@ -93,7 +97,8 @@ impl Phase {
             Phase::PrecondGather => 5,
             Phase::Apply => 6,
             Phase::Checkpoint => 7,
-            Phase::Eval => 8,
+            Phase::Resync => 8,
+            Phase::Eval => 9,
         }
     }
 }

@@ -9,7 +9,14 @@
 //!    run still finishes with finite losses;
 //! 3. a corrupted newest checkpoint is skipped and `resume = auto`
 //!    falls back to the previous valid one, continuing bitwise
-//!    identically to an uninterrupted run.
+//!    identically to an uninterrupted run;
+//! 4. a dropped rank readmitted by a `rejoin` event resyncs through the
+//!    leader state broadcast and the trajectory from the rejoin step
+//!    onward is bitwise identical to a full-membership run entering
+//!    that step with the same state;
+//! 5. (fuzz) any random seeded fault plan either completes with finite
+//!    surviving-rank losses or fails with a typed error — never a
+//!    panic.
 
 use jorge::config::{ScheduleKind, TrainConfig};
 use jorge::coordinator::{checkpoint, Trainer};
@@ -260,4 +267,185 @@ fn fault_plans_only_arm_on_multi_worker_runs() {
     let mut c = cfg("jorge", 1);
     c.faults = "drop@1:r0".into();
     assert!(Trainer::new(c, eng).is_err());
+}
+
+#[test]
+fn rejoined_rank_resyncs_and_telemetry_counts_it() {
+    let eng = backend();
+    let mut c = cfg("jorge_sharded", 4);
+    c.faults = "drop@2:r1:grad; rejoin@5:r1".into();
+    let mut trainer = Trainer::new(c, eng).unwrap();
+    let r = trainer.run().unwrap();
+
+    assert!(r.step_losses.iter().all(|l| l.is_finite()));
+    let sh = r.shard.expect("sharded run must report shard telemetry");
+    assert_eq!(sh.rejoin_events, 1, "{sh:?}");
+    assert!(sh.resync_bytes > 0, "resync must move the state blob: {sh:?}");
+    // shed at step 2, readmitted at step 5: two re-balances
+    assert!(sh.reassignments >= 2, "{sh:?}");
+    // after readmission every preconditioned layer is owned again and
+    // the restored LPT gives rank 1 its share back
+    let owned_total: usize = sh.owned_layers.iter().map(Vec::len).sum();
+    assert_eq!(owned_total, 3, "mlp has 3 preconditioned layers: {sh:?}");
+    assert!(!sh.owned_layers[1].is_empty(), "rejoined rank owns nothing: {sh:?}");
+
+    let f = r.faults.expect("fault plan was active");
+    assert_eq!(f.rejoins, 1);
+    assert!(f.resync_bytes > 0);
+    assert_eq!(f.membership_epochs, 2, "one leave + one rejoin: {f:?}");
+    assert!(f.dropped.is_empty(), "rejoined rank must count as alive: {f:?}");
+    assert_eq!(f.survivors, 4);
+    let rejoin_line = f
+        .events
+        .iter()
+        .find(|e| e.contains("rejoin"))
+        .expect("rejoin event must be recorded");
+    assert!(rejoin_line.contains("step 5 rank 1"), "{rejoin_line}");
+    assert!(rejoin_line.contains("readmitted"), "{rejoin_line}");
+}
+
+/// The tentpole correctness bar: drop rank 1 at step 2, rejoin it at
+/// step 5, run to step 16 — from step 5 onward the run must be bitwise
+/// identical to a full-membership run entering step 5 with the same
+/// state. The reference run is constructed by resuming (fault-free)
+/// from the cadence checkpoint taken at step 5, which holds exactly
+/// the state the resync broadcast carried (the blob codepaths are
+/// shared and `decode(encode(x)) == x` bitwise).
+#[test]
+fn rejoined_run_is_bitwise_identical_from_rejoin_step_onward() {
+    let eng = backend();
+    for workers in [2usize, 4, 7] {
+        let dir = std::env::temp_dir()
+            .join(format!("jorge_ft_rejoin_{}_{workers}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let dir_s = dir.to_str().unwrap().to_string();
+
+        // faulted run: membership shrinks over steps 2..5, rank 1 is
+        // readmitted at the step-5 boundary
+        let mut c_fault = cfg("jorge_sharded", workers);
+        c_fault.faults = "drop@2:r1:grad; rejoin@5:r1".into();
+        c_fault.checkpoint_every = 5;
+        c_fault.checkpoint_dir = dir_s.clone();
+        let mut faulted = Trainer::new(c_fault, eng.clone()).unwrap();
+        let r_fault = faulted.run().unwrap();
+        assert_eq!(r_fault.step_losses.len(), 16);
+        assert_eq!(r_fault.faults.as_ref().unwrap().rejoins, 1, "workers={workers}");
+
+        // reference run: full membership, no faults, resumed from the
+        // step-5 checkpoint (= the resync state)
+        let mut c_ref = cfg("jorge_sharded", workers);
+        c_ref.resume = checkpoint::step_path(&dir_s, 5).to_str().unwrap().to_string();
+        let mut reference = Trainer::new(c_ref, eng.clone()).unwrap();
+        let r_ref = reference.run().unwrap();
+        assert_eq!(r_ref.step_losses.len(), 11, "reference reruns steps 5..16");
+
+        // losses from the rejoin step onward are bitwise equal
+        for (i, (a, b)) in r_fault.step_losses[5..].iter().zip(&r_ref.step_losses).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "workers={workers}: loss diverged at step {}",
+                5 + i
+            );
+        }
+
+        // params and optimizer state are bitwise equal at the end
+        for (a, b) in faulted.params.iter().zip(&reference.params) {
+            let (a, b) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+            assert!(
+                a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "workers={workers}: params diverged"
+            );
+        }
+        for (a, b) in faulted.opt_state.iter().zip(&reference.opt_state) {
+            let (a, b) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+            assert!(
+                a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "workers={workers}: optimizer state diverged"
+            );
+        }
+        // ...including the native mirror's preconditioners: the full
+        // serialized state must match byte for byte
+        let ckpt_a = dir.join("final_fault.ckpt");
+        let ckpt_b = dir.join("final_ref.ckpt");
+        faulted.save_checkpoint(ckpt_a.to_str().unwrap()).unwrap();
+        reference.save_checkpoint(ckpt_b.to_str().unwrap()).unwrap();
+        assert_eq!(
+            std::fs::read(&ckpt_a).unwrap(),
+            std::fs::read(&ckpt_b).unwrap(),
+            "workers={workers}: serialized end states differ"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Satellite property test: ~50 random seeded fault plans — drops,
+/// delays, corruptions, and rejoins over random steps, ranks, and ops
+/// (including `:eval`) — must each either complete with finite
+/// surviving-rank losses or fail with a typed error. A panic anywhere
+/// fails the trial with the offending plan in the message. The seed is
+/// pinned (override with `JORGE_FUZZ_SEED`) so CI failures reproduce.
+#[test]
+fn fuzz_random_fault_plans_never_panic() {
+    use jorge::rngx::Rng;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    let seed: u64 = std::env::var("JORGE_FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(20240817);
+    let mut rng = Rng::new(seed);
+    let ops = ["grad", "precond", "eval"];
+    for trial in 0..50 {
+        let workers = 2 + rng.below(3) as usize; // 2..=4
+        let n_events = 1 + rng.below(4) as usize;
+        let mut events: Vec<String> = Vec::new();
+        // (step, rank) pairs of generated drops, so most rejoins can be
+        // paired into plans that pass static validation and exercise
+        // the readmission barrier rather than just the config error
+        let mut drops: Vec<(usize, usize)> = Vec::new();
+        for _ in 0..n_events {
+            let step = rng.below(10) as usize;
+            let rank = rng.below(workers as u64) as usize;
+            let op = ops[rng.below(3) as usize];
+            let tok = match rng.below(4) {
+                0 => {
+                    drops.push((step, rank));
+                    format!("drop@{step}:r{rank}:{op}")
+                }
+                1 => format!("delay@{step}:r{rank}:{op}:x{}", 1 + rng.below(5)),
+                2 => format!("corrupt@{step}:r{rank}:{op}"),
+                _ => match drops.pop() {
+                    Some((s, r)) => format!("rejoin@{}:r{r}", s + 1 + rng.below(6) as usize),
+                    // unpaired rejoin: Trainer::new must reject it with
+                    // a typed error, not panic
+                    None => format!("rejoin@{step}:r{rank}"),
+                },
+            };
+            events.push(tok);
+        }
+        let spec = events.join(";");
+        let opt = if rng.below(2) == 0 { "jorge_sharded" } else { "jorge" };
+        let mut c = cfg(opt, workers);
+        c.epochs = 1;
+        c.steps_per_epoch = 6;
+        c.faults = spec.clone();
+        c.fault_seed = rng.below(1 << 20);
+        let outcome = catch_unwind(AssertUnwindSafe(|| -> Result<Vec<f32>, String> {
+            let mut t = Trainer::new(c, backend()).map_err(|e| e.to_string())?;
+            let r = t.run().map_err(|e| e.to_string())?;
+            Ok(r.step_losses)
+        }));
+        match outcome {
+            Ok(Ok(losses)) => assert!(
+                losses.iter().all(|l| l.is_finite()),
+                "trial {trial} (seed {seed}) plan `{spec}`: non-finite surviving loss"
+            ),
+            Ok(Err(err)) => assert!(
+                !err.is_empty(),
+                "trial {trial} (seed {seed}) plan `{spec}`: empty error message"
+            ),
+            Err(_) => panic!("trial {trial} (seed {seed}): plan `{spec}` panicked"),
+        }
+    }
 }
