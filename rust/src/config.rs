@@ -315,6 +315,11 @@ pub struct TrainConfig {
     /// Run-summary metrics JSON output path (empty = off). Uses the
     /// `BENCH_*.json` envelope so `jorge bench-diff` can diff it.
     pub metrics_out: String,
+    /// Defer the sharded preconditioner exchange by one step: owners
+    /// refresh at step t, the gathered import lands at the t+1 step
+    /// boundary, and step t applies one-refresh-stale preconditioners
+    /// (async-Shampoo style). Sharded optimizers only.
+    pub precond_overlap: bool,
 }
 
 impl Default for TrainConfig {
@@ -349,6 +354,7 @@ impl Default for TrainConfig {
             resume: String::new(),
             trace_path: String::new(),
             metrics_out: String::new(),
+            precond_overlap: false,
         }
     }
 }
@@ -398,6 +404,7 @@ impl TrainConfig {
             resume: t.str_or("train.resume", &d.resume),
             trace_path: t.str_or("paths.trace", &d.trace_path),
             metrics_out: t.str_or("paths.metrics_out", &d.metrics_out),
+            precond_overlap: t.bool_or("train.precond_overlap", d.precond_overlap),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -441,6 +448,13 @@ impl TrainConfig {
             return Err(format!(
                 "shard_policy = {} only applies to sharded optimizers ({} is not sharded)",
                 self.shard_policy.name(),
+                self.optimizer
+            ));
+        }
+        if self.precond_overlap && !self.optimizer.sharded {
+            return Err(format!(
+                "precond_overlap only applies to sharded optimizers ({} has no \
+                 preconditioner exchange to overlap)",
                 self.optimizer
             ));
         }
@@ -596,6 +610,29 @@ artifacts = "artifacts"
         t4.set_override("train.optimizer", "shampoo_sharded").unwrap();
         t4.set_override("train.workers", "1").unwrap();
         assert!(TrainConfig::from_toml(&t4).is_ok());
+    }
+
+    #[test]
+    fn precond_overlap_requires_sharded_optimizer() {
+        // overlap on a serial optimizer would be silently inert — reject
+        let mut t = Toml::parse(SAMPLE).unwrap();
+        t.set_override("train.precond_overlap", "true").unwrap();
+        let err = TrainConfig::from_toml(&t).unwrap_err();
+        assert!(err.contains("precond_overlap"), "{err}");
+
+        // sharded optimizer: valid at any worker count (workers = 1 rides
+        // the documented sharded downgrade note, overlap included)
+        let mut t2 = Toml::parse(SAMPLE).unwrap();
+        t2.set_override("train.optimizer", "jorge_sharded").unwrap();
+        t2.set_override("train.precond_overlap", "true").unwrap();
+        let c = TrainConfig::from_toml(&t2).unwrap();
+        assert!(c.precond_overlap);
+
+        let mut t3 = Toml::parse(SAMPLE).unwrap();
+        t3.set_override("train.optimizer", "jorge_sharded").unwrap();
+        t3.set_override("train.precond_overlap", "true").unwrap();
+        t3.set_override("train.workers", "1").unwrap();
+        assert!(TrainConfig::from_toml(&t3).is_ok());
     }
 
     #[test]

@@ -7,8 +7,10 @@
 #![warn(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod checkpoint;
+pub mod sched;
 pub mod trainer;
 
+pub use sched::{Stage, StageSpec, StepPlan};
 pub use trainer::{
     assign_owners, EpochRecord, FaultReport, RunResult, ShardReport, Trainer,
 };

@@ -1,0 +1,407 @@
+//! L3 step schedule: every training step is a declarative [`StepPlan`]
+//! of typed [`Stage`]s with explicit data dependencies, executed by one
+//! plan executor the three trainer loops (fused, data-parallel,
+//! sharded) drive as thin front-ends.
+//!
+//! The plan is the single place the step's structure lives:
+//!
+//! * **Stages** name the units of work
+//!   (`Data → FwdBwd → GradReduce → PrecondRefresh → PrecondExchange →
+//!   Apply`, plus the boundary stages `Resync`/`Checkpoint`/`Eval`).
+//!   The backend fuses forward and backward into one executable call,
+//!   so the plan models them as a single `FwdBwd` stage.
+//! * **`after` edges** record which earlier stages a stage actually
+//!   consumes. Execution on the single simulated node is sequential in
+//!   list order; the edges are what the perf model reads to decide what
+//!   a real cluster could overlap. The payoff is the deferred
+//!   preconditioner exchange (`--precond-overlap`): in the overlapped
+//!   plan `Apply` depends only on `GradReduce` — the all-gather of
+//!   freshly refreshed preconditioners is off the apply's critical
+//!   path, and its import lands at the *next* step boundary as a
+//!   `PrecondImport` stage (async-Shampoo style one-refresh staleness).
+//! * **Trace scopes** open in the executor, not at call sites: a stage
+//!   whose spec is `scoped` gets its [`Phase`] timer for exactly the
+//!   hook's duration. Stages whose callees attribute their own time
+//!   (the fused executable's internal forward/backward/apply, the
+//!   native optimizer's refresh/apply scopes) are marked unscoped so
+//!   nothing is double-counted.
+//!
+//! Plans are validated on every execution: a stage may appear at most
+//! once and every dependency must run earlier in the list, so a driver
+//! cannot silently build a plan that consumes data before it exists.
+
+use crate::trace::{self, Phase};
+use anyhow::{anyhow, Result};
+
+/// A typed unit of per-step work. Drivers match on the stage in their
+/// hook; the executor owns ordering, validation, and trace scoping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Rejoin barrier: leader resync broadcast to readmitted ranks.
+    Resync,
+    /// Batch assembly: dataset slicing + host tensor packing.
+    Data,
+    /// Fused forward + backward (one backend call per simulated rank).
+    FwdBwd,
+    /// Ring all-reduce of the gradient buckets.
+    GradReduce,
+    /// Deferred-exchange landing: import the preconditioners gathered
+    /// at the previous step (`--precond-overlap` only).
+    PrecondImport,
+    /// Owner-computes preconditioner refresh on the owned layers.
+    PrecondRefresh,
+    /// Export + ring all-gather of refreshed preconditioners; the
+    /// import applies immediately (sync) or is deferred (overlap).
+    PrecondExchange,
+    /// Parameter update from the reduced gradients.
+    Apply,
+    /// Cadenced checkpoint save.
+    Checkpoint,
+    /// Held-out evaluation + eval-result broadcast.
+    Eval,
+}
+
+impl Stage {
+    /// Stable snake_case name for errors and plan introspection.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Resync => "resync",
+            Stage::Data => "data",
+            Stage::FwdBwd => "fwd_bwd",
+            Stage::GradReduce => "grad_reduce",
+            Stage::PrecondImport => "precond_import",
+            Stage::PrecondRefresh => "precond_refresh",
+            Stage::PrecondExchange => "precond_exchange",
+            Stage::Apply => "apply",
+            Stage::Checkpoint => "checkpoint",
+            Stage::Eval => "eval",
+        }
+    }
+
+    /// The trace phase the executor opens for a `scoped` stage. Stages
+    /// timed inside their callees map to `None` at the executor level;
+    /// the deferred import is charged to the all-gather phase, same as
+    /// the synchronous import it replaces.
+    pub fn scope_phase(self) -> Option<Phase> {
+        match self {
+            Stage::Data => Some(Phase::Data),
+            Stage::GradReduce => Some(Phase::GradReduce),
+            Stage::PrecondImport => Some(Phase::PrecondGather),
+            Stage::PrecondExchange => Some(Phase::PrecondGather),
+            Stage::Apply => Some(Phase::Apply),
+            Stage::Checkpoint => Some(Phase::Checkpoint),
+            Stage::Eval => Some(Phase::Eval),
+            Stage::Resync => Some(Phase::Resync),
+            Stage::FwdBwd | Stage::PrecondRefresh => None,
+        }
+    }
+}
+
+/// One stage instance in a plan: the stage, the earlier stages whose
+/// outputs it consumes, and whether the executor opens its trace scope.
+#[derive(Clone, Debug)]
+pub struct StageSpec {
+    pub stage: Stage,
+    /// Data dependencies; each must appear earlier in the plan.
+    pub after: Vec<Stage>,
+    /// `true` → the executor opens [`Stage::scope_phase`] around the
+    /// hook. `false` for stages whose callee scopes its own time.
+    pub scoped: bool,
+}
+
+/// A declarative per-step schedule, executed in list order.
+#[derive(Clone, Debug)]
+pub struct StepPlan {
+    pub stages: Vec<StageSpec>,
+}
+
+impl StepPlan {
+    /// Single-worker fused step: the train executable runs forward,
+    /// backward, and the optimizer in one backend call.
+    pub fn fused() -> StepPlan {
+        StepPlan {
+            stages: vec![
+                StageSpec { stage: Stage::Data, after: vec![], scoped: true },
+                StageSpec { stage: Stage::FwdBwd, after: vec![Stage::Data], scoped: false },
+            ],
+        }
+    }
+
+    /// Data-parallel step with a serial optimizer: per-rank grads,
+    /// ring all-reduce, leader apply.
+    pub fn data_parallel() -> StepPlan {
+        StepPlan {
+            stages: vec![
+                StageSpec { stage: Stage::Data, after: vec![], scoped: true },
+                StageSpec { stage: Stage::FwdBwd, after: vec![Stage::Data], scoped: false },
+                StageSpec { stage: Stage::GradReduce, after: vec![Stage::FwdBwd], scoped: true },
+                StageSpec { stage: Stage::Apply, after: vec![Stage::GradReduce], scoped: true },
+            ],
+        }
+    }
+
+    /// Sharded (owner-computes) step. `update` adds the exchange on
+    /// refresh steps; `overlap` defers its import past the apply, which
+    /// then depends only on the gradient reduce; `pending_import` lands
+    /// the previous overlapped exchange before this step's refresh.
+    pub fn sharded(update: bool, overlap: bool, pending_import: bool) -> StepPlan {
+        let mut stages = vec![
+            StageSpec { stage: Stage::Data, after: vec![], scoped: true },
+            StageSpec { stage: Stage::FwdBwd, after: vec![Stage::Data], scoped: false },
+            StageSpec { stage: Stage::GradReduce, after: vec![Stage::FwdBwd], scoped: true },
+        ];
+        // the deferred import consumes last step's gather, nothing from
+        // this step — but the refresh must not run before it lands
+        let mut refresh_after = vec![Stage::GradReduce];
+        if pending_import {
+            stages.push(StageSpec { stage: Stage::PrecondImport, after: vec![], scoped: true });
+            refresh_after.push(Stage::PrecondImport);
+        }
+        stages.push(StageSpec {
+            stage: Stage::PrecondRefresh,
+            after: refresh_after,
+            scoped: false,
+        });
+        if update {
+            stages.push(StageSpec {
+                stage: Stage::PrecondExchange,
+                after: vec![Stage::PrecondRefresh],
+                scoped: true,
+            });
+        }
+        let apply_after = if update && !overlap {
+            vec![Stage::GradReduce, Stage::PrecondExchange]
+        } else if update {
+            // overlapped: the apply runs on the pre-refresh (stale)
+            // preconditioners, so the exchange is off its critical path
+            vec![Stage::GradReduce]
+        } else {
+            vec![Stage::GradReduce, Stage::PrecondRefresh]
+        };
+        stages.push(StageSpec { stage: Stage::Apply, after: apply_after, scoped: false });
+        StepPlan { stages }
+    }
+
+    /// A single boundary stage (`Resync`, `Checkpoint`, or `Eval`) run
+    /// through the same executor as the step stages.
+    pub fn boundary(stage: Stage) -> StepPlan {
+        StepPlan { stages: vec![StageSpec { stage, after: vec![], scoped: true }] }
+    }
+
+    /// Structural validation: no duplicate stages, no self-deps, every
+    /// dependency satisfied by an earlier stage.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, spec) in self.stages.iter().enumerate() {
+            if self.stages[..i].iter().any(|s| s.stage == spec.stage) {
+                return Err(format!("stage {} appears twice", spec.stage.name()));
+            }
+            for dep in &spec.after {
+                if *dep == spec.stage {
+                    return Err(format!("stage {} depends on itself", spec.stage.name()));
+                }
+                if !self.stages[..i].iter().any(|s| s.stage == *dep) {
+                    return Err(format!(
+                        "stage {} depends on {}, which does not run before it",
+                        spec.stage.name(),
+                        dep.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The stages on `Apply`'s transitive dependency chain — what a
+    /// real cluster could *not* hide behind compute. Used by tests to
+    /// pin that the overlapped plan takes the exchange off the path.
+    pub fn apply_critical_path(&self) -> Vec<Stage> {
+        let mut on_path = vec![Stage::Apply];
+        // walk the list backwards, pulling in deps of anything on-path
+        for spec in self.stages.iter().rev() {
+            if on_path.contains(&spec.stage) {
+                for dep in &spec.after {
+                    if !on_path.contains(dep) {
+                        on_path.push(*dep);
+                    }
+                }
+            }
+        }
+        self.stages
+            .iter()
+            .map(|s| s.stage)
+            .filter(|s| on_path.contains(s))
+            .collect()
+    }
+}
+
+/// Per-stage callback the drivers implement; any
+/// `FnMut(Stage) -> Result<()>` works.
+pub trait StageHooks {
+    fn on_stage(&mut self, stage: Stage) -> Result<()>;
+}
+
+impl<F> StageHooks for F
+where
+    F: FnMut(Stage) -> Result<()>,
+{
+    fn on_stage(&mut self, stage: Stage) -> Result<()> {
+        self(stage)
+    }
+}
+
+/// Run a plan: validate it, then invoke the hook once per stage in
+/// list order, opening the stage's trace scope where the spec asks for
+/// it. Stops at the first failing stage.
+pub fn execute<H: StageHooks + ?Sized>(plan: &StepPlan, hooks: &mut H) -> Result<()> {
+    plan.validate().map_err(|e| anyhow!("step plan: {e}"))?;
+    for spec in &plan.stages {
+        let _scope = if spec.scoped { spec.stage.scope_phase().map(trace::scope) } else { None };
+        hooks.on_stage(spec.stage)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn names(plan: &StepPlan) -> Vec<&'static str> {
+        plan.stages.iter().map(|s| s.stage.name()).collect()
+    }
+
+    #[test]
+    fn builtin_plans_validate() {
+        for plan in [
+            StepPlan::fused(),
+            StepPlan::data_parallel(),
+            StepPlan::sharded(false, false, false),
+            StepPlan::sharded(true, false, false),
+            StepPlan::sharded(true, true, false),
+            StepPlan::sharded(true, true, true),
+            StepPlan::sharded(false, true, true),
+            StepPlan::boundary(Stage::Resync),
+            StepPlan::boundary(Stage::Checkpoint),
+            StepPlan::boundary(Stage::Eval),
+        ] {
+            assert_eq!(plan.validate(), Ok(()), "plan {:?}", names(&plan));
+        }
+    }
+
+    #[test]
+    fn sharded_plan_shapes() {
+        let sync = StepPlan::sharded(true, false, false);
+        assert_eq!(
+            names(&sync),
+            vec!["data", "fwd_bwd", "grad_reduce", "precond_refresh", "precond_exchange", "apply"]
+        );
+        // skip steps have no exchange
+        let skip = StepPlan::sharded(false, false, false);
+        assert!(!skip.stages.iter().any(|s| s.stage == Stage::PrecondExchange));
+        // a pending import lands before the refresh, and the refresh
+        // declares the dependency
+        let landing = StepPlan::sharded(true, true, true);
+        let import_at = landing
+            .stages
+            .iter()
+            .position(|s| s.stage == Stage::PrecondImport)
+            .unwrap();
+        let refresh_at = landing
+            .stages
+            .iter()
+            .position(|s| s.stage == Stage::PrecondRefresh)
+            .unwrap();
+        assert!(import_at < refresh_at);
+        assert!(landing.stages[refresh_at].after.contains(&Stage::PrecondImport));
+    }
+
+    #[test]
+    fn overlap_takes_exchange_off_the_apply_critical_path() {
+        let sync = StepPlan::sharded(true, false, false);
+        assert!(sync.apply_critical_path().contains(&Stage::PrecondExchange));
+
+        let overlapped = StepPlan::sharded(true, true, false);
+        let path = overlapped.apply_critical_path();
+        assert!(!path.contains(&Stage::PrecondExchange));
+        assert!(!path.contains(&Stage::PrecondRefresh));
+        assert!(path.contains(&Stage::GradReduce));
+        // the exchange still *runs* — it is scheduled, just not awaited
+        // by the apply
+        assert!(overlapped.stages.iter().any(|s| s.stage == Stage::PrecondExchange));
+    }
+
+    #[test]
+    fn validate_rejects_malformed_plans() {
+        let dup = StepPlan {
+            stages: vec![
+                StageSpec { stage: Stage::Data, after: vec![], scoped: true },
+                StageSpec { stage: Stage::Data, after: vec![], scoped: true },
+            ],
+        };
+        assert!(dup.validate().unwrap_err().contains("twice"));
+
+        let self_dep = StepPlan {
+            stages: vec![StageSpec {
+                stage: Stage::Apply,
+                after: vec![Stage::Apply],
+                scoped: false,
+            }],
+        };
+        assert!(self_dep.validate().unwrap_err().contains("itself"));
+
+        let forward_dep = StepPlan {
+            stages: vec![
+                StageSpec { stage: Stage::Apply, after: vec![Stage::GradReduce], scoped: false },
+                StageSpec { stage: Stage::GradReduce, after: vec![], scoped: true },
+            ],
+        };
+        assert!(forward_dep.validate().unwrap_err().contains("does not run before"));
+    }
+
+    #[test]
+    fn executor_runs_stages_in_order_and_stops_on_error() {
+        let plan = StepPlan::sharded(true, false, false);
+        let mut seen: Vec<&'static str> = Vec::new();
+        execute(&plan, &mut |stage: Stage| {
+            seen.push(stage.name());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(
+            seen,
+            vec!["data", "fwd_bwd", "grad_reduce", "precond_refresh", "precond_exchange", "apply"]
+        );
+
+        let mut ran = 0usize;
+        let err = execute(&plan, &mut |stage: Stage| {
+            ran += 1;
+            if stage == Stage::GradReduce {
+                Err(anyhow!("reduce lost"))
+            } else {
+                Ok(())
+            }
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("reduce lost"));
+        assert_eq!(ran, 3, "stages after the failure must not run");
+    }
+
+    #[test]
+    fn executor_rejects_invalid_plan_before_running_hooks() {
+        let bad = StepPlan {
+            stages: vec![StageSpec {
+                stage: Stage::Apply,
+                after: vec![Stage::Data],
+                scoped: false,
+            }],
+        };
+        let mut ran = false;
+        let err = execute(&bad, &mut |_stage: Stage| {
+            ran = true;
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("step plan"));
+        assert!(!ran);
+    }
+}

@@ -23,6 +23,22 @@
 //! apply runs the same per-layer float ops as the serial fused step, so
 //! trajectories are bitwise identical at any worker count.
 //!
+//! ## Step schedule
+//!
+//! Every step runs through the typed schedule in [`sched`](super::sched):
+//! the loop builds a declarative `StepPlan` per step and the executor
+//! drives this trainer's stage hooks in dependency order, opening the
+//! trace scopes the plan asks for. With `--precond-overlap` the sharded
+//! plan defers the preconditioner exchange: owners still refresh at
+//! step `t` and the all-gather still runs, but the gathered import is
+//! parked in a double-buffered slot and lands at the `t + 1` step
+//! boundary, so step `t`'s apply uses one-refresh-stale preconditioners
+//! (async distributed Shampoo style) and the exchange drops off the
+//! apply's critical path — the perf model then charges
+//! `max(gather, fwd + bwd)` instead of their sum. The synchronous
+//! (default) plans run the exact float-op sequence of the pre-schedule
+//! trainer, so trajectories are bitwise unchanged.
+//!
 //! ## Fault tolerance
 //!
 //! With a [`FaultPlan`] configured (`cfg.faults` / `JORGE_FAULTS`), the
@@ -57,6 +73,7 @@ use crate::collectives::{
     ring_all_gather, ring_all_reduce_mean, CollectiveError, CommCostModel, FaultPlan, FaultSession,
 };
 use crate::config::{ShardPolicy, TrainConfig};
+use crate::coordinator::sched::{self, Stage, StepPlan};
 use crate::data::{for_model, Dataset, Sharder};
 use crate::jsonio::Json;
 use crate::metricsio::{CsvWriter, JsonlWriter, Stopwatch, Summary};
@@ -64,7 +81,7 @@ use crate::optim::{self, GuardReport, Hyper, Optimizer, OptimizerKind, Schedule,
 use crate::rngx::Rng;
 use crate::runtime::{Dtype, ExecBackend, ExecStep, HostTensor, Manifest, Role};
 use crate::tensor::{dispatch_counters, Matrix};
-use crate::trace::{self, MetricsReport, Phase};
+use crate::trace::{self, MetricsReport};
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -129,6 +146,12 @@ pub struct ShardReport {
     pub allgather_floats: usize,
     /// A100 cost-model time for that all-gather traffic.
     pub modeled_comm_s: f64,
+    /// Exchanges whose gathered import was deferred to the next step
+    /// boundary (`--precond-overlap`).
+    pub overlap_exchanges: usize,
+    /// Update steps applied with one-refresh-stale preconditioners
+    /// because their exchange was deferred.
+    pub stale_applies: usize,
     /// Layer-steps that fell back to stale preconditioners because
     /// their owner was lost mid-gather.
     pub stale_fallback_layers: usize,
@@ -207,6 +230,16 @@ pub fn assign_owners(costs: &[f64], workers: usize, policy: ShardPolicy) -> Vec<
     owner
 }
 
+/// Deferred-exchange double buffer (`--precond-overlap`): the gathered
+/// preconditioners plus the layer order they were exported in, parked
+/// until the next step boundary. Import goes by explicit layer index,
+/// so a membership change between the gather and the landing cannot
+/// misroute it.
+struct PendingImport {
+    order: Vec<usize>,
+    buf: Vec<f32>,
+}
+
 /// Live sharding bookkeeping (telemetry mirrors [`ShardReport`]).
 struct ShardState {
     owned: Vec<Vec<usize>>,
@@ -217,6 +250,12 @@ struct ShardState {
     stale_fallback_layers: usize,
     reassignments: usize,
     comm: CommCostModel,
+    /// `--precond-overlap`: defer each exchange's import past the apply.
+    overlap: bool,
+    /// The one in-flight deferred import (double buffer, depth 1).
+    pending: Option<PendingImport>,
+    overlap_exchanges: usize,
+    stale_applies: usize,
 }
 
 /// Re-run the FLOPs-balanced assignment over the surviving ranks. The
@@ -242,6 +281,35 @@ fn reassign_owners(
     shard.owned = owned;
     shard.reassignments += 1;
     Ok(())
+}
+
+/// Per-step scratch the data-parallel driver threads through the
+/// sharded stage hooks ([`Trainer::shard_refresh`] fills it,
+/// [`Trainer::shard_exchange`] / [`Trainer::shard_apply`] consume it).
+struct ShardStepCx {
+    update: bool,
+    lr: f64,
+    mats: Vec<Matrix>,
+    gmats: Vec<Matrix>,
+    /// Pre-refresh preconditioner snapshot, keyed by original rank id.
+    stale: Option<Vec<Vec<f32>>>,
+    /// Owner map as of refresh time: the overlap revert targets exactly
+    /// the layers this map says were refreshed, independent of any
+    /// mid-gather reassignment.
+    refresh_owned: Vec<Vec<usize>>,
+}
+
+impl ShardStepCx {
+    fn new(update: bool, lr: f64) -> ShardStepCx {
+        ShardStepCx {
+            update,
+            lr,
+            mats: Vec::new(),
+            gmats: Vec::new(),
+            stale: None,
+            refresh_owned: Vec::new(),
+        }
+    }
 }
 
 impl RunResult {
@@ -322,6 +390,12 @@ impl Trainer {
                  running the serial {} path",
                 kind.serial()
             );
+            if cfg.precond_overlap {
+                eprintln!(
+                    "[trainer] note: --precond-overlap has no preconditioner \
+                     exchange to defer with workers = 1; running synchronously"
+                );
+            }
             kind = kind.serial();
         }
         let has_skip = kind.has_skip();
@@ -391,6 +465,10 @@ impl Trainer {
                     stale_fallback_layers: 0,
                     reassignments: 0,
                     comm: CommCostModel::nvlink_a100(),
+                    overlap: cfg.precond_overlap,
+                    pending: None,
+                    overlap_exchanges: 0,
+                    stale_applies: 0,
                 })
             }
             _ => None,
@@ -459,6 +537,8 @@ impl Trainer {
             allgather_calls: s.allgather_calls,
             allgather_floats: s.allgather_floats,
             modeled_comm_s: s.modeled_comm_s,
+            overlap_exchanges: s.overlap_exchanges,
+            stale_applies: s.stale_applies,
             stale_fallback_layers: s.stale_fallback_layers,
             reassignments: s.reassignments,
             rejoin_events: self.fault.as_ref().map_or(0, |f| f.rejoins()),
@@ -542,47 +622,64 @@ impl Trainer {
         self.global_step % self.cfg.precond_every == 0
     }
 
-    /// One fused train step (single-worker path). Returns (loss, metric).
+    /// One fused train step (single-worker path), driven through
+    /// [`StepPlan::fused`]. Returns (loss, metric).
     fn fused_step(&mut self, indices: &[usize], lr: f64) -> Result<(f64, f64)> {
         let update = self.precond_update_now();
         let step = match (&self.train_skip, update) {
             (Some(skip), false) => skip.clone(),
             _ => self.train_full.clone(),
         };
-        let data_scope = trace::scope(Phase::Data);
-        let (x, y) = self.batch_tensors(step.as_ref(), indices)?;
-        let mut inputs: Vec<HostTensor> =
-            Vec::with_capacity(self.params.len() + self.opt_state.len() + 4);
-        inputs.extend(self.params.iter().cloned());
-        inputs.extend(self.opt_state.iter().cloned());
-        inputs.push(x);
-        inputs.push(y);
-        inputs.push(HostTensor::scalar_f32(lr as f32));
-        inputs.push(HostTensor::scalar_f32(self.cfg.weight_decay as f32));
-        drop(data_scope);
-
-        let mut outputs = step.run(&inputs)?;
-        let metric = outputs
-            .pop()
-            .ok_or_else(|| anyhow!("train step returned no metric output"))?
-            .scalar();
-        let loss = outputs
-            .pop()
-            .ok_or_else(|| anyhow!("train step returned no loss output"))?
-            .scalar();
-        if outputs.len() < self.n_params {
-            return Err(anyhow!("train step output arity mismatch"));
-        }
-        let state = outputs.split_off(self.n_params);
-        self.params = outputs;
-        self.opt_state = state;
-        Ok((loss, metric))
+        let plan = StepPlan::fused();
+        let mut inputs: Vec<HostTensor> = Vec::new();
+        let mut loss_metric = (0.0f64, 0.0f64);
+        sched::execute(&plan, &mut |stage: Stage| -> Result<()> {
+            match stage {
+                Stage::Data => {
+                    let (x, y) = self.batch_tensors(step.as_ref(), indices)?;
+                    inputs = Vec::with_capacity(self.params.len() + self.opt_state.len() + 4);
+                    inputs.extend(self.params.iter().cloned());
+                    inputs.extend(self.opt_state.iter().cloned());
+                    inputs.push(x);
+                    inputs.push(y);
+                    inputs.push(HostTensor::scalar_f32(lr as f32));
+                    inputs.push(HostTensor::scalar_f32(self.cfg.weight_decay as f32));
+                    Ok(())
+                }
+                Stage::FwdBwd => {
+                    // forward, backward, and apply run fused inside the
+                    // executable, which attributes its own phase time
+                    let ins = std::mem::take(&mut inputs);
+                    let mut outputs = step.run(&ins)?;
+                    let metric = outputs
+                        .pop()
+                        .ok_or_else(|| anyhow!("train step returned no metric output"))?
+                        .scalar();
+                    let loss = outputs
+                        .pop()
+                        .ok_or_else(|| anyhow!("train step returned no loss output"))?
+                        .scalar();
+                    if outputs.len() < self.n_params {
+                        return Err(anyhow!("train step output arity mismatch"));
+                    }
+                    let state = outputs.split_off(self.n_params);
+                    self.params = outputs;
+                    self.opt_state = state;
+                    loss_metric = (loss, metric);
+                    Ok(())
+                }
+                other => Err(anyhow!("unexpected stage {} in fused plan", other.name())),
+            }
+        })?;
+        Ok(loss_metric)
     }
 
     /// One data-parallel step: grads on every live worker, ring
-    /// all-reduce, leader applies the optimizer. A rank lost during the
-    /// reduce is shed and the survivors retry; the step's loss averages
-    /// over the ranks whose gradients made it into the reduce.
+    /// all-reduce, leader applies the optimizer — driven through
+    /// [`StepPlan::data_parallel`] or [`StepPlan::sharded`]. A rank
+    /// lost during the reduce is shed and the survivors retry; the
+    /// step's loss averages over the ranks whose gradients made it into
+    /// the reduce.
     fn data_parallel_step(&mut self, worker_indices: &[Vec<usize>], lr: f64) -> Result<(f64, f64)> {
         let live: Vec<usize> = match &self.fault {
             Some(f) => f.live_ranks(),
@@ -591,154 +688,222 @@ impl Trainer {
         if live.is_empty() {
             return Err(anyhow!("no live workers remain"));
         }
-        let grad_step = self.grad.clone();
-        let data_scope = trace::scope(Phase::Data);
-        let mut batches = Vec::with_capacity(live.len());
-        for &r in &live {
-            batches.push(self.batch_tensors(grad_step.as_ref(), &worker_indices[r])?);
-        }
-        drop(data_scope);
-        let params = &self.params;
-
-        // fan out gradient computation over the live ranks
-        let results: Vec<Result<(Vec<HostTensor>, f64, f64)>> = std::thread::scope(|s| {
-            let handles: Vec<_> = batches
-                .into_iter()
-                .map(|(x, y)| {
-                    let grad_step = grad_step.clone();
-                    s.spawn(move || -> Result<(Vec<HostTensor>, f64, f64)> {
-                        let mut inputs: Vec<HostTensor> = params.to_vec();
-                        inputs.push(x);
-                        inputs.push(y);
-                        let mut out = grad_step.run(&inputs)?;
-                        let metric = out
-                            .pop()
-                            .ok_or_else(|| anyhow!("grad step returned no metric output"))?
-                            .scalar();
-                        let loss = out
-                            .pop()
-                            .ok_or_else(|| anyhow!("grad step returned no loss output"))?
-                            .scalar();
-                        Ok((out, loss, metric))
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("gradient worker panicked"))))
-                .collect()
-        });
-
-        let mut grads_per_worker: Vec<Vec<HostTensor>> = Vec::with_capacity(live.len());
-        let mut losses: Vec<f64> = Vec::with_capacity(live.len());
-        let mut metrics: Vec<f64> = Vec::with_capacity(live.len());
-        for r in results {
-            let (g, l, m) = r?;
-            grads_per_worker.push(g);
-            losses.push(l);
-            metrics.push(m);
-        }
-
-        // bucket-flatten each live worker's grads
-        let reduce_scope = trace::scope(Phase::GradReduce);
-        let mut buffers: Vec<Vec<f32>> = Vec::with_capacity(grads_per_worker.len());
-        for gs in &grads_per_worker {
-            let mut flat = Vec::new();
-            for g in gs {
-                flat.extend_from_slice(
-                    g.as_f32().ok_or_else(|| anyhow!("non-f32 gradient tensor"))?,
-                );
-            }
-            buffers.push(flat);
-        }
-
-        // ring-all-reduce the mean, shedding ranks the fault session
-        // kills mid-collective
-        let mut ranks = live;
-        match &mut self.fault {
-            None => ring_all_reduce_mean(&mut buffers)?,
-            Some(fault) => loop {
-                match fault.all_reduce_mean(self.global_step, &mut buffers, &ranks) {
-                    Ok(()) => break,
-                    Err(
-                        CollectiveError::WorkerDropped { rank, .. }
-                        | CollectiveError::Timeout { rank, .. },
-                    ) => {
-                        let Some(slot) = ranks.iter().position(|&r| r == rank) else {
-                            return Err(anyhow!("fault session dropped unknown rank {rank}"));
-                        };
-                        eprintln!(
-                            "[faults] step {}: rank {rank} lost during gradient reduce; \
-                             continuing with {} survivor(s)",
-                            self.global_step,
-                            ranks.len() - 1
-                        );
-                        ranks.remove(slot);
-                        buffers.remove(slot);
-                        grads_per_worker.remove(slot);
-                        losses.remove(slot);
-                        metrics.remove(slot);
-                        if ranks.is_empty() {
-                            return Err(anyhow!(
-                                "every worker was lost during the gradient reduce"
-                            ));
-                        }
-                    }
-                    Err(e) => return Err(e.into()),
-                }
-            },
-        }
-
-        // unflatten the first survivor's reduced buffer into grad tensors
-        let (first_grads, first_buf) = match (grads_per_worker.first(), buffers.first()) {
-            (Some(g), Some(b)) => (g, b),
-            _ => return Err(anyhow!("no gradients survived the reduce")),
+        let update = self.precond_update_now();
+        let plan = match &self.shard {
+            Some(sh) => StepPlan::sharded(update, sh.overlap, sh.pending.is_some()),
+            None => StepPlan::data_parallel(),
         };
-        let mut reduced: Vec<HostTensor> = Vec::with_capacity(self.n_params);
-        let mut off = 0usize;
-        for g in first_grads {
-            let n = g.len();
-            reduced.push(HostTensor::from_f32(
-                g.shape().to_vec(),
-                first_buf[off..off + n].to_vec(),
-            ));
-            off += n;
-        }
-        drop(reduce_scope);
+        let grad_step = self.grad.clone();
 
-        if self.shard.is_some() {
-            self.sharded_apply(reduced, lr)?;
-        } else {
-            self.apply_reduced(reduced, lr)?;
-        }
+        // per-step scratch threaded between the stage hooks
+        let mut batches: Vec<(HostTensor, HostTensor)> = Vec::new();
+        let mut grads_per_worker: Vec<Vec<HostTensor>> = Vec::new();
+        let mut losses: Vec<f64> = Vec::new();
+        let mut metrics: Vec<f64> = Vec::new();
+        let mut reduced: Option<Vec<HostTensor>> = None;
+        let mut cx = ShardStepCx::new(update, lr);
+
+        sched::execute(&plan, &mut |stage: Stage| -> Result<()> {
+            match stage {
+                Stage::Data => {
+                    batches.reserve(live.len());
+                    for &r in &live {
+                        batches
+                            .push(self.batch_tensors(grad_step.as_ref(), &worker_indices[r])?);
+                    }
+                    Ok(())
+                }
+                Stage::FwdBwd => {
+                    let params = &self.params;
+                    // fan out gradient computation over the live ranks;
+                    // forward/backward time is attributed inside the
+                    // executable
+                    let results: Vec<Result<(Vec<HostTensor>, f64, f64)>> =
+                        std::thread::scope(|s| {
+                            let handles: Vec<_> = std::mem::take(&mut batches)
+                                .into_iter()
+                                .map(|(x, y)| {
+                                    let grad_step = grad_step.clone();
+                                    s.spawn(move || -> Result<(Vec<HostTensor>, f64, f64)> {
+                                        let mut inputs: Vec<HostTensor> = params.to_vec();
+                                        inputs.push(x);
+                                        inputs.push(y);
+                                        let mut out = grad_step.run(&inputs)?;
+                                        let metric = out
+                                            .pop()
+                                            .ok_or_else(|| {
+                                                anyhow!("grad step returned no metric output")
+                                            })?
+                                            .scalar();
+                                        let loss = out
+                                            .pop()
+                                            .ok_or_else(|| {
+                                                anyhow!("grad step returned no loss output")
+                                            })?
+                                            .scalar();
+                                        Ok((out, loss, metric))
+                                    })
+                                })
+                                .collect();
+                            handles
+                                .into_iter()
+                                .map(|h| {
+                                    h.join().unwrap_or_else(|_| {
+                                        Err(anyhow!("gradient worker panicked"))
+                                    })
+                                })
+                                .collect()
+                        });
+                    for r in results {
+                        let (g, l, m) = r?;
+                        grads_per_worker.push(g);
+                        losses.push(l);
+                        metrics.push(m);
+                    }
+                    Ok(())
+                }
+                Stage::GradReduce => {
+                    // bucket-flatten each live worker's grads
+                    let mut buffers: Vec<Vec<f32>> = Vec::with_capacity(grads_per_worker.len());
+                    for gs in &grads_per_worker {
+                        let mut flat = Vec::new();
+                        for g in gs {
+                            flat.extend_from_slice(
+                                g.as_f32().ok_or_else(|| anyhow!("non-f32 gradient tensor"))?,
+                            );
+                        }
+                        buffers.push(flat);
+                    }
+
+                    // ring-all-reduce the mean, shedding ranks the fault
+                    // session kills mid-collective
+                    let mut ranks = live.clone();
+                    match &mut self.fault {
+                        None => ring_all_reduce_mean(&mut buffers)?,
+                        Some(fault) => loop {
+                            match fault.all_reduce_mean(self.global_step, &mut buffers, &ranks) {
+                                Ok(()) => break,
+                                Err(
+                                    CollectiveError::WorkerDropped { rank, .. }
+                                    | CollectiveError::Timeout { rank, .. },
+                                ) => {
+                                    let Some(slot) = ranks.iter().position(|&r| r == rank)
+                                    else {
+                                        return Err(anyhow!(
+                                            "fault session dropped unknown rank {rank}"
+                                        ));
+                                    };
+                                    eprintln!(
+                                        "[faults] step {}: rank {rank} lost during gradient \
+                                         reduce; continuing with {} survivor(s)",
+                                        self.global_step,
+                                        ranks.len() - 1
+                                    );
+                                    ranks.remove(slot);
+                                    buffers.remove(slot);
+                                    grads_per_worker.remove(slot);
+                                    losses.remove(slot);
+                                    metrics.remove(slot);
+                                    if ranks.is_empty() {
+                                        return Err(anyhow!(
+                                            "every worker was lost during the gradient reduce"
+                                        ));
+                                    }
+                                }
+                                Err(e) => return Err(e.into()),
+                            }
+                        },
+                    }
+
+                    // unflatten the first survivor's reduced buffer into
+                    // grad tensors
+                    let (first_grads, first_buf) =
+                        match (grads_per_worker.first(), buffers.first()) {
+                            (Some(g), Some(b)) => (g, b),
+                            _ => return Err(anyhow!("no gradients survived the reduce")),
+                        };
+                    let mut red: Vec<HostTensor> = Vec::with_capacity(self.n_params);
+                    let mut off = 0usize;
+                    for g in first_grads {
+                        let n = g.len();
+                        red.push(HostTensor::from_f32(
+                            g.shape().to_vec(),
+                            first_buf[off..off + n].to_vec(),
+                        ));
+                        off += n;
+                    }
+                    reduced = Some(red);
+                    Ok(())
+                }
+                Stage::PrecondImport => self.shard_import_pending(),
+                Stage::PrecondRefresh => {
+                    let grads = reduced
+                        .as_deref()
+                        .ok_or_else(|| anyhow!("preconditioner refresh before gradient reduce"))?;
+                    self.shard_refresh(&mut cx, grads)
+                }
+                Stage::PrecondExchange => self.shard_exchange(&mut cx),
+                Stage::Apply => {
+                    if self.shard.is_some() {
+                        self.shard_apply(&mut cx)
+                    } else {
+                        let grads = reduced
+                            .take()
+                            .ok_or_else(|| anyhow!("apply before gradient reduce"))?;
+                        self.apply_reduced(grads, lr)
+                    }
+                }
+                other => {
+                    Err(anyhow!("unexpected stage {} in data-parallel plan", other.name()))
+                }
+            }
+        })?;
+
         let n = losses.len() as f64;
         Ok((losses.iter().sum::<f64>() / n, metrics.iter().sum::<f64>() / n))
     }
 
-    /// Sharded optimizer application (owner-computes): every worker
-    /// refreshes only the layers it owns, the refreshed preconditioners
-    /// travel a real ring all-gather, then the update is applied with
-    /// the gathered state. The per-layer float ops equal the serial
-    /// fused step's exactly, so the trajectory is bitwise identical.
-    ///
-    /// Under fault injection, an owner lost mid-gather degrades
-    /// gracefully: its layers keep the stale pre-refresh preconditioners
-    /// for this step, the assignment is re-balanced over the survivors,
-    /// and the gather retries.
-    fn sharded_apply(&mut self, grads: Vec<HostTensor>, lr: f64) -> Result<()> {
-        let update = self.precond_update_now();
-        let wd = self.cfg.weight_decay as f32;
-        let policy = self.cfg.shard_policy;
-        let step = self.global_step;
+    /// Land the previous step's deferred preconditioner import — the
+    /// `--precond-overlap` double buffer — before any of this step's
+    /// refresh work. Import goes by the layer order captured when the
+    /// buffer was exported, so it is sound across membership changes.
+    fn shard_import_pending(&mut self) -> Result<()> {
         let Some(native) = self.native_opt.as_mut() else {
             return Err(anyhow!("sharded mode requires the native optimizer mirror"));
         };
         let Some(shard) = self.shard.as_mut() else {
-            return Err(anyhow!("sharded_apply called without shard state"));
+            return Err(anyhow!("shard_import_pending called without shard state"));
+        };
+        let Some(p) = shard.pending.take() else {
+            return Ok(());
+        };
+        let used = native.import_preconditioners(&p.order, &p.buf);
+        if used != p.buf.len() {
+            return Err(anyhow!(
+                "deferred preconditioner import payload mismatch: used {used} of {} floats",
+                p.buf.len()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Owner-computes refresh over the reduced gradients. Re-balances
+    /// the owner map if membership shrank during the gradient reduce,
+    /// snapshots the pre-refresh preconditioners where a later stage
+    /// needs them (mid-gather fault revert, overlap staleness), then
+    /// refreshes each live owner's layers. Shampoo also advances its
+    /// stat EMAs here on skip steps, so this stage runs every step.
+    fn shard_refresh(&mut self, cx: &mut ShardStepCx, grads: &[HostTensor]) -> Result<()> {
+        let policy = self.cfg.shard_policy;
+        let Some(native) = self.native_opt.as_mut() else {
+            return Err(anyhow!("sharded mode requires the native optimizer mirror"));
+        };
+        let Some(shard) = self.shard.as_mut() else {
+            return Err(anyhow!("shard_refresh called without shard state"));
         };
 
-        let mut mats = to_matrices(&self.params)?;
-        let gmats = to_matrices(&grads)?;
+        cx.mats = to_matrices(&self.params)?;
+        cx.gmats = to_matrices(grads)?;
 
         // membership may have shrunk during the gradient reduce:
         // re-balance the owner map over the survivors before any refresh
@@ -754,70 +919,100 @@ impl Trainer {
             }
         }
 
-        // pre-refresh snapshot: if an owner dies mid-gather its layers
-        // fall back to these stale preconditioners for this step
-        let stale: Option<Vec<Vec<f32>>> = if update && self.fault.is_some() {
+        // pre-refresh snapshot: an owner lost mid-gather falls back to
+        // these stale preconditioners for this step, and the overlapped
+        // exchange reverts to them so its apply is one refresh stale
+        cx.stale = if cx.update && (self.fault.is_some() || shard.overlap) {
             Some(shard.owned.iter().map(|ls| native.export_preconditioners(ls)).collect())
         } else {
             None
         };
+        if cx.update && shard.overlap {
+            cx.refresh_owned = shard.owned.clone();
+        }
 
-        // owner-computes refresh; Shampoo also advances its stat EMAs
-        // here on skip steps, so this runs every step
         for w in 0..shard.owned.len() {
             if self.fault.as_ref().is_some_and(|f| !f.is_alive(w)) {
                 continue;
             }
-            native.refresh_layers(&shard.owned[w], &gmats, update);
-            if update {
+            native.refresh_layers(&shard.owned[w], &cx.gmats, cx.update);
+            if cx.update {
                 shard.refresh_layer_events[w] += shard.owned[w].len();
             }
         }
+        Ok(())
+    }
 
-        if update {
-            let gather_scope = trace::scope(Phase::PrecondGather);
-            match self.fault.as_mut() {
-                None => {
-                    // fault-free path: float-for-float the serial step
-                    let chunks: Vec<Vec<f32>> =
-                        shard.owned.iter().map(|ls| native.export_preconditioners(ls)).collect();
-                    let chunk_bytes: Vec<usize> = chunks.iter().map(|c| 4 * c.len()).collect();
-                    let gathered = ring_all_gather(&chunks)?;
-                    shard.allgather_calls += 1;
-                    shard.allgather_floats += gathered.last().map_or(0, |b| b.len());
-                    shard.modeled_comm_s += shard.comm.all_gather_ragged_time(&chunk_bytes);
-                    // continue from the last rank's assembled buffer, so
-                    // the state the run depends on has genuinely been
-                    // around the ring
-                    if let Some(buf) = gathered.last() {
-                        let order: Vec<usize> = shard.owned.concat();
+    /// Export the refreshed preconditioners and run the ring
+    /// all-gather. On the synchronous path the gathered buffer is
+    /// imported immediately — float-for-float the serial step. Under
+    /// `--precond-overlap` it is parked in the pending slot for the
+    /// next step boundary and the mirror reverts to the pre-refresh
+    /// snapshot, so this step's apply is one refresh stale.
+    ///
+    /// Under fault injection, an owner lost mid-gather degrades
+    /// gracefully: its layers keep the stale pre-refresh
+    /// preconditioners, the assignment is re-balanced over the
+    /// survivors, and the gather retries.
+    fn shard_exchange(&mut self, cx: &mut ShardStepCx) -> Result<()> {
+        let step = self.global_step;
+        let policy = self.cfg.shard_policy;
+        let Some(native) = self.native_opt.as_mut() else {
+            return Err(anyhow!("sharded mode requires the native optimizer mirror"));
+        };
+        let Some(shard) = self.shard.as_mut() else {
+            return Err(anyhow!("shard_exchange called without shard state"));
+        };
+        match self.fault.as_mut() {
+            None => {
+                // fault-free path: float-for-float the serial step
+                let chunks: Vec<Vec<f32>> =
+                    shard.owned.iter().map(|ls| native.export_preconditioners(ls)).collect();
+                let chunk_bytes: Vec<usize> = chunks.iter().map(|c| 4 * c.len()).collect();
+                let gathered = ring_all_gather(&chunks)?;
+                shard.allgather_calls += 1;
+                shard.allgather_floats += gathered.last().map_or(0, |b| b.len());
+                shard.modeled_comm_s += shard.comm.all_gather_ragged_time(&chunk_bytes);
+                // continue from the last rank's assembled buffer, so
+                // the state the run depends on has genuinely been
+                // around the ring
+                if let Some(buf) = gathered.last() {
+                    let order: Vec<usize> = shard.owned.concat();
+                    if shard.overlap {
+                        shard.pending = Some(PendingImport { order, buf: buf.clone() });
+                    } else {
                         let used = native.import_preconditioners(&order, buf);
                         debug_assert_eq!(used, buf.len(), "all-gather payload mismatch");
                     }
                 }
-                Some(fault) => {
-                    // the gather runs over the owner map as it stood when
-                    // the chunks were exported; a mid-gather reassignment
-                    // only affects future steps, so capture the
-                    // participants' layer lists up front
-                    let mut participants: Vec<usize> = fault.live_ranks();
-                    let mut gather_owned: Vec<Vec<usize>> =
-                        participants.iter().map(|&r| shard.owned[r].clone()).collect();
-                    let mut chunks: Vec<Vec<f32>> = gather_owned
-                        .iter()
-                        .map(|ls| native.export_preconditioners(ls))
-                        .collect();
-                    loop {
-                        match fault.all_gather(step, &mut chunks, &participants) {
-                            Ok(gathered) => {
-                                let chunk_bytes: Vec<usize> =
-                                    chunks.iter().map(|c| 4 * c.len()).collect();
-                                shard.allgather_calls += 1;
-                                shard.allgather_floats += gathered.last().map_or(0, |b| b.len());
-                                shard.modeled_comm_s +=
-                                    shard.comm.all_gather_ragged_time(&chunk_bytes);
-                                if let Some(buf) = gathered.last() {
-                                    let order: Vec<usize> = gather_owned.concat();
+            }
+            Some(fault) => {
+                // the gather runs over the owner map as it stood when
+                // the chunks were exported; a mid-gather reassignment
+                // only affects future steps, so capture the
+                // participants' layer lists up front
+                let mut participants: Vec<usize> = fault.live_ranks();
+                let mut gather_owned: Vec<Vec<usize>> =
+                    participants.iter().map(|&r| shard.owned[r].clone()).collect();
+                let mut chunks: Vec<Vec<f32>> = gather_owned
+                    .iter()
+                    .map(|ls| native.export_preconditioners(ls))
+                    .collect();
+                loop {
+                    match fault.all_gather(step, &mut chunks, &participants) {
+                        Ok(gathered) => {
+                            let chunk_bytes: Vec<usize> =
+                                chunks.iter().map(|c| 4 * c.len()).collect();
+                            shard.allgather_calls += 1;
+                            shard.allgather_floats += gathered.last().map_or(0, |b| b.len());
+                            shard.modeled_comm_s +=
+                                shard.comm.all_gather_ragged_time(&chunk_bytes);
+                            if let Some(buf) = gathered.last() {
+                                let order: Vec<usize> = gather_owned.concat();
+                                if shard.overlap {
+                                    shard.pending =
+                                        Some(PendingImport { order, buf: buf.clone() });
+                                } else {
                                     let used = native.import_preconditioners(&order, buf);
                                     if used != buf.len() {
                                         return Err(anyhow!(
@@ -827,59 +1022,84 @@ impl Trainer {
                                         ));
                                     }
                                 }
-                                break;
                             }
-                            Err(
-                                CollectiveError::WorkerDropped { rank, .. }
-                                | CollectiveError::Timeout { rank, .. },
-                            ) => {
-                                let Some(slot) = participants.iter().position(|&r| r == rank)
-                                else {
-                                    return Err(anyhow!(
-                                        "fault session dropped unknown rank {rank}"
-                                    ));
-                                };
-                                // the dead owner's refreshed preconditioners
-                                // never made it around the ring: revert its
-                                // layers to the stale snapshot for this step
-                                if let (Some(st), Some(ls)) =
-                                    (stale.as_ref(), gather_owned.get(slot))
-                                {
-                                    native.import_preconditioners(ls, &st[rank]);
-                                    shard.stale_fallback_layers += ls.len();
-                                    eprintln!(
-                                        "[faults] step {step}: owner rank {rank} lost during \
-                                         preconditioner all-gather; {} layer(s) keep stale \
-                                         preconditioners this step",
-                                        ls.len()
-                                    );
-                                }
-                                participants.remove(slot);
-                                gather_owned.remove(slot);
-                                chunks.remove(slot);
-                                if participants.is_empty() {
-                                    return Err(anyhow!(
-                                        "every worker was lost during the preconditioner \
-                                         all-gather"
-                                    ));
-                                }
-                                // re-balance future refreshes over survivors
-                                reassign_owners(shard, &**native, &participants, policy)?;
-                            }
-                            Err(e) => return Err(e.into()),
+                            break;
                         }
+                        Err(
+                            CollectiveError::WorkerDropped { rank, .. }
+                            | CollectiveError::Timeout { rank, .. },
+                        ) => {
+                            let Some(slot) = participants.iter().position(|&r| r == rank)
+                            else {
+                                return Err(anyhow!(
+                                    "fault session dropped unknown rank {rank}"
+                                ));
+                            };
+                            // the dead owner's refreshed preconditioners
+                            // never made it around the ring: revert its
+                            // layers to the stale snapshot for this step
+                            if let (Some(st), Some(ls)) =
+                                (cx.stale.as_ref(), gather_owned.get(slot))
+                            {
+                                native.import_preconditioners(ls, &st[rank]);
+                                shard.stale_fallback_layers += ls.len();
+                                eprintln!(
+                                    "[faults] step {step}: owner rank {rank} lost during \
+                                     preconditioner all-gather; {} layer(s) keep stale \
+                                     preconditioners this step",
+                                    ls.len()
+                                );
+                            }
+                            participants.remove(slot);
+                            gather_owned.remove(slot);
+                            chunks.remove(slot);
+                            if participants.is_empty() {
+                                return Err(anyhow!(
+                                    "every worker was lost during the preconditioner \
+                                     all-gather"
+                                ));
+                            }
+                            // re-balance future refreshes over survivors
+                            reassign_owners(shard, &**native, &participants, policy)?;
+                        }
+                        Err(e) => return Err(e.into()),
                     }
                 }
             }
-            drop(gather_scope);
         }
+        if shard.overlap {
+            // the apply this step runs on the pre-refresh
+            // preconditioners: revert the refreshed layers now; the
+            // gathered copy lands from the pending slot at the next
+            // step boundary
+            let stale = cx
+                .stale
+                .as_ref()
+                .ok_or_else(|| anyhow!("overlapped exchange without a stale snapshot"))?;
+            for (w, ls) in cx.refresh_owned.iter().enumerate() {
+                native.import_preconditioners(ls, &stale[w]);
+            }
+            shard.overlap_exchanges += 1;
+            shard.stale_applies += 1;
+        }
+        Ok(())
+    }
 
+    /// Apply the update with the current preconditioners — freshly
+    /// gathered on the synchronous path, one refresh stale under
+    /// `--precond-overlap`. The native mirror attributes its own Apply
+    /// phase time.
+    fn shard_apply(&mut self, cx: &mut ShardStepCx) -> Result<()> {
+        let wd = self.cfg.weight_decay as f32;
+        let Some(native) = self.native_opt.as_mut() else {
+            return Err(anyhow!("sharded mode requires the native optimizer mirror"));
+        };
         native.apply_update(
-            &mut mats,
-            &gmats,
-            StepCtx { lr: lr as f32, weight_decay: wd, update_precond: false },
+            &mut cx.mats,
+            &cx.gmats,
+            StepCtx { lr: cx.lr as f32, weight_decay: wd, update_precond: false },
         );
-        for (p, m) in self.params.iter_mut().zip(mats) {
+        for (p, m) in self.params.iter_mut().zip(cx.mats.drain(..)) {
             if let Some(buf) = p.as_f32_mut() {
                 *buf = m.data;
             }
@@ -887,12 +1107,13 @@ impl Trainer {
         Ok(())
     }
 
+    /// Serial-optimizer apply for the data-parallel path; the plan
+    /// executor owns the Apply trace scope.
     fn apply_reduced(&mut self, grads: Vec<HostTensor>, lr: f64) -> Result<()> {
         let update = self.precond_update_now();
         if let Some(native) = &mut self.native_opt {
             // native mirror path: the fused step() runs refresh + apply
             // back to back, so its whole cost is attributed to Apply
-            let _apply_scope = trace::scope(Phase::Apply);
             let mut mats = to_matrices(&self.params)?;
             let gmats = to_matrices(&grads)?;
             native.step(
@@ -915,7 +1136,6 @@ impl Trainer {
             (Some(skip), false) => skip.clone(),
             _ => self.apply_full.clone(),
         };
-        let _apply_scope = trace::scope(Phase::Apply);
         let mut inputs: Vec<HostTensor> =
             Vec::with_capacity(2 * self.n_params + self.opt_state.len() + 2);
         inputs.extend(self.params.iter().cloned());
@@ -943,33 +1163,37 @@ impl Trainer {
     /// leader). The leader's f64 values stay authoritative either way, so
     /// eval numerics are bitwise independent of the fault plan.
     pub fn evaluate(&mut self) -> Result<(f64, f64)> {
-        let _eval_scope = trace::scope(Phase::Eval);
-        let meta = self
-            .engine
-            .manifest()
-            .models
-            .get(&self.cfg.model)
-            .ok_or_else(|| anyhow!("model {} not in manifest", self.cfg.model))?;
-        let eb = meta.eval_batch;
-        let mut loss = Summary::new();
-        let mut metric = Summary::new();
-        for k in 0..EVAL_BATCHES {
-            let base = self.cfg.dataset_size + k * eb;
-            let indices: Vec<usize> = (base..base + eb).collect();
-            let (x, y) = self.batch_tensors(self.eval.as_ref(), &indices)?;
-            let mut inputs: Vec<HostTensor> = self.params.to_vec();
-            inputs.push(x);
-            inputs.push(y);
-            let out = self.eval.run(&inputs)?;
-            if out.len() < 2 {
-                return Err(anyhow!("eval step returned {} outputs, need 2", out.len()));
+        let mut result = (0.0f64, 0.0f64);
+        sched::execute(&StepPlan::boundary(Stage::Eval), &mut |_stage: Stage| -> Result<()> {
+            let meta = self
+                .engine
+                .manifest()
+                .models
+                .get(&self.cfg.model)
+                .ok_or_else(|| anyhow!("model {} not in manifest", self.cfg.model))?;
+            let eb = meta.eval_batch;
+            let mut loss = Summary::new();
+            let mut metric = Summary::new();
+            for k in 0..EVAL_BATCHES {
+                let base = self.cfg.dataset_size + k * eb;
+                let indices: Vec<usize> = (base..base + eb).collect();
+                let (x, y) = self.batch_tensors(self.eval.as_ref(), &indices)?;
+                let mut inputs: Vec<HostTensor> = self.params.to_vec();
+                inputs.push(x);
+                inputs.push(y);
+                let out = self.eval.run(&inputs)?;
+                if out.len() < 2 {
+                    return Err(anyhow!("eval step returned {} outputs, need 2", out.len()));
+                }
+                loss.add(out[0].scalar());
+                metric.add(out[1].scalar());
             }
-            loss.add(out[0].scalar());
-            metric.add(out[1].scalar());
-        }
-        let (loss, metric) = (loss.mean(), metric.mean());
-        self.broadcast_eval_result(loss, metric)?;
-        Ok((loss, metric))
+            let (loss, metric) = (loss.mean(), metric.mean());
+            self.broadcast_eval_result(loss, metric)?;
+            result = (loss, metric);
+            Ok(())
+        })?;
+        Ok(result)
     }
 
     /// Distribute the leader's eval result to the live ranks through the
@@ -1029,58 +1253,62 @@ impl Trainer {
         if rejoined.is_empty() {
             return Ok(());
         }
-        let _resync_scope = trace::scope(Phase::Resync);
-        let named = self.state_tensors();
-        let refs: Vec<(String, &HostTensor)> =
-            named.iter().map(|(n, t)| (n.clone(), t)).collect();
-        let blob = super::checkpoint::encode_blob(&refs);
-        let comm = self.shard.as_ref().map(|s| s.comm).unwrap_or_else(CommCostModel::nvlink_a100);
-        // the barrier world is the *restored* membership: take_rejoins
-        // already flipped the readmitted ranks back to alive
-        let live: Vec<usize> = match &self.fault {
-            Some(f) => f.live_ranks(),
-            None => Vec::new(),
-        };
-        // leader = lowest rank that was live before the barrier (it
-        // carries authoritative state; a rank cannot resync from itself)
-        let root = live
-            .iter()
-            .copied()
-            .find(|r| !rejoined.contains(r))
-            .ok_or_else(|| anyhow!("rejoin barrier: no surviving leader to resync from"))?;
-        let (received, resync_s) = {
-            let Some(fault) = self.fault.as_mut() else { return Ok(()) };
-            let before = fault.modeled_resync_s();
-            let mut received: Option<Vec<u8>> = None;
-            for &r in &rejoined {
-                let bytes = fault.resync_broadcast(&blob, &live, root, r, &comm)?;
-                eprintln!(
-                    "[faults] step {step}: rank {r} rejoined; resynced {} bytes from \
-                     leader rank {root}",
-                    blob.len()
-                );
-                received = Some(bytes);
+        sched::execute(&StepPlan::boundary(Stage::Resync), &mut |_stage: Stage| -> Result<()> {
+            let named = self.state_tensors();
+            let refs: Vec<(String, &HostTensor)> =
+                named.iter().map(|(n, t)| (n.clone(), t)).collect();
+            let blob = super::checkpoint::encode_blob(&refs);
+            let comm =
+                self.shard.as_ref().map(|s| s.comm).unwrap_or_else(CommCostModel::nvlink_a100);
+            // the barrier world is the *restored* membership: take_rejoins
+            // already flipped the readmitted ranks back to alive
+            let live: Vec<usize> = match &self.fault {
+                Some(f) => f.live_ranks(),
+                None => Vec::new(),
+            };
+            // leader = lowest rank that was live before the barrier (it
+            // carries authoritative state; a rank cannot resync from itself)
+            let root = live
+                .iter()
+                .copied()
+                .find(|r| !rejoined.contains(r))
+                .ok_or_else(|| anyhow!("rejoin barrier: no surviving leader to resync from"))?;
+            let (received, resync_s) = {
+                let Some(fault) = self.fault.as_mut() else { return Ok(()) };
+                let before = fault.modeled_resync_s();
+                let mut received: Option<Vec<u8>> = None;
+                for &r in &rejoined {
+                    let bytes = fault.resync_broadcast(&blob, &live, root, r, &comm)?;
+                    eprintln!(
+                        "[faults] step {step}: rank {r} rejoined; resynced {} bytes from \
+                         leader rank {root}",
+                        blob.len()
+                    );
+                    received = Some(bytes);
+                }
+                (received, fault.modeled_resync_s() - before)
+            };
+            // restore the received copy through the shared resume codepath,
+            // exercising the full serialize -> broadcast -> deserialize
+            // contract the rejoining worker would run
+            if let Some(bytes) = received {
+                let tensors = super::checkpoint::decode_blob(&bytes)
+                    .map_err(|e| anyhow!("rejoin resync decode: {e}"))?;
+                self.apply_checkpoint(tensors)?;
             }
-            (received, fault.modeled_resync_s() - before)
-        };
-        // restore the received copy through the shared resume codepath,
-        // exercising the full serialize -> broadcast -> deserialize
-        // contract the rejoining worker would run
-        if let Some(bytes) = received {
-            let tensors = super::checkpoint::decode_blob(&bytes)
-                .map_err(|e| anyhow!("rejoin resync decode: {e}"))?;
-            self.apply_checkpoint(tensors)?;
-        }
-        // fold the readmitted ranks back into owner-computes refresh;
-        // with full membership restored the deterministic LPT reproduces
-        // the original assignment, and the resync traffic is charged to
-        // the modeled step like any other collective
-        let policy = self.cfg.shard_policy;
-        if let (Some(native), Some(shard)) = (self.native_opt.as_deref(), self.shard.as_mut()) {
-            reassign_owners(shard, native, &live, policy)?;
-            shard.modeled_comm_s += resync_s;
-        }
-        Ok(())
+            // fold the readmitted ranks back into owner-computes refresh;
+            // with full membership restored the deterministic LPT reproduces
+            // the original assignment, and the resync traffic is charged to
+            // the modeled step like any other collective
+            let policy = self.cfg.shard_policy;
+            if let (Some(native), Some(shard)) =
+                (self.native_opt.as_deref(), self.shard.as_mut())
+            {
+                reassign_owners(shard, native, &live, policy)?;
+                shard.modeled_comm_s += resync_s;
+            }
+            Ok(())
+        })
     }
 
     /// Apply `cfg.resume`: `""` starts fresh, `"auto"` restores the
@@ -1232,12 +1460,13 @@ impl Trainer {
                 if self.cfg.checkpoint_every > 0
                     && self.global_step % self.cfg.checkpoint_every == 0
                 {
-                    let ckpt_scope = trace::scope(Phase::Checkpoint);
-                    let path = super::checkpoint::step_path(&ckpt_dir, self.global_step)
-                        .to_string_lossy()
-                        .to_string();
-                    self.save_checkpoint(&path)?;
-                    drop(ckpt_scope);
+                    let plan = StepPlan::boundary(Stage::Checkpoint);
+                    sched::execute(&plan, &mut |_stage: Stage| -> Result<()> {
+                        let path = super::checkpoint::step_path(&ckpt_dir, self.global_step)
+                            .to_string_lossy()
+                            .to_string();
+                        self.save_checkpoint(&path)
+                    })?;
                 }
                 if let Some(rows) = trace::flush_step() {
                     if let Some(w) = &mut trace_log {
@@ -1327,6 +1556,8 @@ impl Trainer {
             if let Some(sh) = &result.shard {
                 trace::incr("shard.allgather_calls", sh.allgather_calls as u64);
                 trace::incr("shard.allgather_floats", sh.allgather_floats as u64);
+                trace::incr("shard.overlap_exchanges", sh.overlap_exchanges as u64);
+                trace::incr("shard.stale_applies", sh.stale_applies as u64);
                 trace::incr("shard.stale_fallback_layers", sh.stale_fallback_layers as u64);
                 trace::incr("shard.reassignments", sh.reassignments as u64);
                 trace::incr("shard.rejoin_events", sh.rejoin_events as u64);

@@ -19,7 +19,8 @@ use jorge::jsonio::Json;
 use jorge::models;
 use jorge::optim::memory::{ratio_vs_adam, state_bytes, OptKind};
 use jorge::perfmodel::{
-    project_dist_shampoo_iteration, project_iteration, project_sharded_iteration, GpuModel,
+    project_dist_shampoo_iteration, project_iteration, project_sharded_iteration,
+    project_sharded_iteration_overlapped, GpuModel,
 };
 use jorge::runtime::backend_for;
 use std::collections::BTreeMap;
@@ -54,6 +55,10 @@ fn flag_spec() -> Vec<FlagSpec> {
         flag("metrics-out", "write run-summary metrics JSON (bench-diff compatible)"),
         flag("tolerance", "bench-diff: relative drift threshold (default 0.15)"),
         switch("native", "apply optimizer via native mirrors (workers > 1)"),
+        switch(
+            "precond-overlap",
+            "defer the sharded preconditioner all-gather to the next step (one refresh stale)",
+        ),
         switch("strict", "bench-diff: exit nonzero on drift instead of warning"),
         switch("help", "print help"),
     ]
@@ -145,6 +150,9 @@ fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<()> {
     if args.has("native") {
         cfg.native = true;
     }
+    if args.has("precond-overlap") {
+        cfg.precond_overlap = true;
+    }
     cfg.validate().map_err(|e| anyhow!(e))
 }
 
@@ -201,7 +209,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             .map(|(w, ls)| format!("w{w}:{ls:?}"))
             .collect();
         println!(
-            "shard: workers={} owners=[{}] refreshes={:?} allgathers={} floats={} modeled_comm={:.3}ms stale_fallbacks={} reassignments={} rejoins={} resync_bytes={}",
+            "shard: workers={} owners=[{}] refreshes={:?} allgathers={} floats={} modeled_comm={:.3}ms stale_fallbacks={} reassignments={} rejoins={} resync_bytes={} overlap_exchanges={} stale_applies={}",
             sh.workers,
             owners.join(" "),
             sh.refresh_events,
@@ -212,6 +220,8 @@ fn cmd_train(args: &Args) -> Result<()> {
             sh.reassignments,
             sh.rejoin_events,
             sh.resync_bytes,
+            sh.overlap_exchanges,
+            sh.stale_applies,
         );
     }
     if result.guard.total() > 0 {
@@ -341,6 +351,15 @@ fn cmd_perf_model(_args: &Args) -> Result<()> {
                 format!("{}_sharded", opt.name()),
                 format!("{t:.3}"),
                 format!("{:.2}x", t / sgd),
+            ]);
+            let o = project_sharded_iteration_overlapped(&gpu, &comm, &net, opt, 50, anchor, gpus)
+                .total();
+            table.row(&[
+                net_name.into(),
+                gpus.to_string(),
+                format!("{}_sharded+overlap", opt.name()),
+                format!("{o:.3}"),
+                format!("{:.2}x", o / sgd),
             ]);
         }
     }

@@ -214,8 +214,14 @@ impl Optimizer for Jorge {
 
     fn refresh_layers(&mut self, layers: &[usize], grads: &[Matrix], update_precond: bool) {
         let _scope = trace::scope(Phase::PrecondRefresh);
+        let traced = trace::enabled();
         for &li in layers {
+            let t0 = traced.then(std::time::Instant::now);
             refresh_layer(self.p.eps, &mut self.layers[li], &grads[li], update_precond);
+            if let Some(t0) = t0 {
+                let dt = t0.elapsed().as_secs_f64();
+                trace::add_gauge(&format!("trace.layer.{li}.refresh_s"), dt);
+            }
         }
     }
 
@@ -231,8 +237,14 @@ impl Optimizer for Jorge {
         let _scope = trace::scope(Phase::Apply);
         assert_eq!(params.len(), self.layers.len());
         let p = self.p;
+        let traced = trace::enabled();
         let body = |li: usize, param: &mut Matrix, st: &mut LayerState| {
+            let t0 = traced.then(std::time::Instant::now);
             apply_layer(p, st, param, &grads[li], ctx);
+            if let Some(t0) = t0 {
+                let dt = t0.elapsed().as_secs_f64();
+                trace::add_gauge(&format!("trace.layer.{li}.apply_s"), dt);
+            }
         };
         for_each_layer(params, &mut self.layers, false, body);
     }

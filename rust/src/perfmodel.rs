@@ -246,6 +246,37 @@ pub fn project_sharded_iteration(
     IterProjection { fwd_bwd_s: fwd_bwd_anchor_s, optimizer_s: opt_t, comm_s }
 }
 
+/// Sharded projection with the deferred preconditioner exchange
+/// (`--precond-overlap`): the all-gather of refreshed preconditioners
+/// runs concurrently with the *next* step's forward+backward compute,
+/// so an exchange step costs `max(all_gather_time, fwd_bwd)` instead of
+/// their sum — amortised, only the gather's excess over the compute it
+/// hides behind is charged to `comm_s`. Refresh FLOPs, the apply, and
+/// the gradient ring all-reduce are unchanged (the reduce sits on the
+/// critical path between backward and apply and cannot be hidden).
+pub fn project_sharded_iteration_overlapped(
+    gpu: &GpuModel,
+    comm: &CommCostModel,
+    net: &NetworkInventory,
+    opt: OptKind,
+    precond_every: usize,
+    fwd_bwd_anchor_s: f64,
+    gpus: usize,
+) -> IterProjection {
+    let sync =
+        project_sharded_iteration(gpu, comm, net, opt, precond_every, fwd_bwd_anchor_s, gpus);
+    let every = precond_every.max(1) as f64;
+    let reduce_s = comm.ring_all_reduce_time(4 * net.param_count(), gpus);
+    // per-exchange gather time (sync model amortises it by `every`)
+    let gather_s = (sync.comm_s - reduce_s) * every;
+    let hidden_excess = (gather_s - fwd_bwd_anchor_s).max(0.0);
+    IterProjection {
+        fwd_bwd_s: sync.fwd_bwd_s,
+        optimizer_s: sync.optimizer_s,
+        comm_s: reduce_s + hidden_excess / every,
+    }
+}
+
 /// Modeled one-off cost of readmitting a dropped rank (elastic rejoin):
 /// the leader tree-broadcasts the full training state — params plus the
 /// optimizer's mirror state and preconditioners — to the restored
@@ -262,6 +293,22 @@ pub fn project_rejoin_resync(
 ) -> f64 {
     let state_bytes = 4 * net.param_count() + crate::optim::memory::state_bytes(net, opt, true);
     comm.broadcast_time(state_bytes, gpus)
+}
+
+/// Overlapped variant of [`project_rejoin_resync`]: the state broadcast
+/// runs concurrently with the rejoin step's forward+backward compute, so
+/// the rejoin step costs `max(broadcast, fwd_bwd)` instead of
+/// `fwd_bwd + broadcast`. Returns the modeled wall-clock of that step's
+/// compute+resync portion (compare against `fwd_bwd_anchor_s +
+/// project_rejoin_resync(..)` for the synchronous charge).
+pub fn project_rejoin_resync_overlapped(
+    comm: &CommCostModel,
+    net: &NetworkInventory,
+    opt: OptKind,
+    gpus: usize,
+    fwd_bwd_anchor_s: f64,
+) -> f64 {
+    project_rejoin_resync(comm, net, opt, gpus).max(fwd_bwd_anchor_s)
 }
 
 #[cfg(test)]
@@ -350,6 +397,57 @@ mod tests {
         let sharded = project_sharded_iteration(&g, &c, &net, OptKind::Jorge, 50, 0.085, 16);
         assert!(sharded.optimizer_s < serial.optimizer_s);
         assert!(sharded.comm_s > serial.comm_s);
+    }
+
+    #[test]
+    fn overlapped_exchange_charges_max_not_sum() {
+        let (g, c) = table1_setup();
+        let net = resnet50().blocked(1024);
+        for opt in [OptKind::Jorge, OptKind::Shampoo] {
+            let sync = project_sharded_iteration(&g, &c, &net, opt, 50, 0.085, 16);
+            let ovl = project_sharded_iteration_overlapped(&g, &c, &net, opt, 50, 0.085, 16);
+            // compute terms untouched; only the gather charge shrinks
+            assert_eq!(ovl.fwd_bwd_s, sync.fwd_bwd_s);
+            assert_eq!(ovl.optimizer_s, sync.optimizer_s);
+            assert!(ovl.comm_s <= sync.comm_s, "{} !<= {}", ovl.comm_s, sync.comm_s);
+            assert!(ovl.total() <= sync.total());
+            // the gradient all-reduce stays on the critical path
+            let reduce = c.ring_all_reduce_time(4 * net.param_count(), 16);
+            assert!(ovl.comm_s >= reduce);
+            // the paper-scale gather hides entirely behind an 85 ms
+            // fwd/bwd window, so overlapped comm == bare all-reduce
+            assert!((ovl.comm_s - reduce).abs() < 1e-12, "{} vs {reduce}", ovl.comm_s);
+        }
+    }
+
+    #[test]
+    fn overlapped_exchange_still_pays_gather_excess_when_compute_is_tiny() {
+        let (g, c) = table1_setup();
+        let net = resnet50().blocked(1024);
+        // a (hypothetical) 1 us fwd/bwd window hides almost nothing:
+        // the overlapped charge degrades toward the synchronous sum
+        let sync = project_sharded_iteration(&g, &c, &net, OptKind::Shampoo, 50, 1e-6, 16);
+        let ovl =
+            project_sharded_iteration_overlapped(&g, &c, &net, OptKind::Shampoo, 50, 1e-6, 16);
+        let reduce = c.ring_all_reduce_time(4 * net.param_count(), 16);
+        assert!(ovl.comm_s > reduce, "gather excess must surface: {}", ovl.comm_s);
+        assert!(ovl.comm_s <= sync.comm_s);
+        // max(comm, compute) identity on the exchange step: sum minus
+        // overlapped == hidden portion <= fwd_bwd / every
+        let hidden = sync.comm_s - ovl.comm_s;
+        assert!(hidden <= 1e-6 / 50.0 + 1e-15, "hidden {hidden}");
+    }
+
+    #[test]
+    fn overlapped_rejoin_resync_is_max_of_broadcast_and_compute() {
+        let (_, c) = table1_setup();
+        let net = resnet50().blocked(1024);
+        let sync = project_rejoin_resync(&c, &net, OptKind::Jorge, 16);
+        let ovl = project_rejoin_resync_overlapped(&c, &net, OptKind::Jorge, 16, 0.085);
+        assert_eq!(ovl, sync.max(0.085));
+        assert!(ovl <= 0.085 + sync, "{ovl} !<= fwd_bwd + {sync}");
+        // a long compute window hides the whole broadcast
+        assert_eq!(project_rejoin_resync_overlapped(&c, &net, OptKind::Jorge, 16, 10.0), 10.0);
     }
 
     #[test]

@@ -260,14 +260,119 @@ fn gemm(layout: Layout, a: &Matrix, b: &Matrix, ep: Ep<'_>, allow_threads: bool)
         run_tile(layout, &a.data, lda, &b.data, ldb, cp, ldc, kdim, i0, j0, mi, nj, ep);
     };
     let flops = 2.0 * m as f64 * n as f64 * kdim as f64;
-    if allow_threads && n_tiles > 1 && flops >= PAR_MIN_FLOPS && pool::pool_size() > 1 {
+    let threaded = allow_threads && flops >= PAR_MIN_FLOPS && pool::pool_size() > 1;
+    if threaded && n_tiles > 1 {
         pool::parallel_for(n_tiles, tile);
+    } else if threaded && kdim >= 2 * KC {
+        // single output tile but a flop count worth threading: the 2-D
+        // tile fan-out has nothing to split, so split k instead
+        ksplit_single_tile(layout, &a.data, lda, &b.data, ldb, &mut c, kdim, ep);
     } else {
         for t in 0..n_tiles {
             tile(t);
         }
     }
     c
+}
+
+/// Single-tile k-split for k-heavy shapes (`m, n <= 64`, large k): the
+/// whole `(m, n)` output is one tile, so the 2-D tile fan-out cannot
+/// parallelise. Instead k is partitioned into KC-aligned ranges, each
+/// task accumulates a private `(m, n)` partial, and the partials are
+/// reduced serially in fixed index order — deterministic for a given
+/// pool width regardless of thread timing, but the f32 k-sum is
+/// reassociated relative to the serial loop, so this path is covered by
+/// a tolerance property test (`ksplit_*` below) rather than a bitwise
+/// one. The epilogue runs once, after the reduction.
+#[allow(clippy::too_many_arguments)]
+fn ksplit_single_tile(
+    layout: Layout,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut Matrix,
+    kdim: usize,
+    ep: Ep<'_>,
+) {
+    let (m, n) = (c.rows, c.cols);
+    let kblocks = kdim.div_ceil(KC);
+    let parts = pool::pool_size().min(kblocks);
+    let per_part = kblocks.div_ceil(parts);
+    let mut partials = vec![0.0f32; parts * m * n];
+    let pp = CPtr(partials.as_mut_ptr());
+    pool::parallel_for(parts, |p| {
+        let k_lo = (p * per_part * KC).min(kdim);
+        let k_hi = ((p + 1) * per_part * KC).min(kdim);
+        if k_lo >= k_hi {
+            return;
+        }
+        // this task's private (m, n) accumulator inside `partials`
+        let cpart = CPtr(unsafe { pp.0.add(p * m * n) });
+        match layout {
+            Layout::Nn => PACK_B.with(|bp| {
+                let bp = &mut *bp.borrow_mut();
+                for k0 in (k_lo..k_hi).step_by(KC) {
+                    let kk = KC.min(k_hi - k0);
+                    pack_panel(b, ldb, k0, 0, kk, n, bp);
+                    kernel_axpy(a, lda, k0, bp, cpart, n, 0, 0, m, n, kk);
+                }
+            }),
+            Layout::Tn => PACK_A.with(|ap| {
+                PACK_B.with(|bp| {
+                    let ap = &mut *ap.borrow_mut();
+                    let bp = &mut *bp.borrow_mut();
+                    for k0 in (k_lo..k_hi).step_by(KC) {
+                        let kk = KC.min(k_hi - k0);
+                        pack_panel(b, ldb, k0, 0, kk, n, bp);
+                        ap.resize(m * kk, 0.0);
+                        for k in 0..kk {
+                            let src = &a[(k0 + k) * lda..(k0 + k) * lda + m];
+                            for (i, &v) in src.iter().enumerate() {
+                                ap[i * kk + k] = v;
+                            }
+                        }
+                        kernel_axpy(ap, kk, 0, bp, cpart, n, 0, 0, m, n, kk);
+                    }
+                })
+            }),
+            Layout::Nt => {
+                for i in 0..m {
+                    let arow = &a[i * lda + k_lo..i * lda + k_hi];
+                    let crow = unsafe { cpart.row(i, 0, n, n) };
+                    for (j, cv) in crow.iter_mut().enumerate() {
+                        let brow = &b[j * ldb + k_lo..j * ldb + k_hi];
+                        *cv = dot(arow, brow);
+                    }
+                }
+            }
+        }
+    });
+    // fixed-order reduction: partial p always folds in before p + 1, no
+    // matter which worker produced it
+    for p in 0..parts {
+        let part = &partials[p * m * n..(p + 1) * m * n];
+        for (cv, &pv) in c.data.iter_mut().zip(part) {
+            *cv += pv;
+        }
+    }
+    match ep {
+        Ep::None => {}
+        Ep::Bias(bias) => {
+            for i in 0..m {
+                for (cv, &bv) in c.data[i * n..(i + 1) * n].iter_mut().zip(bias) {
+                    *cv += bv;
+                }
+            }
+        }
+        Ep::BiasRelu(bias) => {
+            for i in 0..m {
+                for (cv, &bv) in c.data[i * n..(i + 1) * n].iter_mut().zip(bias) {
+                    *cv = (*cv + bv).max(0.0);
+                }
+            }
+        }
+    }
 }
 
 /// `A @ B`, threaded over 2-D output tiles when the flop count pays.
@@ -513,6 +618,57 @@ mod tests {
         let st = matmul_st(&a, &b);
         let mt = matmul(&a, &b);
         assert_eq!(st.max_abs_diff(&mt), 0.0, "tile order must be thread-invariant");
+    }
+
+    #[test]
+    fn ksplit_single_tile_matches_naive() {
+        // m, n <= 64 with heavy k: one output tile, threaded via the
+        // k-split path (per-thread partials + fixed-order reduction).
+        // The k-sum is reassociated, so compare against the f64 naive
+        // reference with a sqrt(k)-scaled tolerance, not bitwise.
+        let mut rng = Rng::new(21);
+        for &(m, k, n) in &[(48, 4096, 48), (64, 2000, 64), (1, 8192, 64), (33, 4097, 17)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let got = matmul(&a, &b);
+            let want = naive(&a, &b);
+            let tol = 1e-3 * (k as f32).sqrt();
+            assert!(got.max_abs_diff(&want) < tol, "({m},{k},{n}): {}", got.max_abs_diff(&want));
+        }
+    }
+
+    #[test]
+    fn ksplit_variants_and_epilogue_match_naive() {
+        let mut rng = Rng::new(22);
+        let (m, k, n) = (32, 3000, 40);
+        let tol = 1e-3 * (k as f32).sqrt();
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let want = naive(&a, &b);
+        assert!(matmul_nt(&a, &b.t()).max_abs_diff(&want) < tol, "nt k-split");
+        assert!(matmul_tn(&a.t(), &b).max_abs_diff(&want) < tol, "tn k-split");
+        // the fused epilogue must run once, after the partial reduction
+        let bias = Matrix::randn(n, 1, 1.0, &mut rng);
+        let mut want_relu = want.clone();
+        for i in 0..m {
+            for j in 0..n {
+                want_relu.data[i * n + j] = (want_relu.data[i * n + j] + bias.data[j]).max(0.0);
+            }
+        }
+        assert!(matmul_bias_relu(&a, &b, &bias).max_abs_diff(&want_relu) < tol, "relu k-split");
+    }
+
+    #[test]
+    fn ksplit_is_run_to_run_deterministic() {
+        // partition and reduction order are fixed by pool width, not by
+        // thread timing: repeated calls are bitwise identical
+        let mut rng = Rng::new(23);
+        let a = Matrix::randn(48, 4096, 1.0, &mut rng);
+        let b = Matrix::randn(4096, 48, 1.0, &mut rng);
+        let first = matmul(&a, &b);
+        for _ in 0..3 {
+            assert_eq!(first.max_abs_diff(&matmul(&a, &b)), 0.0);
+        }
     }
 
     #[test]

@@ -207,6 +207,19 @@ pub fn set_gauge(name: &str, v: f64) {
     });
 }
 
+/// Accumulate into a named gauge (running-sum scalar). Used for
+/// per-layer attribution (`trace.layer.<i>.refresh_s` / `.apply_s`),
+/// where many small samples from possibly-concurrent layer fan-outs
+/// fold into one total per run.
+pub fn add_gauge(name: &str, v: f64) {
+    if !enabled() {
+        return;
+    }
+    with_inner(|inner| {
+        *inner.gauges.entry(name.to_string()).or_insert(0.0) += v;
+    });
+}
+
 /// Close out the current step: roll the scratch phase times into the
 /// per-step distributions and return this step's `(phase, seconds)` rows
 /// (phases that did not run are omitted). `None` when tracing is off.
@@ -396,6 +409,21 @@ mod tests {
         assert_eq!(report.gauge("modeled_comm_s"), Some(0.125));
         // drained: a second take is empty
         assert!(take_report().phases.is_empty());
+        set_enabled(false);
+    }
+
+    #[test]
+    fn add_gauge_accumulates_and_respects_enable() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(false);
+        add_gauge("trace.layer.0.refresh_s", 1.0);
+        set_enabled(true);
+        add_gauge("trace.layer.0.refresh_s", 0.25);
+        add_gauge("trace.layer.0.refresh_s", 0.5);
+        add_gauge("trace.layer.1.apply_s", 0.125);
+        let report = take_report();
+        assert_eq!(report.gauge("trace.layer.0.refresh_s"), Some(0.75));
+        assert_eq!(report.gauge("trace.layer.1.apply_s"), Some(0.125));
         set_enabled(false);
     }
 

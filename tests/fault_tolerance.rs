@@ -431,6 +431,10 @@ fn fuzz_random_fault_plans_never_panic() {
         c.steps_per_epoch = 6;
         c.faults = spec.clone();
         c.fault_seed = rng.below(1 << 20);
+        // randomly defer the preconditioner exchange (sharded-only, so
+        // config validation passes): drops and rejoins landing during a
+        // deferred exchange must stay panic-free and typed too
+        c.precond_overlap = opt.ends_with("_sharded") && rng.below(2) == 0;
         let outcome = catch_unwind(AssertUnwindSafe(|| -> Result<Vec<f32>, String> {
             let mut t = Trainer::new(c, backend()).map_err(|e| e.to_string())?;
             let r = t.run().map_err(|e| e.to_string())?;

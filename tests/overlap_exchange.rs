@@ -1,0 +1,279 @@
+//! Deferred preconditioner exchange (`--precond-overlap`) contract tests.
+//!
+//! The overlapped sharded step applies one-refresh-stale preconditioners
+//! and lands the gathered import at the next step boundary (async
+//! distributed Shampoo). These tests pin that trajectory bitwise against
+//! an explicit delayed-import reference loop driven through the same
+//! public protocol (`export/import_preconditioners`) at workers
+//! ∈ {2, 4, 7}, and cover the telemetry + the workers == 1 downgrade.
+
+use jorge::collectives::ring_all_reduce_mean;
+use jorge::config::{ScheduleKind, TrainConfig};
+use jorge::coordinator::Trainer;
+use jorge::data::{for_model, Sharder};
+use jorge::optim::{self, Hyper, OptimizerKind, StepCtx};
+use jorge::rngx::Rng;
+use jorge::runtime::{ExecBackend, HostTensor, Manifest, NativeBackend, Role};
+use jorge::tensor::Matrix;
+use std::sync::Arc;
+
+const EVAL_BATCHES: usize = 4;
+
+fn backend() -> Arc<dyn ExecBackend> {
+    Arc::new(NativeBackend::new())
+}
+
+fn cfg(opt: &str, workers: usize) -> TrainConfig {
+    TrainConfig {
+        model: "mlp".into(),
+        optimizer: opt.parse().unwrap(),
+        epochs: 2,
+        steps_per_epoch: 6,
+        lr: 0.01,
+        weight_decay: 1e-4,
+        schedule: ScheduleKind::Constant,
+        precond_every: 2,
+        seed: 91,
+        workers,
+        dataset_size: 64 * 6 * workers.max(1) * 2,
+        eval_every_epochs: 1000,
+        backend: "native".into(),
+        precond_overlap: true,
+        ..Default::default()
+    }
+}
+
+/// 2-D collapse matching the trainer's native-mirror conversion.
+fn to_matrices(tensors: &[HostTensor]) -> Vec<Matrix> {
+    tensors
+        .iter()
+        .map(|t| {
+            let sh = t.shape();
+            Matrix::from_vec(
+                sh.first().copied().unwrap_or(1),
+                sh.get(1).copied().unwrap_or(1),
+                t.as_f32().unwrap().to_vec(),
+            )
+        })
+        .collect()
+}
+
+/// Explicit delayed-import reference: the data-parallel sharded loop
+/// rebuilt from the public pieces (sharder, grad executable, ring
+/// all-reduce, serial optimizer protocol), with the preconditioner
+/// refresh exported to a pending buffer, the mirror reverted to the
+/// pre-refresh snapshot for this step's apply, and the buffer imported
+/// at the next step boundary — the semantics `--precond-overlap`
+/// promises. Returns (step_losses, final param floats).
+fn delayed_import_reference(c: &TrainConfig) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let eng = backend();
+    let kind: OptimizerKind = c.optimizer;
+    let train_full = eng.load(&Manifest::train_name(&c.model, kind, true)).unwrap();
+    let grad_step = eng.load(&format!("grad_{}", c.model)).unwrap();
+
+    // params + optimizer state init consumes the rng in spec order,
+    // exactly as Trainer::new does
+    let mut rng = Rng::new(c.seed);
+    let mut params: Vec<HostTensor> = Vec::new();
+    for spec in &train_full.spec().inputs {
+        match spec.role {
+            Role::Param => params.push(HostTensor::from_init(spec, &mut rng).unwrap()),
+            Role::State => {
+                let _ = HostTensor::from_init(spec, &mut rng).unwrap();
+            }
+            _ => {}
+        }
+    }
+
+    let shapes: Vec<(usize, usize)> = train_full
+        .spec()
+        .inputs
+        .iter()
+        .filter(|s| s.role == Role::Param)
+        .map(|s| (s.shape[0], s.shape.get(1).copied().unwrap_or(1)))
+        .collect();
+    let mut native = optim::build(kind, &shapes, Hyper::default());
+    let layers: Vec<usize> =
+        (0..native.n_layers()).filter(|&l| native.refresh_flops(l) > 0.0).collect();
+
+    let meta = eng.manifest().models.get(&c.model).unwrap().clone();
+    let total_len = c.dataset_size + EVAL_BATCHES * meta.eval_batch;
+    let dataset = for_model(&c.model, total_len, c.seed ^ 0xDA7A5E7).unwrap();
+    let sharder =
+        Sharder { dataset_len: c.dataset_size, workers: c.workers, seed: c.seed ^ 0x5A4D };
+    let b = meta.batch;
+
+    let spec = grad_step.spec();
+    let xi = spec.input_index(Role::X).unwrap();
+    let x_spec = spec.inputs[xi].clone();
+    let yi = spec.input_index(Role::Y).unwrap();
+    let y_spec = spec.inputs[yi].clone();
+
+    let mut step_losses: Vec<f32> = Vec::new();
+    let mut pending: Option<Vec<f32>> = None;
+    let mut global_step = 0usize;
+    for epoch in 0..c.epochs {
+        let shards = sharder.epoch_shards(epoch);
+        let steps_this_epoch = (shards[0].len() / b).min(c.steps_per_epoch).max(1);
+        for si in 0..steps_this_epoch {
+            let update = global_step % c.precond_every == 0;
+
+            // land the previous update step's deferred import at this
+            // step's boundary
+            if let Some(buf) = pending.take() {
+                let used = native.import_preconditioners(&layers, &buf);
+                assert_eq!(used, buf.len());
+            }
+
+            // per-worker gradients over this step's shard slices
+            let mut grads_per_worker: Vec<Vec<HostTensor>> = Vec::new();
+            let mut losses: Vec<f64> = Vec::new();
+            for sh in &shards {
+                let lo = (si * b) % (sh.len() - b + 1);
+                let batch = dataset.batch(&sh[lo..lo + b]);
+                let x = match x_spec.dtype {
+                    jorge::runtime::Dtype::F32 => {
+                        HostTensor::from_f32(x_spec.shape.clone(), batch.x_f32)
+                    }
+                    jorge::runtime::Dtype::I32 => {
+                        HostTensor::from_i32(x_spec.shape.clone(), batch.x_i32)
+                    }
+                };
+                let y = HostTensor::from_i32(y_spec.shape.clone(), batch.y);
+                let mut inputs: Vec<HostTensor> = params.to_vec();
+                inputs.push(x);
+                inputs.push(y);
+                let mut out = grad_step.run(&inputs).unwrap();
+                let _metric = out.pop().unwrap().scalar();
+                let loss = out.pop().unwrap().scalar();
+                grads_per_worker.push(out);
+                losses.push(loss);
+            }
+
+            // the same ring reduce the trainer runs
+            let mut buffers: Vec<Vec<f32>> = grads_per_worker
+                .iter()
+                .map(|gs| {
+                    let mut flat = Vec::new();
+                    for g in gs {
+                        flat.extend_from_slice(g.as_f32().unwrap());
+                    }
+                    flat
+                })
+                .collect();
+            ring_all_reduce_mean(&mut buffers).unwrap();
+            let mut red: Vec<HostTensor> = Vec::new();
+            let mut off = 0usize;
+            for g in &grads_per_worker[0] {
+                let n = g.len();
+                red.push(HostTensor::from_f32(
+                    g.shape().to_vec(),
+                    buffers[0][off..off + n].to_vec(),
+                ));
+                off += n;
+            }
+
+            // refresh, then defer the exchange: park the refreshed
+            // preconditioners and revert so this apply is one stale
+            let mut mats = to_matrices(&params);
+            let gmats = to_matrices(&red);
+            let stale = update.then(|| native.export_preconditioners(&layers));
+            native.refresh_layers(&layers, &gmats, update);
+            if update {
+                pending = Some(native.export_preconditioners(&layers));
+                let st = stale.unwrap();
+                let used = native.import_preconditioners(&layers, &st);
+                assert_eq!(used, st.len());
+            }
+            native.apply_update(
+                &mut mats,
+                &gmats,
+                StepCtx {
+                    lr: c.lr as f32,
+                    weight_decay: c.weight_decay as f32,
+                    update_precond: false,
+                },
+            );
+            for (p, m) in params.iter_mut().zip(mats) {
+                *p.as_f32_mut().unwrap() = m.data;
+            }
+
+            let n = losses.len() as f64;
+            step_losses.push((losses.iter().sum::<f64>() / n) as f32);
+            global_step += 1;
+        }
+    }
+    let flat: Vec<Vec<f32>> = params.iter().map(|p| p.as_f32().unwrap().to_vec()).collect();
+    (step_losses, flat)
+}
+
+#[test]
+fn overlap_matches_delayed_import_reference() {
+    // --precond-overlap must be *exactly* delayed import, not merely
+    // close: the trainer's trajectory is pinned bitwise against the
+    // reference loop at every worker count, for both sharded optimizers
+    let eng = backend();
+    for opt in ["jorge_sharded", "shampoo_sharded"] {
+        for workers in [2usize, 4, 7] {
+            let c = cfg(opt, workers);
+            let (ref_losses, ref_params) = delayed_import_reference(&c);
+            let mut trainer = Trainer::new(c, eng.clone()).unwrap();
+            let r = trainer.run().unwrap();
+            assert_eq!(
+                r.step_losses, ref_losses,
+                "{opt} x{workers} diverged from the delayed-import reference"
+            );
+            assert_eq!(trainer.params.len(), ref_params.len());
+            for (i, (p, q)) in trainer.params.iter().zip(&ref_params).enumerate() {
+                let pf = p.as_f32().unwrap();
+                assert_eq!(pf.len(), q.len());
+                for (a, b) in pf.iter().zip(q) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{opt} x{workers} param {i} diverged bitwise"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn overlap_actually_changes_the_trajectory() {
+    // sanity: the stale apply is observable — an overlap run must not be
+    // bit-identical to the synchronous exchange
+    let eng = backend();
+    let overlap = Trainer::new(cfg("jorge_sharded", 2), eng.clone()).unwrap().run().unwrap();
+    let mut sync_cfg = cfg("jorge_sharded", 2);
+    sync_cfg.precond_overlap = false;
+    let sync = Trainer::new(sync_cfg, eng).unwrap().run().unwrap();
+    assert_ne!(
+        overlap.step_losses, sync.step_losses,
+        "overlap run was bit-identical to the synchronous exchange"
+    );
+}
+
+#[test]
+fn overlap_reports_exchange_telemetry() {
+    let eng = backend();
+    let r = Trainer::new(cfg("jorge_sharded", 4), eng).unwrap().run().unwrap();
+    let sh = r.shard.expect("sharded run must produce a ShardReport");
+    // 12 steps at precond_every = 2 => 6 update steps, each one a
+    // deferred gather applied one refresh stale
+    let update_steps = (0..r.step_losses.len()).filter(|s| s % 2 == 0).count();
+    assert_eq!(sh.overlap_exchanges, update_steps);
+    assert_eq!(sh.stale_applies, update_steps);
+    assert_eq!(sh.allgather_calls, update_steps, "overlap must not change the gather count");
+    assert!(sh.allgather_floats > 0);
+}
+
+#[test]
+fn overlap_downgrades_with_a_single_worker() {
+    // nothing to defer on one worker: the trainer notes the downgrade
+    // and runs the serial path, with no sharding telemetry
+    let eng = backend();
+    let r = Trainer::new(cfg("jorge_sharded", 1), eng).unwrap().run().unwrap();
+    assert!(r.shard.is_none());
+    assert_eq!(r.optimizer, "jorge");
+}
